@@ -1,0 +1,104 @@
+"""AOT entry point: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos and NOT
+``.serialize()`` — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per dataset structure we emit:
+
+  artifacts/<name>.structure.json   — layered structure shared with rust
+  artifacts/<name>.counts.hlo.txt   — (X:(B,nv), row_mask:(B,)) -> counts
+  artifacts/<name>.eval.hlo.txt     — (X:(B,nv), marg:(nv,), params:(P,)) -> logS
+  artifacts/manifest.json           — batch size, shapes, file list
+
+``make artifacts`` is a no-op when inputs are unchanged (mtime-based, via
+the Makefile); python never runs on the rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, structures
+
+BATCH = 512
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large constants as
+    # `constant({...})`, which xla_extension 0.5.1's text parser silently
+    # reads back as zeros — the baked-in structure matrices would vanish.
+    # Print a short-parsable form with large constants materialized.
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.get_hlo_module().to_string(opts)
+
+
+def emit(name: str, outdir: str, batch: int = BATCH) -> dict:
+    st = structures.build(name)
+    structures.save(st, os.path.join(outdir, f"{name}.structure.json"))
+
+    nv = st["num_vars"]
+    counts_fn = model.build_counts_fn(st, batch)
+    xs = jax.ShapeDtypeStruct((batch, nv), jnp.float32)
+    ms = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    low = jax.jit(counts_fn).lower(xs, ms)
+    counts_path = os.path.join(outdir, f"{name}.counts.hlo.txt")
+    with open(counts_path, "w") as f:
+        f.write(to_hlo_text(low))
+
+    eval_fn = model.build_logeval_fn(st, batch)
+    mg = jax.ShapeDtypeStruct((nv,), jnp.float32)
+    ps = jax.ShapeDtypeStruct((st["num_params"],), jnp.float32)
+    low = jax.jit(eval_fn).lower(xs, mg, ps)
+    eval_path = os.path.join(outdir, f"{name}.eval.hlo.txt")
+    with open(eval_path, "w") as f:
+        f.write(to_hlo_text(low))
+
+    return dict(
+        name=name,
+        batch=batch,
+        num_vars=nv,
+        num_params=st["num_params"],
+        counts_out=st["total_nodes"] + st["layer_widths"][0],
+        structure=f"{name}.structure.json",
+        counts_hlo=f"{name}.counts.hlo.txt",
+        eval_hlo=f"{name}.eval.hlo.txt",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--datasets", default="toy,nltcs,jester,baudio,bnetflix")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    args = ap.parse_args()
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"batch": args.batch, "datasets": {}}
+    for name in args.datasets.split(","):
+        name = name.strip()
+        info = emit(name, outdir, args.batch)
+        manifest["datasets"][name] = info
+        print(f"emitted {name}: params={info['num_params']} "
+              f"counts_out={info['counts_out']}")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

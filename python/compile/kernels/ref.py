@@ -1,0 +1,120 @@
+"""Pure-jnp / numpy oracle for the Pallas kernels and the counts pipeline.
+
+This is the CORE correctness signal for Layer 1: `python/tests/test_kernel.py`
+checks the Pallas kernels against these functions with hypothesis-driven
+shape sweeps, and `test_model.py` checks the whole counts pipeline against an
+independent per-instance recursive evaluator built from the structure JSON
+(COO edge lists — shares no code with the dense-matrix path under test).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import spn_layer as K
+
+
+def layer_apply_ref(x, mt, deg, gate, mode: int):
+    y = jnp.dot(x.astype(jnp.float32), mt.astype(jnp.float32))
+    if mode == K.MODE_OR:
+        y = (y > 0.5).astype(jnp.float32)
+    elif mode == K.MODE_AND:
+        y = (y > deg[None, :] - 0.5).astype(jnp.float32)
+    elif mode == K.MODE_GATE:
+        y = y * gate
+    return y
+
+
+def masked_count_ref(a, row_mask):
+    return jnp.sum(a * row_mask[:, None], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Independent recursive oracle over the structure JSON (numpy, per instance).
+# ---------------------------------------------------------------------------
+
+def counts_recursive(st: dict, data: np.ndarray) -> np.ndarray:
+    """Return concat(act counts per node [leaves, layers...], x1 counts)."""
+    w0 = st["layer_widths"][0]
+    total = st["total_nodes"]
+    leaf_var = np.asarray(st["leaf_var"])
+    leaf_claim = np.asarray(st["leaf_claim"])
+
+    cnt = np.zeros(total + w0, dtype=np.float64)
+    for row in data:
+        # bottom-up positivity per layer
+        pos_leaf = np.where(leaf_claim < 0, 1.0, (row[leaf_var] == leaf_claim))
+        pos_layers = [pos_leaf]
+        for li, layer in enumerate(st["layers"]):
+            prev = pos_layers[-1] if li > 0 else np.zeros(0)
+            inp = np.concatenate([prev, pos_leaf]) if li > 0 else pos_leaf
+            if layer["kind"] == "product":
+                deg = np.zeros(layer["width"])
+                acc = np.zeros(layer["width"])
+                for r, c in zip(layer["rows"], layer["cols"]):
+                    deg[r] += 1
+                    acc[r] += inp[c]
+                out = (acc >= deg - 0.5).astype(float)
+            else:
+                out = np.zeros(layer["width"])
+                for r, c in zip(layer["rows"], layer["cols"]):
+                    out[r] = max(out[r], inp[c])
+            pos_layers.append(out)
+
+        # top-down activation
+        act_layers = [np.zeros(w) for w in st["layer_widths"]]
+        act_leaf = np.zeros(w0)
+        L = len(st["layers"])
+        act_layers[L] = pos_layers[L].copy()     # root of the tree: act = pos
+        for li in range(L - 1, -1, -1):
+            layer = st["layers"][li]
+            prev_w = layer["in_width"] - w0
+            a_out = act_layers[li + 1]
+            for r, c in zip(layer["rows"], layer["cols"]):
+                down = a_out[r]
+                if c < prev_w:
+                    v = down * pos_layers[li][c]
+                    act_layers[li][c] = max(act_layers[li][c], v)
+                else:
+                    lf = c - prev_w
+                    act_leaf[lf] = max(act_leaf[lf], down * pos_leaf[lf])
+
+        flat = np.concatenate([act_leaf] + [act_layers[i + 1] for i in range(L)])
+        cnt[:total] += flat
+        cnt[total:] += act_leaf * row[leaf_var]
+    return cnt
+
+
+def logeval_recursive(st: dict, data: np.ndarray, params: np.ndarray,
+                      marg: np.ndarray) -> np.ndarray:
+    """Per-instance log S(x) with Bernoulli leaves; marg[v]=1 marginalizes v."""
+    leaf_var = np.asarray(st["leaf_var"])
+    nse = st["num_sum_edges"]
+    out = np.zeros(len(data))
+    for bi, row in enumerate(data):
+        theta = params[nse:]
+        x = row[leaf_var]
+        m = marg[leaf_var].astype(bool)
+        lp = np.where(x > 0.5, np.log(np.maximum(theta, 1e-30)),
+                      np.log(np.maximum(1.0 - theta, 1e-30)))
+        leaf_ll = np.where(m, 0.0, lp)
+        vals = [leaf_ll]
+        for li, layer in enumerate(st["layers"]):
+            prev = vals[-1] if li > 0 else np.zeros(0)
+            inp = np.concatenate([prev, leaf_ll]) if li > 0 else leaf_ll
+            if layer["kind"] == "product":
+                o = np.zeros(layer["width"])
+                for r, c in zip(layer["rows"], layer["cols"]):
+                    o[r] += inp[c]
+            else:
+                acc = [[] for _ in range(layer["width"])]
+                for r, c, p in zip(layer["rows"], layer["cols"], layer["param"]):
+                    acc[r].append(np.log(max(params[p], 1e-30)) + inp[c])
+                o = np.zeros(layer["width"])
+                for r in range(layer["width"]):
+                    mx = max(acc[r])
+                    o[r] = mx + np.log(sum(np.exp(np.array(acc[r]) - mx)))
+            vals.append(o)
+        out[bi] = vals[-1][0]
+    return out

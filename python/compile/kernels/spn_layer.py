@@ -1,0 +1,123 @@
+"""Layer-1 Pallas kernels: one SPN layer as a masked dense matmul + epilogue.
+
+The per-party training hot path (computing the selective activation counts
+n_ij over a data shard, §3.1 of the paper) is reformulated from SPFlow's
+per-node graph walk into *layered dense matmuls*:
+
+  bottom-up positivity   pos_out = OR / AND (M @ pos_in)
+  top-down activation    act_in  = (Mᵀ @ act_out) ⊙ pos_in
+
+Every step is `Y = X @ Mᵀ` over a `(batch, width)` tile followed by a cheap
+elementwise epilogue, which is exactly what the MXU wants.  On TPU, X tiles
+stream HBM→VMEM along the batch axis via the BlockSpec grid while M (a few
+hundred KB at most for Table-1 structures) stays resident in VMEM; see
+DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf for the footprint
+and utilization estimates.
+
+All kernels are lowered with interpret=True: the CPU PJRT plugin used by the
+rust runtime cannot execute Mosaic custom-calls (see /opt/xla-example
+README), so the interpret path is both the correctness oracle target and
+what ships in the HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Epilogue modes.
+MODE_NONE = 0        # plain matmul
+MODE_OR = 1          # y > 0.5          (sum-node positivity: any child positive)
+MODE_AND = 2         # y > rowdeg - 0.5 (product-node positivity: all children)
+MODE_GATE = 3        # y * gate         (top-down activation masking)
+
+_INTERPRET = True    # Mosaic lowering is compile-only on this image.
+
+
+def _layer_kernel(x_ref, m_ref, deg_ref, gate_ref, o_ref, *, mode: int):
+    """One (batch_tile, in_w) x (in_w, out_w) tile."""
+    x = x_ref[...]
+    m = m_ref[...]
+    y = jnp.dot(x, m, preferred_element_type=jnp.float32)
+    if mode == MODE_OR:
+        y = (y > 0.5).astype(jnp.float32)
+    elif mode == MODE_AND:
+        y = (y > deg_ref[...][None, :] - 0.5).astype(jnp.float32)
+    elif mode == MODE_GATE:
+        y = y * gate_ref[...]
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_b"))
+def layer_apply(x: jax.Array, mt: jax.Array, deg: jax.Array,
+                gate: jax.Array, mode: int, block_b: int = 128) -> jax.Array:
+    """Apply one SPN layer.
+
+    x    : (B, in_w)  activations / positivities entering the layer
+    mt   : (in_w, out_w)  transposed adjacency or weight matrix
+    deg  : (out_w,)   row degrees (only used by MODE_AND)
+    gate : (B, out_w) positivity gate (only used by MODE_GATE)
+    """
+    b, in_w = x.shape
+    out_w = mt.shape[1]
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_layer_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, in_w), lambda i: (i, 0)),
+            pl.BlockSpec((in_w, out_w), lambda i: (0, 0)),
+            pl.BlockSpec((out_w,), lambda i: (0,)),
+            pl.BlockSpec((block_b, out_w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, out_w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, out_w), jnp.float32),
+        interpret=_INTERPRET,
+    )(x, mt, deg, gate)
+
+
+def _masked_count_kernel(a_ref, w_ref, o_ref):
+    """Column-sum of a ⊙ w (row weights) accumulated across the batch grid."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    w = w_ref[...]
+    o_ref[...] += jnp.sum(a * w[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def masked_count(a: jax.Array, row_mask: jax.Array, block_b: int = 128) -> jax.Array:
+    """sum_batch(row_mask[b] * a[b, j]) — the count reduction."""
+    b, w = a.shape
+    assert b % block_b == 0
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _masked_count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((w,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.float32),
+        interpret=_INTERPRET,
+    )(a, row_mask)
+
+
+def vmem_footprint_bytes(batch_tile: int, in_w: int, out_w: int) -> int:
+    """Analytic VMEM footprint of one layer_apply tile (f32).
+
+    Used by the §Perf notes: X tile + M + deg + gate + Y tile, double-buffered
+    on the streaming (batch) operands.
+    """
+    stream = (batch_tile * in_w + batch_tile * out_w + batch_tile * out_w) * 4
+    resident = (in_w * out_w + out_w) * 4
+    return 2 * stream + resident

@@ -1,0 +1,204 @@
+"""Layer-2 JAX model: the per-party local computation over a data shard.
+
+Two jittable graphs are built from a structure dict (see structures.py):
+
+* ``counts_fn``  — the training-side hot path.  Bottom-up positivity and
+  top-down activation over the layered SPN (both passes call the Layer-1
+  Pallas kernel per layer), then masked count reductions.  Output is the
+  single vector ``concat(act-counts over [leaves, layer1..layer2K],
+  x1-counts over leaves)`` that the rust coordinator slices into the
+  per-parameter numerators/denominators of Eq. (2)/(3).
+
+* ``logeval_fn`` — the inference oracle: batched log S(x) with Bernoulli
+  leaves, weights as a runtime input so rust can feed privately learned
+  parameters.  Marginalization mask per variable supports the paper's §4
+  marginal queries Pr(x|e) = S(xe)/S(e).
+
+Widths are padded to multiples of 8 inside this module only; the structure
+JSON keeps logical widths and the padded outputs are sliced back before the
+count reduction, so artifact outputs are logical-width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import spn_layer as K
+from . import structures
+
+
+def _pad8(n: int) -> int:
+    return max(8, (n + 7) // 8 * 8)
+
+
+class LayeredSpn:
+    """Dense padded matrices + metadata derived from a structure dict."""
+
+    def __init__(self, st: dict):
+        self.st = st
+        self.w0 = st["layer_widths"][0]
+        self.w0p = _pad8(self.w0)
+        self.nv = st["num_vars"]
+        self.leaf_var = np.asarray(st["leaf_var"], dtype=np.int32)
+        self.leaf_claim = np.asarray(st["leaf_claim"], dtype=np.float32)
+        self.widths = st["layer_widths"][1:]
+        self.padded = [_pad8(w) for w in self.widths]
+
+        self.mats = []       # (out_p, in_p) adjacency, in = concat(prev, leaves)
+        self.degs = []       # (out_p,) row degrees
+        self.kinds = []
+        for li, layer in enumerate(st["layers"]):
+            prev_w = layer["in_width"] - self.w0
+            prev_p = self.padded[li - 1] if li > 0 else 0
+            in_p = prev_p + self.w0p
+            out_p = self.padded[li]
+            m = np.zeros((out_p, in_p), dtype=np.float32)
+            for r, c in zip(layer["rows"], layer["cols"]):
+                cc = c if c < prev_w else prev_p + (c - prev_w)
+                m[r, cc] = 1.0
+            deg = m.sum(axis=1).astype(np.float32)
+            # padded product rows must not fire MODE_AND with deg 0
+            if layer["kind"] == "product":
+                deg[layer["width"]:] = 1e9
+            self.mats.append(m)
+            self.degs.append(deg)
+            self.kinds.append(layer["kind"])
+
+    # -- shared leaf preparation ---------------------------------------------
+    def leaf_pos(self, x):
+        """(B, w0p) positivity of leaves: gate claims or constant 1."""
+        xl = x[:, self.leaf_var]                                  # (B, w0)
+        claim = jnp.asarray(self.leaf_claim)
+        pos = jnp.where(claim < 0.0, 1.0,
+                        (jnp.abs(xl - claim) < 0.5).astype(jnp.float32))
+        return jnp.pad(pos, ((0, 0), (0, self.w0p - self.w0))), xl
+
+
+def build_counts_fn(st: dict, batch: int, block_b: int = 512):
+    """Jittable (X:(B,nv) f32, row_mask:(B,) f32) -> counts:(total+w0,) f32.
+
+    block_b = 512 (single grid step per 512-row chunk) is the outcome of the
+    §Perf L1/L2 block sweep: 1.8x faster than 128 on the XLA CPU backend and
+    still within the 16 MiB VMEM budget on TPU for Table-1 sized layers
+    (see kernels.spn_layer.vmem_footprint_bytes and EXPERIMENTS.md §Perf).
+    """
+    block_b = min(block_b, batch)
+    assert batch % block_b == 0, (batch, block_b)
+    sp = LayeredSpn(st)
+    L = len(sp.mats)
+    mats_t = [jnp.asarray(m.T) for m in sp.mats]     # (in_p, out_p)
+    mats = [jnp.asarray(m) for m in sp.mats]         # (out_p, in_p)
+    degs = [jnp.asarray(d) for d in sp.degs]
+    zero_gate = [jnp.zeros((batch, m.shape[1]), jnp.float32) for m in mats_t]
+
+    def fn(x, row_mask):
+        pos_leaf, xl = sp.leaf_pos(x)
+        # ---- bottom-up positivity -----------------------------------------
+        pos = [pos_leaf]
+        for li in range(L):
+            if li == 0:
+                inp = pos_leaf
+            else:
+                inp = jnp.concatenate([pos[li], pos_leaf], axis=1)
+            mode = K.MODE_AND if sp.kinds[li] == "product" else K.MODE_OR
+            pos.append(K.layer_apply(inp, mats_t[li], degs[li],
+                                     zero_gate[li], mode, block_b))
+        # ---- top-down activation -------------------------------------------
+        act = [None] * (L + 1)
+        act[L] = pos[L]                                   # root act = pos
+        act_leaf = jnp.zeros((batch, sp.w0p), jnp.float32)
+        dummy_deg = [jnp.zeros((m.shape[1],), jnp.float32) for m in mats]
+        for li in range(L - 1, -1, -1):
+            if li > 0:
+                gate = jnp.concatenate([pos[li], pos_leaf], axis=1)
+            else:
+                gate = pos_leaf
+            contrib = K.layer_apply(act[li + 1], mats[li], dummy_deg[li],
+                                    gate, K.MODE_GATE, block_b)
+            prev_p = sp.padded[li - 1] if li > 0 else 0
+            if li > 0:
+                act[li] = contrib[:, :prev_p]
+            act_leaf = act_leaf + contrib[:, prev_p:]
+        # ---- count reductions -----------------------------------------------
+        parts = [K.masked_count(act_leaf, row_mask, block_b)[: sp.w0]]
+        for li in range(L):
+            parts.append(K.masked_count(act[li + 1], row_mask, block_b)[: sp.widths[li]])
+        x1 = K.masked_count(act_leaf[:, : sp.w0] * xl, row_mask, block_b)[: sp.w0]
+        return (jnp.concatenate(parts + [x1]),)
+
+    return fn
+
+
+def build_logeval_fn(st: dict, batch: int):
+    """Jittable (X:(B,nv), marg:(nv,), params:(P,)) -> (logS:(B,),)."""
+    sp = LayeredSpn(st)
+    L = len(sp.mats)
+    nse = st["num_sum_edges"]
+    NEG = -1e30
+
+    # per-sum-layer COO, in padded input coordinates
+    layer_coo = []
+    for li, layer in enumerate(st["layers"]):
+        prev_w = layer["in_width"] - sp.w0
+        prev_p = sp.padded[li - 1] if li > 0 else 0
+        rows = np.asarray(layer["rows"], dtype=np.int32)
+        cols = np.asarray([c if c < prev_w else prev_p + (c - prev_w)
+                           for c in layer["cols"]], dtype=np.int32)
+        pids = np.asarray(layer["param"], dtype=np.int32)
+        layer_coo.append((rows, cols, pids, layer["width"]))
+
+    def fn(x, marg, params):
+        xl = x[:, sp.leaf_var]                              # (B, w0)
+        ml = marg[sp.leaf_var] > 0.5                        # (w0,)
+        theta = jnp.clip(params[nse:], 1e-9, 1.0 - 1e-9)
+        lp = jnp.where(xl > 0.5, jnp.log(theta)[None, :],
+                       jnp.log1p(-theta)[None, :])
+        leaf_ll = jnp.where(ml[None, :], 0.0, lp)           # (B, w0)
+        leaf_p = jnp.pad(leaf_ll, ((0, 0), (0, sp.w0p - sp.w0)),
+                         constant_values=0.0)
+        vals = [leaf_p]
+        for li in range(L):
+            rows, cols, pids, width = layer_coo[li]
+            if li == 0:
+                inp = leaf_p
+            else:
+                inp = jnp.concatenate([vals[li], leaf_p], axis=1)
+            if sp.kinds[li] == "product":
+                # log-product: masked matmul (padded rows yield 0)
+                o = inp @ jnp.asarray(sp.mats[li].T)
+            else:
+                # logsumexp over children with edge weights, via segment ops
+                contrib = inp[:, cols] + jnp.log(
+                    jnp.clip(params[pids], 1e-30, None))[None, :]  # (B, E)
+                # max per row for stability
+                mx = jax.ops.segment_max(contrib.T, rows,
+                                         num_segments=sp.padded[li])   # (W,B)
+                mx = jnp.maximum(mx, NEG)          # empty (padded) rows: finite
+                se = jax.ops.segment_sum(
+                    jnp.exp(contrib.T - mx[rows]), rows,
+                    num_segments=sp.padded[li])
+                o = jnp.maximum((mx + jnp.log(jnp.maximum(se, 1e-300))).T, NEG)
+            vals.append(o)
+        return (vals[-1][:, 0],)
+
+    return fn
+
+
+def initial_params(st: dict, seed: int = 0) -> np.ndarray:
+    """Plausible ground-truth parameters for synthetic data generation."""
+    rng = np.random.default_rng(seed)
+    p = np.zeros(st["num_params"], dtype=np.float64)
+    for g in st["sum_groups"]:
+        w = rng.dirichlet(np.ones(len(g)) * 2.0)
+        p[g] = w
+    nse = st["num_sum_edges"]
+    claims = np.asarray(st["leaf_claim"])
+    theta = rng.uniform(0.15, 0.85, size=len(claims))
+    # gate leaves: near-degenerate Bernoullis consistent with their claim
+    theta = np.where(claims == 1, 0.95, np.where(claims == 0, 0.05, theta))
+    p[nse:] = theta
+    return p

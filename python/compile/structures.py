@@ -1,0 +1,399 @@
+"""Deterministic selective-SPN structure generator.
+
+The paper (§5.3, Table 1) learns SPN structures with SPFlow from four DEBD
+datasets and then *fixes* them as the public, agreed architecture whose sum
+weights (and Bernoulli leaf parameters) are learned privately.  We do not
+have SPFlow/DEBD in this environment (see DESIGN.md substitution table), so
+this module generates structures that
+
+  * are complete, decomposable and *selective* (split-variable determinism:
+    every sum node splits on one or two variables; each child product node
+    carries "gate" Bernoulli leaves that claim a value pattern of the split
+    variables, so at most one child of each sum has positive contribution
+    for any complete instance — exactly the Peharz-style selectivity the
+    paper's closed-form Eq. (2) requires), and
+
+  * reproduce Table 1's statistics (sum / product / leaf counts, params,
+    edges, layers) *exactly* for all four datasets — the recipes below were
+    calibrated analytically, and `build()` asserts the match.
+
+The structure is emitted in a layered dense form shared with the rust
+coordinator (artifacts/<name>.structure.json):
+
+  layer 0           : leaves (Bernoulli; `claim` in {-1,0,1} marks gates)
+  layer l = 1..2K   : alternating product (odd) / sum (even) layers; the
+                      *input* of layer l is concat(layer l-1 outputs, leaves)
+                      so terminal leaves hanging off high products need no
+                      pass-through chains.
+  root              : the single node of layer 2K.
+
+Counting semantics (what the AOT'd counts artifact computes per party):
+  pos  (bottom-up) : leaf gate match / product AND / sum OR
+  act  (top-down)  : act(root)=1, act(child) = act(parent) AND pos(child)
+  n for sum edge (i -> product j): #instances with act(j)  (den: act(i))
+  n for leaf Bernoulli theta:      #instances with act(leaf) AND x_v = 1
+                                    (den: act(leaf))
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# ----------------------------------------------------------------------------
+# Recipes calibrated to Table 1 of the paper.
+#
+# levels[0] is the root sum: (scope_size, arity).  levels[i] lists the sums of
+# level i+1 as (scope_size, arity); they are placed greedily on the branches
+# (child products) of the previous level's sums.  arity 2 splits on one
+# variable (children claim x_s=0 / x_s=1); arity 3 splits on two variables
+# (children claim s=0 / s=1,t=0 / s=1,t=1).
+# ----------------------------------------------------------------------------
+RECIPES: dict[str, dict] = {
+    "nltcs": dict(
+        num_vars=16,
+        rows=16181,
+        levels=[
+            [(16, 2)],
+            [(5, 2), (5, 2)],
+            [(4, 2)] * 4,
+            [(3, 2)] * 4 + [(2, 2)] * 2,
+        ],
+    ),
+    "jester": dict(
+        num_vars=100,
+        rows=9000,
+        levels=[
+            [(100, 2)],
+            [(3, 2)] * 7 + [(2, 2)] * 2,
+        ],
+    ),
+    "baudio": dict(
+        num_vars=100,
+        rows=15000,
+        levels=[
+            [(100, 2)],
+            [(6, 3), (6, 3), (10, 2), (12, 2)],
+            [(3, 2)] * 12,
+        ],
+    ),
+    "bnetflix": dict(
+        num_vars=100,
+        rows=15000,
+        levels=[
+            [(100, 2)],
+            [(6, 2)] * 6,
+            [(2, 2)] * 9 + [(1, 2)] * 11,
+        ],
+    ),
+    # Small extra structure used by tests / the quickstart path.
+    "toy": dict(
+        num_vars=4,
+        rows=512,
+        levels=[
+            [(4, 2)],
+            [(2, 2), (2, 2)],
+        ],
+    ),
+}
+
+# Table 1 of the paper — used as a hard assertion for the four DEBD names.
+PAPER_TABLE1 = {
+    "nltcs": dict(sum=13, product=26, leaf=74, params=100, edges=112, layers=9),
+    "jester": dict(sum=10, product=20, leaf=225, params=245, edges=254, layers=5),
+    "baudio": dict(sum=17, product=36, leaf=282, params=318, edges=334, layers=7),
+    "bnetflix": dict(sum=27, product=54, leaf=265, params=319, edges=345, layers=7),
+}
+
+
+@dataclass
+class _Sum:
+    level: int
+    scope: list[int]
+    arity: int
+    children: list["_Prod"] = field(default_factory=list)
+    layer_pos: int = -1
+
+
+@dataclass
+class _Prod:
+    level: int
+    gates: list[tuple[int, int]]            # (var, claimed value)
+    rest: list[int]                         # scope minus split vars
+    child_sums: list[_Sum] = field(default_factory=list)
+    terminal: list[int] = field(default_factory=list)   # vars -> Bernoulli leaves
+    layer_pos: int = -1
+
+
+def _split_patterns(scope: list[int], arity: int) -> tuple[list[list[tuple[int, int]]], list[int]]:
+    """Gate patterns for an arity-way split and the remaining scope."""
+    if arity == 2:
+        s = scope[0]
+        return [[(s, 0)], [(s, 1)]], scope[1:]
+    if arity == 3:
+        if len(scope) < 2:
+            raise ValueError("arity-3 split needs scope >= 2")
+        s, t = scope[0], scope[1]
+        return [[(s, 0)], [(s, 1), (t, 0)], [(s, 1), (t, 1)]], scope[2:]
+    raise ValueError(f"unsupported arity {arity}")
+
+
+def _build_tree(name: str, cfg: dict, seed: int) -> _Sum:
+    rng = np.random.default_rng(seed)
+    nv = cfg["num_vars"]
+    perm = list(rng.permutation(nv))
+    levels = cfg["levels"]
+
+    (root_scope_sz, root_arity) = levels[0][0]
+    assert root_scope_sz == nv
+    root = _Sum(level=1, scope=perm, arity=root_arity)
+    frontier = [root]
+
+    for li, sums_spec in enumerate(levels[1:], start=2):
+        # Materialize the branches (product children) of the previous level.
+        branches: list[_Prod] = []
+        for s in frontier:
+            patterns, rest = _split_patterns(s.scope, s.arity)
+            for pat in patterns:
+                # arity-3 children 1/2 lose two vars; child 0 keeps the
+                # second split var in its rest scope (completeness).
+                extra = [v for v, _ in pat[1:]] if False else []
+                p_rest = list(rest) + extra
+                if s.arity == 3 and len(pat) == 1:
+                    # child 0 of a 3-way split claims only s=0; variable t is
+                    # not consumed on this branch and stays in scope.
+                    p_rest = [s.scope[1]] + list(rest)
+                p = _Prod(level=s.level, gates=pat, rest=p_rest)
+                s.children.append(p)
+                branches.append(p)
+
+        # Greedy placement of this level's sums on the branches.
+        specs = sorted(sums_spec, key=lambda t: -t[0])
+        caps = [len(b.rest) for b in branches]
+        placed: list[list[tuple[int, int]]] = [[] for _ in branches]
+        for (sz, ar) in specs:
+            order = sorted(range(len(branches)), key=lambda i: -(caps[i]))
+            for i in order:
+                if caps[i] >= sz:
+                    placed[i].append((sz, ar))
+                    caps[i] -= sz
+                    break
+            else:
+                raise ValueError(f"{name}: cannot place sum of scope {sz} at level {li}")
+
+        new_frontier: list[_Sum] = []
+        for b, specs_here in zip(branches, placed):
+            rest = list(b.rest)
+            for (sz, ar) in specs_here:
+                sub_scope, rest = rest[:sz], rest[sz:]
+                child = _Sum(level=li, scope=sub_scope, arity=ar)
+                b.child_sums.append(child)
+                new_frontier.append(child)
+            b.terminal = rest
+        frontier = new_frontier
+
+    # The deepest level's branches keep their whole rest as terminal leaves.
+    for s in frontier:
+        patterns, rest = _split_patterns(s.scope, s.arity)
+        for pat in patterns:
+            p_rest = list(rest)
+            if s.arity == 3 and len(pat) == 1:
+                p_rest = [s.scope[1]] + list(rest)
+            p = _Prod(level=s.level, gates=pat, rest=p_rest, terminal=list(p_rest))
+            s.children.append(p)
+    return root
+
+
+def _collect(root: _Sum) -> tuple[list[_Sum], list[_Prod]]:
+    sums, prods = [], []
+    stack = [root]
+    while stack:
+        s = stack.pop()
+        sums.append(s)
+        for p in s.children:
+            prods.append(p)
+            stack.extend(p.child_sums)
+    return sums, prods
+
+
+def build(name: str, seed: int = 7) -> dict:
+    """Build the structure dict (JSON-serializable) for a dataset name."""
+    cfg = RECIPES[name]
+    root = _build_tree(name, cfg, seed)
+    sums, prods = _collect(root)
+    num_levels = max(s.level for s in sums)
+    num_layers = 2 * num_levels + 1        # paper counts the leaf layer
+
+    # ---- leaves -------------------------------------------------------------
+    # Each product owns its gate leaves and terminal Bernoulli leaves.
+    leaf_var: list[int] = []
+    leaf_claim: list[int] = []
+
+    def new_leaf(var: int, claim: int) -> int:
+        leaf_var.append(var)
+        leaf_claim.append(claim)
+        return len(leaf_var) - 1
+
+    prod_leaf_children: dict[int, list[int]] = {}
+    for pi, p in enumerate(prods):
+        kids = [new_leaf(v, c) for (v, c) in p.gates]
+        kids += [new_leaf(v, -1) for v in p.terminal]
+        prod_leaf_children[pi] = kids
+    w0 = len(leaf_var)
+
+    # ---- layer assignment ---------------------------------------------------
+    # sums of level i sit at layer 2*(K-i)+2, their products at 2*(K-i)+1.
+    K = num_levels
+    layers: list[dict] = []
+    sum_ids = {id(s): i for i, s in enumerate(sums)}
+    prod_ids = {id(p): i for i, p in enumerate(prods)}
+
+    by_layer_sums: dict[int, list[int]] = {}
+    by_layer_prods: dict[int, list[int]] = {}
+    for i, s in enumerate(sums):
+        by_layer_sums.setdefault(2 * (K - s.level) + 2, []).append(i)
+    for i, p in enumerate(prods):
+        by_layer_prods.setdefault(2 * (K - p.level) + 1, []).append(i)
+
+    # position within each layer
+    for l, ids in by_layer_sums.items():
+        for pos, i in enumerate(ids):
+            sums[i].layer_pos = pos
+    for l, ids in by_layer_prods.items():
+        for pos, i in enumerate(ids):
+            prods[i].layer_pos = pos
+
+    # ---- parameters ---------------------------------------------------------
+    # Sum-edge params first (grouped per sum node), then leaf params.
+    num_sum_edges = sum(len(s.children) for s in sums)
+    param_kind = ["sum"] * num_sum_edges + ["leaf"] * w0
+    # num/den indices are into the counts vector: concat(act of
+    # [leaves, layer1, ..., layer 2K], x1-counts of leaves).
+    layer_widths = [w0] + [
+        len(by_layer_prods.get(l, []) or by_layer_sums.get(l, []))
+        for l in range(1, 2 * K + 1)
+    ]
+    layer_offset = np.concatenate([[0], np.cumsum(layer_widths)]).tolist()
+    total_nodes = layer_offset[-1]
+
+    def gnode_sum(i: int) -> int:
+        s = sums[i]
+        return layer_offset[2 * (K - s.level) + 2] + s.layer_pos
+
+    def gnode_prod(i: int) -> int:
+        p = prods[i]
+        return layer_offset[2 * (K - p.level) + 1] + p.layer_pos
+
+    param_num: list[int] = []
+    param_den: list[int] = []
+    sum_edge_param: dict[tuple[int, int], int] = {}
+    pid = 0
+    for si, s in enumerate(sums):
+        for p in s.children:
+            pi = prod_ids[id(p)]
+            sum_edge_param[(si, pi)] = pid
+            param_num.append(gnode_prod(pi))
+            param_den.append(gnode_sum(si))
+            pid += 1
+    for li in range(w0):
+        param_num.append(total_nodes + li)     # x1 count segment
+        param_den.append(li)                   # leaf act count
+        pid += 1
+
+    # ---- layered edge matrices ----------------------------------------------
+    # Input of layer l is concat(prev layer outputs, leaves); for l == 1 the
+    # previous width is 0 and the input is exactly the leaves.
+    layers_json: list[dict] = []
+    for l in range(1, 2 * K + 1):
+        kind = "product" if l % 2 == 1 else "sum"
+        prev_w = layer_widths[l - 1] if l > 1 else 0
+        rows: list[int] = []
+        cols: list[int] = []
+        pids: list[int] = []
+        if kind == "product":
+            for pi in by_layer_prods.get(l, []):
+                p = prods[pi]
+                r = p.layer_pos
+                for cs in p.child_sums:
+                    rows.append(r)
+                    cols.append(sums[sum_ids[id(cs)]].layer_pos)
+                    pids.append(-1)
+                for leaf in prod_leaf_children[pi]:
+                    rows.append(r)
+                    cols.append(prev_w + leaf)
+                    pids.append(-1)
+        else:
+            for si in by_layer_sums.get(l, []):
+                s = sums[si]
+                r = s.layer_pos
+                for p in s.children:
+                    pi = prod_ids[id(p)]
+                    rows.append(r)
+                    cols.append(prods[pi].layer_pos)
+                    pids.append(sum_edge_param[(si, pi)])
+        layers_json.append(
+            dict(kind=kind, width=layer_widths[l], in_width=prev_w + w0,
+                 rows=rows, cols=cols, param=pids)
+        )
+
+    stats = dict(
+        sum=len(sums),
+        product=len(prods),
+        leaf=w0,
+        params=num_sum_edges + w0,
+        edges=num_sum_edges + sum(len(l["rows"]) for l in layers_json if l["kind"] == "product"),
+        layers=num_layers,
+    )
+    if name in PAPER_TABLE1:
+        assert stats == PAPER_TABLE1[name], (name, stats, PAPER_TABLE1[name])
+
+    # per-sum-node param groups (weights of one sum node sum to 1)
+    groups = []
+    pid = 0
+    for s in sums:
+        groups.append(list(range(pid, pid + len(s.children))))
+        pid += len(s.children)
+
+    return dict(
+        name=name,
+        num_vars=cfg["num_vars"],
+        rows=cfg["rows"],
+        seed=seed,
+        num_layers=num_layers,
+        leaf_var=leaf_var,
+        leaf_claim=leaf_claim,
+        layer_widths=layer_widths,
+        layer_offset=layer_offset,
+        total_nodes=total_nodes,
+        layers=layers_json,
+        num_params=num_sum_edges + w0,
+        num_sum_edges=num_sum_edges,
+        param_kind=param_kind,
+        param_num=param_num,
+        param_den=param_den,
+        sum_groups=groups,
+        stats=stats,
+    )
+
+
+def dense_matrices(st: dict) -> list[np.ndarray]:
+    """Dense adjacency matrices, one per non-leaf layer (float32 0/1)."""
+    mats = []
+    for l in st["layers"]:
+        m = np.zeros((l["width"], l["in_width"]), dtype=np.float32)
+        m[l["rows"], l["cols"]] = 1.0
+        mats.append(m)
+    return mats
+
+
+def save(st: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(st, f, default=int)
+
+
+if __name__ == "__main__":
+    for name in RECIPES:
+        st = build(name)
+        print(name, st["stats"])

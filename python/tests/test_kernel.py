@@ -1,0 +1,121 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps the kernel over shapes, sparsity patterns and modes;
+every case asserts allclose against kernels/ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import spn_layer as K
+
+MODES = [K.MODE_NONE, K.MODE_OR, K.MODE_AND, K.MODE_GATE]
+
+
+def _case(rng, b, in_w, out_w, density):
+    x = (rng.random((b, in_w)) < 0.5).astype(np.float32)
+    m = (rng.random((out_w, in_w)) < density).astype(np.float32)
+    # ensure no empty rows (real layers always have >= 1 child)
+    for r in range(out_w):
+        if m[r].sum() == 0:
+            m[r, rng.integers(0, in_w)] = 1.0
+    deg = m.sum(axis=1).astype(np.float32)
+    gate = (rng.random((b, out_w)) < 0.5).astype(np.float32)
+    return x, m, deg, gate
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("b,in_w,out_w", [(128, 16, 8), (256, 74, 26), (128, 301, 40)])
+def test_layer_apply_matches_ref(mode, b, in_w, out_w):
+    rng = np.random.default_rng(42 + mode)
+    x, m, deg, gate = _case(rng, b, in_w, out_w, 0.2)
+    got = K.layer_apply(jnp.asarray(x), jnp.asarray(m.T), jnp.asarray(deg),
+                        jnp.asarray(gate), mode)
+    want = ref.layer_apply_ref(jnp.asarray(x), jnp.asarray(m.T),
+                               jnp.asarray(deg), jnp.asarray(gate), mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b_blocks=st.integers(1, 3),
+    in_w=st.integers(1, 96),
+    out_w=st.integers(1, 48),
+    density=st.floats(0.05, 0.9),
+    mode=st.sampled_from(MODES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layer_apply_hypothesis(b_blocks, in_w, out_w, density, mode, seed):
+    rng = np.random.default_rng(seed)
+    b = 128 * b_blocks
+    x, m, deg, gate = _case(rng, b, in_w, out_w, density)
+    got = K.layer_apply(jnp.asarray(x), jnp.asarray(m.T), jnp.asarray(deg),
+                        jnp.asarray(gate), mode)
+    want = ref.layer_apply_ref(jnp.asarray(x), jnp.asarray(m.T),
+                               jnp.asarray(deg), jnp.asarray(gate), mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_blocks=st.integers(1, 4),
+    w=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_count_hypothesis(b_blocks, w, seed):
+    rng = np.random.default_rng(seed)
+    b = 128 * b_blocks
+    a = rng.random((b, w)).astype(np.float32)
+    mask = (rng.random(b) < 0.7).astype(np.float32)
+    got = K.masked_count(jnp.asarray(a), jnp.asarray(mask))
+    want = ref.masked_count_ref(jnp.asarray(a), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_masked_count_accumulates_across_grid():
+    """Multiple batch tiles must accumulate, not overwrite."""
+    b, w = 512, 5
+    a = np.ones((b, w), dtype=np.float32)
+    mask = np.ones(b, dtype=np.float32)
+    got = np.asarray(K.masked_count(jnp.asarray(a), jnp.asarray(mask), block_b=128))
+    np.testing.assert_allclose(got, np.full(w, b, dtype=np.float32))
+
+
+def test_mode_and_requires_all_children():
+    b, out_w, in_w = 128, 1, 3
+    m = np.ones((out_w, in_w), dtype=np.float32)
+    deg = m.sum(axis=1).astype(np.float32)
+    x = np.zeros((b, in_w), dtype=np.float32)
+    x[:, :2] = 1.0    # 2 of 3 children active -> AND is false
+    gate = np.zeros((b, out_w), dtype=np.float32)
+    got = np.asarray(K.layer_apply(jnp.asarray(x), jnp.asarray(m.T),
+                                   jnp.asarray(deg), jnp.asarray(gate), K.MODE_AND))
+    assert (got == 0).all()
+    x[:, 2] = 1.0
+    got = np.asarray(K.layer_apply(jnp.asarray(x), jnp.asarray(m.T),
+                                   jnp.asarray(deg), jnp.asarray(gate), K.MODE_AND))
+    assert (got == 1).all()
+
+
+def test_mode_or_any_child():
+    b, out_w, in_w = 128, 2, 4
+    m = np.zeros((out_w, in_w), dtype=np.float32)
+    m[0, 0] = 1.0
+    m[1, 2] = m[1, 3] = 1.0
+    deg = m.sum(axis=1).astype(np.float32)
+    x = np.zeros((b, in_w), dtype=np.float32)
+    x[:, 3] = 1.0
+    gate = np.zeros((b, out_w), dtype=np.float32)
+    got = np.asarray(K.layer_apply(jnp.asarray(x), jnp.asarray(m.T),
+                                   jnp.asarray(deg), jnp.asarray(gate), K.MODE_OR))
+    assert (got[:, 0] == 0).all() and (got[:, 1] == 1).all()
+
+
+def test_vmem_footprint_reported():
+    bt, in_w, out_w = 128, 320, 64
+    fb = K.vmem_footprint_bytes(bt, in_w, out_w)
+    # must fit a 16 MiB VMEM budget comfortably for Table-1 sized layers
+    assert fb < 16 * 2**20

@@ -1,0 +1,132 @@
+"""Structure generator: Table-1 exactness + SPN structural invariants."""
+
+import numpy as np
+import pytest
+
+from compile import structures
+
+ALL = list(structures.RECIPES)
+DEBD = list(structures.PAPER_TABLE1)
+
+
+@pytest.mark.parametrize("name", DEBD)
+def test_table1_exact(name):
+    st = structures.build(name)
+    assert st["stats"] == structures.PAPER_TABLE1[name]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_layering_alternates_and_root_single(name):
+    st = structures.build(name)
+    kinds = [l["kind"] for l in st["layers"]]
+    assert kinds[0] == "product"
+    for a, b in zip(kinds, kinds[1:]):
+        assert a != b, "layers must alternate"
+    assert kinds[-1] == "sum"
+    assert st["layers"][-1]["width"] == 1, "single root"
+    assert st["num_layers"] == len(st["layers"]) + 1  # paper counts leaf layer
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_edges_within_bounds(name):
+    st = structures.build(name)
+    w0 = st["layer_widths"][0]
+    for li, layer in enumerate(st["layers"]):
+        prev_w = layer["in_width"] - w0
+        assert prev_w == (st["layer_widths"][li] if li > 0 else 0)
+        for r, c in zip(layer["rows"], layer["cols"]):
+            assert 0 <= r < layer["width"]
+            assert 0 <= c < layer["in_width"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_sum_params_grouped_and_complete(name):
+    st = structures.build(name)
+    nse = st["num_sum_edges"]
+    seen = set()
+    for layer in st["layers"]:
+        for p in layer["param"]:
+            if layer["kind"] == "sum":
+                assert 0 <= p < nse
+                assert p not in seen
+                seen.add(p)
+            else:
+                assert p == -1
+    assert seen == set(range(nse))
+    covered = sorted(p for g in st["sum_groups"] for p in g)
+    assert covered == list(range(nse))
+    for g in st["sum_groups"]:
+        assert len(g) >= 2
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_every_node_has_parent_except_root(name):
+    """Tree property: each non-root node referenced exactly once as a child."""
+    st = structures.build(name)
+    w0 = st["layer_widths"][0]
+    leaf_refs = np.zeros(w0, dtype=int)
+    for li, layer in enumerate(st["layers"]):
+        prev_w = layer["in_width"] - w0
+        prev_refs = np.zeros(prev_w, dtype=int)
+        for c in layer["cols"]:
+            if c < prev_w:
+                prev_refs[c] += 1
+            else:
+                leaf_refs[c - prev_w] += 1
+        if li > 0:
+            assert (prev_refs == 1).all(), "each node has exactly one parent"
+    assert (leaf_refs == 1).all()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_selectivity(name):
+    """At most one child of every sum node is positive for any instance."""
+    st = structures.build(name)
+    rng = np.random.default_rng(3)
+    w0 = st["layer_widths"][0]
+    leaf_var = np.asarray(st["leaf_var"])
+    leaf_claim = np.asarray(st["leaf_claim"])
+    for _ in range(50):
+        row = rng.integers(0, 2, size=st["num_vars"])
+        pos_leaf = np.where(leaf_claim < 0, 1.0, (row[leaf_var] == leaf_claim))
+        pos = [pos_leaf]
+        for li, layer in enumerate(st["layers"]):
+            prev = pos[-1] if li > 0 else np.zeros(0)
+            inp = np.concatenate([prev, pos_leaf]) if li > 0 else pos_leaf
+            out = np.zeros(layer["width"])
+            if layer["kind"] == "product":
+                deg = np.zeros(layer["width"]); acc = np.zeros(layer["width"])
+                for r, c in zip(layer["rows"], layer["cols"]):
+                    deg[r] += 1; acc[r] += inp[c]
+                out = (acc >= deg - 0.5).astype(float)
+            else:
+                per_row = {}
+                for r, c in zip(layer["rows"], layer["cols"]):
+                    per_row.setdefault(r, []).append(inp[c])
+                    out[r] = max(out[r], inp[c])
+                for r, vals in per_row.items():
+                    assert sum(v > 0 for v in vals) <= 1, "selectivity violated"
+            pos.append(out)
+        assert pos[-1][0] == 1.0, "root positive for complete evidence"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_param_num_den_indices(name):
+    st = structures.build(name)
+    w0 = st["layer_widths"][0]
+    total = st["total_nodes"]
+    for k, (num, den) in enumerate(zip(st["param_num"], st["param_den"])):
+        if st["param_kind"][k] == "sum":
+            assert 0 <= num < total and 0 <= den < total
+        else:
+            assert total <= num < total + w0
+            assert 0 <= den < w0
+
+
+def test_determinism():
+    a = structures.build("nltcs", seed=7)
+    b = structures.build("nltcs", seed=7)
+    assert a == b
+    c = structures.build("nltcs", seed=8)
+    assert c["leaf_var"] != a["leaf_var"]   # different var permutation
+    assert c["stats"] == a["stats"]          # same Table-1 stats

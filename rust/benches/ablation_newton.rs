@@ -1,0 +1,96 @@
+//! §3.4 protocol ablation: Newton convergence from u=1 and the effect of
+//! the guard bits (our refinement; g=0 is the paper-literal iteration).
+//!
+//! Reports, per guard-bit setting, the worst/mean relative error of the
+//! computed inverse over the denominator range, plus the per-division
+//! message cost as iterations change — the paper's claim that ⌈log d⌉
+//! iterations suffice from u=1 is checked explicitly.
+
+use spn_mpc::field::Field;
+use spn_mpc::metrics::render_table;
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::protocols::newton::{newton_inverse, newton_plain, plan, NewtonConfig};
+use spn_mpc::rng::Prng;
+
+fn main() {
+    let bmax = 16384u128;
+
+    // --- guard-bit sweep (plaintext mirror, dense b sweep) -------------------
+    let mut rows = Vec::new();
+    for g in [0u32, 2, 4, 6, 8, 10] {
+        let cfg = NewtonConfig { guard_bits: g, ..NewtonConfig::default() };
+        let mut worst = 0.0f64;
+        let mut mean = 0.0f64;
+        let mut collapses = 0u32;
+        let mut count = 0u32;
+        let mut rng = Prng::seed_from_u64(7);
+        for b in (1..=bmax).step_by(97) {
+            let (u, pl) = newton_plain(b, bmax, &cfg, 64, &mut rng);
+            let want = (cfg.d * pl.final_scale / b) as f64;
+            let rel = ((u as f64) - want).abs() / want.max(1.0);
+            worst = worst.max(rel);
+            mean += rel;
+            count += 1;
+            if rel > 0.5 {
+                collapses += 1;
+            }
+        }
+        rows.push(vec![
+            format!("{g}"),
+            format!("{:.4}", mean / count as f64),
+            format!("{:.4}", worst),
+            format!("{collapses}/{count}"),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            "Newton inverse accuracy vs guard bits (d=256, b in [1, 16384])",
+            &["guard bits g", "mean rel err", "worst rel err", "collapses"],
+            &rows
+        )
+    );
+
+    // --- warmup-count claim: ⌈log₂ D₀⌉ warmup iterations reach f ≤ 2 ---------
+    let cfg = NewtonConfig::default();
+    let pl = plan(&cfg, bmax);
+    println!(
+        "plan for bmax={bmax}: e0={} D0={} warmup={} (= ⌈log₂ D₀⌉ + t = {} + {}) refine={}",
+        pl.e0,
+        pl.d0,
+        pl.warmup,
+        pl.warmup - cfg.t_extra,
+        cfg.t_extra,
+        pl.refine
+    );
+    assert_eq!(pl.warmup - cfg.t_extra, 128 - (pl.d0 - 1).leading_zeros());
+
+    // --- refine-iteration sweep: cost vs accuracy over the engine ------------
+    let mut rows = Vec::new();
+    for refine in [4u32, 8, 16, 24] {
+        let cfg = NewtonConfig { refine_iters: refine, ..NewtonConfig::default() };
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(5));
+        let b = 1234u128;
+        let bid = eng.input(1, &[b])[0];
+        let before = eng.net.stats.messages;
+        let (uid, pl) = newton_inverse(&mut eng, bid, 2000, &cfg);
+        let msgs = eng.net.stats.messages - before;
+        let u = eng.peek_int(uid);
+        let want = (cfg.d * pl.final_scale / b) as f64;
+        rows.push(vec![
+            format!("{refine}"),
+            format!("{:.5}", ((u as f64) - want).abs() / want),
+            format!("{msgs}"),
+            format!("{}", pl.warmup + refine),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            "Cost vs accuracy per refine iterations (n=5 members, b=1234)",
+            &["refine iters", "rel err", "messages/division", "total iters"],
+            &rows
+        )
+    );
+    println!("ablation_newton OK");
+}

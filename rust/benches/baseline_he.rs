@@ -1,0 +1,93 @@
+//! §3.3 baseline: homomorphic encryption vs secret sharing for the weight
+//! aggregation + division.
+//!
+//! Measures real Paillier keygen/encrypt/add/decrypt at 512/1024/2048-bit
+//! moduli (in-tree bignum), charges the §3.3 flow (N parties encrypt
+//! 2·params values, leader aggregates, division circuit per [17]), and puts
+//! it against the measured secret-sharing division from §3.4.  The shape to
+//! reproduce: HE is orders of magnitude more compute even before its
+//! division circuit.
+
+mod common;
+
+use spn_mpc::bench::time_it;
+use spn_mpc::field::Field;
+use spn_mpc::he::bigint::BigUint;
+use spn_mpc::he::{Keypair, Paillier};
+use spn_mpc::metrics::render_table;
+use spn_mpc::protocols::division::{private_divide, DivisionConfig};
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::rng::Prng;
+
+fn paillier_row(bits: usize, rng: &mut Prng) -> (Keypair, Vec<String>) {
+    let t_kg = time_it(0, 1, || Paillier::keygen(rng, bits));
+    let kp = Paillier::keygen(rng, bits);
+    let m = BigUint::from_u128(123456);
+    let mut rng2 = Prng::seed_from_u64(1);
+    let t_enc = time_it(1, 5, || Paillier::encrypt(&kp, &m, &mut rng2));
+    let c = Paillier::encrypt(&kp, &m, &mut rng2);
+    let t_add = time_it(2, 20, || Paillier::add(&kp, &c, &c));
+    let t_dec = time_it(1, 5, || Paillier::decrypt(&kp, &c));
+    let row = vec![
+        format!("{bits}"),
+        format!("{:.1} ms", t_kg.mean_s * 1e3),
+        format!("{:.2} ms", t_enc.mean_s * 1e3),
+        format!("{:.3} ms", t_add.mean_s * 1e3),
+        format!("{:.2} ms", t_dec.mean_s * 1e3),
+    ];
+    (kp, row)
+}
+
+fn main() {
+    let mut rng = Prng::seed_from_u64(42);
+    let mut rows = Vec::new();
+    let mut enc_1024 = 0.0;
+    for bits in [512usize, 1024, 2048] {
+        let (kp, row) = paillier_row(bits, &mut rng);
+        if bits == 1024 {
+            let m = BigUint::from_u128(7);
+            let mut r2 = Prng::seed_from_u64(2);
+            enc_1024 = time_it(1, 5, || Paillier::encrypt(&kp, &m, &mut r2)).mean_s;
+        }
+        rows.push(row);
+    }
+    println!(
+        "{}",
+        render_table(
+            "Paillier primitive costs (in-tree bignum, this machine)",
+            &["modulus bits", "keygen", "encrypt", "hom. add", "decrypt"],
+            &rows
+        )
+    );
+
+    // §3.3 flow for nltcs at 1024-bit: N=5 parties, 2 ciphertexts per sum
+    // node + edge numerators.
+    let st = common::load("nltcs");
+    let n_cts = 2 * st.num_sum_edges + st.sum_groups.len();
+    let he_aggregate_s = n_cts as f64 * 5.0 * enc_1024; // encrypt dominates
+    // division per [17]: word-wise FHE division needs thousands of
+    // homomorphic mults; we charge only 1000x an encryption as a *lower*
+    // bound per division.
+    let he_division_s = st.sum_groups.len() as f64 * 1000.0 * enc_1024;
+
+    // secret-sharing division measured end to end (wall time + accounting)
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(5));
+    let num = eng.input(1, &[600])[0];
+    let den = eng.input(1, &[2169])[0];
+    let ss = time_it(1, 3, || {
+        private_divide(&mut eng, num, den, 4096, &DivisionConfig::default())
+    });
+
+    println!("§3.3 HE path (1024-bit, nltcs, 5 parties, lower bounds):");
+    println!("  aggregation (encrypt {n_cts} values x 5 parties): {he_aggregate_s:.2} s");
+    println!("  division circuit [17] (>= 1000 hom. ops / division): {he_division_s:.1} s");
+    println!("§3.4 secret-sharing path:");
+    println!(
+        "  one full private division (36 Newton iterations): {:.2} ms wall compute",
+        ss.mean_s * 1e3
+    );
+    let ratio = (he_aggregate_s + he_division_s) / (ss.mean_s * st.sum_groups.len() as f64);
+    println!("compute ratio (HE / secret sharing), whole training: {ratio:.0}x");
+    assert!(ratio > 10.0, "HE must be at least an order of magnitude slower");
+    println!("baseline_he OK");
+}

@@ -1,0 +1,34 @@
+#![allow(dead_code)]
+//! Shared helpers for the bench targets (plain-main harness; the vendored
+//! crate set has no criterion).
+
+use spn_mpc::coordinator::train::{train, TrainConfig, TrainReport};
+use spn_mpc::datasets;
+use spn_mpc::field::Field;
+use spn_mpc::protocols::engine::{Engine, EngineConfig, Schedule};
+use spn_mpc::spn::eval;
+use spn_mpc::spn::structure::Structure;
+
+pub const DEBD: [&str; 4] = ["nltcs", "jester", "baudio", "bnetflix"];
+
+pub fn load(name: &str) -> Structure {
+    let p = format!("{}/artifacts/{name}.structure.json", env!("CARGO_MANIFEST_DIR"));
+    Structure::load(p).expect("run `make artifacts` first")
+}
+
+/// Full private-training accounting run for one dataset (native counts —
+/// the runtime path is exercised by the examples/integration tests; benches
+/// measure the protocol).
+pub fn train_run(name: &str, members: usize, schedule: Schedule) -> (TrainReport, f64) {
+    let st = load(name);
+    let gt = datasets::ground_truth_params(&st, 7);
+    let data = datasets::sample(&st, &gt, st.rows, 42);
+    let shards = datasets::partition(&data, members);
+    let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+    let mut cfg = EngineConfig::new(members);
+    cfg.schedule = schedule;
+    let mut eng = Engine::new(Field::paper(), cfg);
+    let t0 = std::time::Instant::now();
+    let (_, report) = train(&mut eng, &st, &counts, st.rows as u64, &TrainConfig::default());
+    (report, t0.elapsed().as_secs_f64())
+}

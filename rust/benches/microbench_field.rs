@@ -1,0 +1,82 @@
+//! L3 microbenchmarks: the field/share/protocol primitives on the hot path.
+//! This is the §Perf instrument — run before/after optimization.
+
+use spn_mpc::bench::{throughput, time_it};
+use spn_mpc::field::Field;
+use spn_mpc::metrics::render_table;
+use spn_mpc::protocols::division::{private_divide, DivisionConfig};
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::rng::Prng;
+use spn_mpc::sharing::shamir::ShamirCtx;
+
+fn main() {
+    let f = Field::paper();
+    let mut rng = Prng::seed_from_u64(1);
+    let xs: Vec<u128> = (0..4096).map(|_| f.rand(&mut rng)).collect();
+    let ys: Vec<u128> = (0..4096).map(|_| f.rand(&mut rng)).collect();
+
+    let mut rows = Vec::new();
+
+    let s = time_it(3, 20, || {
+        let mut acc = 0u128;
+        for (&a, &b) in xs.iter().zip(&ys) {
+            acc = f.add(acc, f.mul(a, b));
+        }
+        acc
+    });
+    rows.push(vec![
+        "field mulmod (74-bit)".into(),
+        format!("{:.1} M ops/s", throughput(&s, 4096) / 1e6),
+        s.per_iter_str(),
+    ]);
+
+    let s = time_it(3, 20, || {
+        let mut acc = 0u128;
+        for (&a, &b) in xs.iter().zip(&ys) {
+            acc = f.add(acc, f.sub(a, b));
+        }
+        acc
+    });
+    rows.push(vec![
+        "field add/sub".into(),
+        format!("{:.1} M ops/s", throughput(&s, 8192) / 1e6),
+        s.per_iter_str(),
+    ]);
+
+    let s = time_it(2, 10, || f.inv(xs[0]));
+    rows.push(vec!["field inverse (Fermat)".into(), String::new(), s.per_iter_str()]);
+
+    for n in [5usize, 13] {
+        let ctx = ShamirCtx::new(f, n);
+        let mut rng = Prng::seed_from_u64(2);
+        let s = time_it(2, 50, || ctx.share(12345, &mut rng));
+        rows.push(vec![format!("shamir share (n={n})"), String::new(), s.per_iter_str()]);
+        let sh = ctx.share(12345, &mut rng);
+        let s = time_it(2, 200, || ctx.reconstruct(&sh));
+        rows.push(vec![format!("shamir reconstruct (n={n})"), String::new(), s.per_iter_str()]);
+    }
+
+    for n in [5usize, 13] {
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(n));
+        let a = eng.input(1, &[123])[0];
+        let b = eng.input(2, &[456])[0];
+        let s = time_it(2, 50, || eng.mul(a, b));
+        rows.push(vec![format!("engine secure mul (n={n})"), String::new(), s.per_iter_str()]);
+        let s = time_it(1, 20, || eng.divpub(a, 256));
+        rows.push(vec![format!("engine divpub (n={n})"), String::new(), s.per_iter_str()]);
+        let num = eng.input(1, &[600])[0];
+        let den = eng.input(1, &[2169])[0];
+        let s = time_it(1, 5, || private_divide(&mut eng, num, den, 4096, &DivisionConfig::default()));
+        rows.push(vec![
+            format!("full private division (n={n})"),
+            String::new(),
+            s.per_iter_str(),
+        ]);
+    }
+
+    println!(
+        "{}",
+        render_table("L3 primitive microbenchmarks", &["primitive", "throughput", "latency"], &rows)
+    );
+    println!("microbench_field OK");
+}

@@ -1,0 +1,82 @@
+//! Tiny benchmarking harness (criterion is not in the vendored crate set).
+//!
+//! `cargo bench` targets use [`time_it`] / [`Bench`] for wall-clock
+//! measurements with warmup and repetition, reporting min/mean like
+//! criterion's terse output.  Deterministic protocol *accounting* (message
+//! counts, virtual time) needs no repetition and is printed directly.
+
+use std::time::Instant;
+
+/// Measurement summary for one benchmark case.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Sample {
+    pub fn per_iter_str(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s < 1e-6 {
+                format!("{:.1} ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:.2} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:.2} ms", s * 1e3)
+            } else {
+                format!("{:.3} s", s)
+            }
+        }
+        format!("mean {} (min {}, max {}, n={})", fmt(self.mean_s), fmt(self.min_s), fmt(self.max_s), self.iters)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured + `iters` measured runs.
+pub fn time_it<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Sample {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    Sample { iters, mean_s: mean, min_s: min, max_s: max }
+}
+
+/// Throughput helper: ops/sec given a per-call op count.
+pub fn throughput(sample: &Sample, ops_per_iter: u64) -> f64 {
+    ops_per_iter as f64 / sample.mean_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_sane() {
+        let s = time_it(1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.mean_s > 0.0 && s.min_s <= s.mean_s && s.mean_s <= s.max_s);
+        assert!(throughput(&s, 10_000) > 0.0);
+    }
+
+    #[test]
+    fn formats_units() {
+        let s = Sample { iters: 3, mean_s: 2.5e-7, min_s: 1e-7, max_s: 5e-7 };
+        assert!(s.per_iter_str().contains("ns"));
+        let s = Sample { iters: 3, mean_s: 2.5e-3, min_s: 1e-3, max_s: 5e-3 };
+        assert!(s.per_iter_str().contains("ms"));
+    }
+}

@@ -1,0 +1,164 @@
+//! The approximate solution of §3.2: each party computes its local fraction
+//! `f^k = num^k/den^k`, scales it to `F^k = ⌊d·f^k/N⌉`, and masks it with a
+//! JRSZ zero-share.  The sum of the masked shares is (d times) the average
+//! of local fractions — correct when shards are near-iid, biased otherwise
+//! (the `ablation_approx_vs_exact` bench quantifies the bias vs skew).
+
+use crate::field::Field;
+use crate::net::{NetConfig, NetStats, SimNet};
+use crate::rng::Prng;
+use crate::sharing::additive::jrsz;
+
+/// One party's input for one parameter.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalFraction {
+    pub num: u64,
+    pub den: u64,
+}
+
+/// Result of the approximate protocol for a batch of parameters.
+pub struct ApproxOutcome {
+    /// Additive shares: shares[k][party] (each party holds one element).
+    pub shares: Vec<Vec<u128>>,
+    /// Revealed d-scaled approximations (for verification / reporting).
+    pub revealed: Vec<u128>,
+    pub stats: NetStats,
+}
+
+/// Run §3.2 for `params.len()` parameters across `n` parties.
+/// `params[k][i]` is party i's local (num, den) for parameter k.
+pub fn approx_divide(
+    f: &Field,
+    params: &[Vec<LocalFraction>],
+    d: u128,
+    net_cfg: NetConfig,
+    seed: u64,
+) -> ApproxOutcome {
+    let n = params.first().map(|p| p.len()).unwrap_or(0);
+    assert!(n > 0);
+    let mut net = SimNet::new(net_cfg);
+    let mut rng = Prng::seed_from_u64(seed);
+    let mut shares = Vec::with_capacity(params.len());
+    let mut revealed = Vec::with_capacity(params.len());
+
+    for locals in params {
+        // Preprocessing: JRSZ dealt by the manager (third party), one share
+        // per member (n messages, 1 round).
+        let masks = jrsz(f, n, &mut rng);
+        for i in 0..n {
+            net.send(usize::MAX, i, 1);
+        }
+        net.end_round();
+
+        // Local: F^k = round(d * num / den / N), masked.
+        let mut sh = Vec::with_capacity(n);
+        for (i, loc) in locals.iter().enumerate() {
+            let fk = if loc.den == 0 {
+                0u128
+            } else {
+                // round(d*num / (den*N))
+                let numer = d * loc.num as u128 * 2 + (loc.den as u128 * n as u128);
+                numer / (2 * loc.den as u128 * n as u128)
+            };
+            sh.push(f.add(fk % f.p, masks[i]));
+        }
+
+        // Reveal to manager: n messages, 1 round.
+        for i in 0..n {
+            net.send(i, usize::MAX, 1);
+        }
+        net.end_round();
+        revealed.push(f.sum(&sh));
+        shares.push(sh);
+    }
+
+    ApproxOutcome { shares, revealed, stats: net.stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{Field, EXAMPLE_P};
+
+    /// Example 1 of the paper, digit for digit.
+    #[test]
+    fn paper_example_1() {
+        let f = Field::new(EXAMPLE_P); // p = 2^20 + 7
+        let d = 1000u128;
+        let n = 3;
+        let r = [752508u128, 776879, 567779]; // given JRSZ output
+        assert_eq!(f.sum(&r), 0, "paper's r-values sum to 0 mod p");
+        let nums = [71u64, 209, 320];
+        let dens = [256u64, 786, 1127];
+
+        // F^k = round(d * f^k / N) as the paper computes them
+        let mut fk = Vec::new();
+        for i in 0..n {
+            let numer = d * nums[i] as u128 * 2 + dens[i] as u128 * n as u128;
+            fk.push(numer / (2 * dens[i] as u128 * n as u128));
+        }
+        assert_eq!(fk, vec![92, 89, 95], "paper's (F¹,F²,F³)");
+
+        let shares: Vec<u128> = (0..n).map(|i| f.add(fk[i], r[i])).collect();
+        assert_eq!(shares, vec![752600, 776968, 567874], "paper's (F̂¹,F̂²,F̂³)");
+        assert_eq!(f.sum(&shares), 276, "reconstruction = 0.276 · d");
+
+        // true value for comparison: 0.277 scaled
+        let true_w = (71.0 + 209.0 + 320.0) / (256.0 + 786.0 + 1127.0);
+        assert!((f.sum(&shares) as f64 / d as f64 - true_w).abs() < 0.002);
+    }
+
+    #[test]
+    fn approx_protocol_end_to_end() {
+        let f = Field::new(EXAMPLE_P);
+        let locals = vec![
+            vec![
+                LocalFraction { num: 71, den: 256 },
+                LocalFraction { num: 209, den: 786 },
+                LocalFraction { num: 320, den: 1127 },
+            ],
+        ];
+        let out = approx_divide(&f, &locals, 1000, NetConfig::default(), 1);
+        assert_eq!(out.revealed.len(), 1);
+        // average of fractions ≈ 0.276; allow rounding
+        let got = out.revealed[0] as f64 / 1000.0;
+        assert!((got - 0.276).abs() < 0.003, "{got}");
+        // accounting: 2 rounds, 2n messages
+        assert_eq!(out.stats.messages, 6);
+        assert_eq!(out.stats.rounds, 2);
+    }
+
+    #[test]
+    fn approx_bias_under_skew() {
+        // identical num/den ratios → unbiased; skewed ratios → biased
+        let f = Field::new(EXAMPLE_P);
+        let iid = vec![vec![
+            LocalFraction { num: 100, den: 400 },
+            LocalFraction { num: 101, den: 399 },
+            LocalFraction { num: 99, den: 401 },
+        ]];
+        let skew = vec![vec![
+            LocalFraction { num: 0, den: 800 },
+            LocalFraction { num: 300, den: 300 },
+            LocalFraction { num: 0, den: 100 },
+        ]];
+        let d = 10_000u128;
+        let got_iid =
+            approx_divide(&f, &iid, d, NetConfig::default(), 2).revealed[0] as f64 / d as f64;
+        let got_skew =
+            approx_divide(&f, &skew, d, NetConfig::default(), 2).revealed[0] as f64 / d as f64;
+        let truth = 300.0 / 1200.0;
+        assert!((got_iid - truth).abs() < 0.001);
+        assert!((got_skew - truth).abs() > 0.05, "skew should bias: {got_skew}");
+    }
+
+    #[test]
+    fn zero_denominator_contributes_zero() {
+        let f = Field::new(EXAMPLE_P);
+        let locals =
+            vec![vec![LocalFraction { num: 0, den: 0 }, LocalFraction { num: 50, den: 100 }]];
+        let out = approx_divide(&f, &locals, 1000, NetConfig::default(), 3);
+        // average of (0, 0.5)/2 = 0.25
+        assert!((out.revealed[0] as f64 / 1000.0 - 0.25).abs() < 0.002);
+    }
+}

@@ -1,0 +1,255 @@
+//! Private marginal inference (§4): servers hold shares of the learned
+//! weights; a client shares its query; the network is evaluated bottom-up
+//! with secure sums and products; only the root value is revealed (to the
+//! client).
+//!
+//! Fixed-point convention: every node value is an integer ≈ d·(true value)
+//! with d = 256 (§5.3); each secure multiplication of two d-scaled values
+//! is followed by a truncation by d (divpub).  Like the paper's setting,
+//! deep conjunctive queries underflow at this precision — marginal queries
+//! over a handful of evidence variables (CryptoSPN's use case) are the
+//! intended workload; the `infer` tests quantify accuracy against the
+//! float oracle.
+
+use crate::protocols::engine::{DataId, Engine};
+use crate::coordinator::train::SharedModel;
+use crate::net::NetStats;
+use crate::spn::structure::{LayerKind, Structure};
+
+/// A client query: assignment + which variables are marginalized.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub x: Vec<u8>,
+    pub marg: Vec<bool>,
+}
+
+/// Evaluate S(query) over shares; returns the revealed d-scaled root value
+/// and the traffic spent.
+pub fn private_eval(
+    eng: &mut Engine,
+    st: &Structure,
+    model: &SharedModel,
+    q: &Query,
+    default_leaf_theta: &[f64],
+) -> (i128, NetStats) {
+    let before = eng.net.stats;
+    let d = model.d;
+    let w0 = st.num_leaves();
+
+    // --- client shares its input: one bit per variable --------------------
+    let xvals: Vec<u128> = q.x.iter().map(|&b| b as u128).collect();
+    let x_ids = eng.input(1, &xvals);
+
+    // --- leaf values -------------------------------------------------------
+    // marginalized leaf → public d; else Bernoulli: x·θ + (1-x)·(d-θ)
+    //   = [x]·(2θ - d) + (d - θ), one secure mul per live leaf.
+    let mut leaf_vals: Vec<DataId> = Vec::with_capacity(w0);
+    let const_d = eng.constant(d);
+    for leaf in 0..w0 {
+        let v = st.leaf_var[leaf];
+        if q.marg[v] {
+            leaf_vals.push(const_d);
+            continue;
+        }
+        let theta: DataId = match &model.leaf_theta {
+            Some(t) => t[leaf],
+            None => {
+                // public default θ (paper mode): d-scaled constant
+                let th = (default_leaf_theta[leaf] * d as f64).round() as u128;
+                eng.constant(th.min(d))
+            }
+        };
+        let slope = eng.lin(-(d as i128), &[(2, theta)]); // 2θ - d
+        let prod = eng.mul(x_ids[v], slope);
+        let val = eng.lin(d as i128, &[(1, prod), (-1, theta)]); // d - θ + x(2θ-d)
+        leaf_vals.push(val);
+    }
+
+    // --- layered evaluation -------------------------------------------------
+    let mut prev: Vec<DataId> = Vec::new();
+    for (li, l) in st.layers.iter().enumerate() {
+        let prev_w = if li > 0 { st.layer_widths[li] } else { 0 };
+        let mut children: Vec<Vec<(usize, i64)>> = vec![Vec::new(); l.width];
+        for ((&r, &c), &p) in l.rows.iter().zip(&l.cols).zip(&l.param) {
+            children[r].push((c, p));
+        }
+        let mut out: Vec<DataId> = Vec::with_capacity(l.width);
+        for ch in &children {
+            let get = |c: usize| -> DataId {
+                if c < prev_w {
+                    prev[c]
+                } else {
+                    leaf_vals[c - prev_w]
+                }
+            };
+            match l.kind {
+                LayerKind::Product => {
+                    // sequential secure mult + truncate to stay d-scaled
+                    let mut acc = get(ch[0].0);
+                    for &(c, _) in &ch[1..] {
+                        let m = eng.mul(acc, get(c));
+                        acc = eng.divpub(m, d);
+                    }
+                    out.push(acc);
+                }
+                LayerKind::Sum => {
+                    // Σ_j w_j · v_j / d — pairwise muls then one truncate
+                    let pairs: Vec<(DataId, DataId)> =
+                        ch.iter().map(|&(c, p)| (model.sum_w[p as usize], get(c))).collect();
+                    let prods = eng.mul_vec(&pairs);
+                    let terms: Vec<(i128, DataId)> = prods.iter().map(|&p| (1, p)).collect();
+                    let sum = eng.lin(0, &terms);
+                    out.push(eng.divpub(sum, d));
+                }
+            }
+        }
+        prev = out;
+    }
+
+    // --- reveal root to the client ------------------------------------------
+    let root = eng.reveal(prev[0]);
+    let val = eng.field.to_i128(root);
+    let mut stats = eng.net.stats;
+    stats.messages -= before.messages;
+    stats.bytes -= before.bytes;
+    stats.rounds -= before.rounds;
+    stats.exercises -= before.exercises;
+    stats.virtual_time_s -= before.virtual_time_s;
+    (val, stats)
+}
+
+/// Conditional Pr(x | e) = S(x∧e)/S(e) — two private evaluations, client
+/// divides the revealed d-scaled values (§4).
+pub fn private_conditional(
+    eng: &mut Engine,
+    st: &Structure,
+    model: &SharedModel,
+    x_assign: &[(usize, u8)],
+    e_assign: &[(usize, u8)],
+    default_leaf_theta: &[f64],
+) -> (f64, NetStats) {
+    let nv = st.num_vars;
+    let mut x = vec![0u8; nv];
+    let mut marg_xe = vec![true; nv];
+    for &(v, b) in x_assign.iter().chain(e_assign) {
+        x[v] = b;
+        marg_xe[v] = false;
+    }
+    let mut marg_e = vec![true; nv];
+    for &(v, b) in e_assign {
+        x[v] = b;
+        marg_e[v] = false;
+    }
+    let (sxe, st1) = private_eval(
+        eng,
+        st,
+        model,
+        &Query { x: x.clone(), marg: marg_xe },
+        default_leaf_theta,
+    );
+    let (se, st2) = private_eval(eng, st, model, &Query { x, marg: marg_e }, default_leaf_theta);
+    let p = if se <= 0 { 0.0 } else { (sxe.max(0) as f64) / (se as f64) };
+    let stats = NetStats {
+        messages: st1.messages + st2.messages,
+        bytes: st1.bytes + st2.bytes,
+        rounds: st1.rounds + st2.rounds,
+        exercises: st1.exercises + st2.exercises,
+        virtual_time_s: st1.virtual_time_s + st2.virtual_time_s,
+    };
+    (p.min(1.0), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::train::{train, TrainConfig};
+    use crate::datasets;
+    use crate::field::Field;
+    use crate::protocols::engine::EngineConfig;
+    use crate::spn::{eval, learn};
+    use crate::spn::structure::Structure;
+
+    fn toy() -> Option<Structure> {
+        let p = format!("{}/artifacts/toy.structure.json", env!("CARGO_MANIFEST_DIR"));
+        std::fs::read_to_string(p).ok().map(|s| Structure::from_json_str(&s).unwrap())
+    }
+
+    fn trained(n: usize) -> Option<(Structure, Engine, SharedModel, Vec<f64>)> {
+        let st = toy()?;
+        let gt = datasets::ground_truth_params(&st, 5);
+        let data = datasets::sample(&st, &gt, 3000, 11);
+        let shards = datasets::partition(&data, n);
+        let shard_counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+        let (model, _) = train(&mut eng, &st, &shard_counts, 3000, &TrainConfig::default());
+        // float oracle params from the revealed weights (same quantization)
+        let fixed = super::super::train::peek_weights(&eng, &model);
+        let theta = learn::default_leaf_theta(&st);
+        let params = learn::params_from_fixed(&st, &fixed, &theta, 256);
+        Some((st, eng, model, params))
+    }
+
+    #[test]
+    fn private_eval_matches_float_oracle_marginal() {
+        let Some((st, mut eng, model, params)) = trained(5) else { return };
+        let theta = learn::default_leaf_theta(&st);
+        // evidence on one variable, rest marginalized: shallow, no underflow
+        for v in 0..st.num_vars {
+            for b in [0u8, 1] {
+                let mut q =
+                    Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+                q.x[v] = b;
+                q.marg[v] = false;
+                let (got, _) = private_eval(&mut eng, &st, &model, &q, &theta);
+                let marg: Vec<bool> = q.marg.clone();
+                let want = eval::logeval(&st, &q.x, &marg, &params).exp();
+                let got_f = got.max(0) as f64 / 256.0;
+                assert!(
+                    (got_f - want).abs() < 0.08,
+                    "v={v} b={b}: private {got_f} vs oracle {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn private_conditional_close_to_oracle() {
+        let Some((st, mut eng, model, params)) = trained(3) else { return };
+        let theta = learn::default_leaf_theta(&st);
+        let (p, stats) =
+            private_conditional(&mut eng, &st, &model, &[(0, 1)], &[(1, 1)], &theta);
+        // oracle
+        let mut x = vec![0u8; st.num_vars];
+        x[0] = 1;
+        x[1] = 1;
+        let mut m_xe = vec![true; st.num_vars];
+        m_xe[0] = false;
+        m_xe[1] = false;
+        let mut m_e = vec![true; st.num_vars];
+        m_e[1] = false;
+        let want = eval::logeval(&st, &x, &m_xe, &params).exp()
+            / eval::logeval(&st, &x, &m_e, &params).exp();
+        assert!((p - want).abs() < 0.25, "private {p} vs oracle {want}");
+        assert!(stats.messages > 0);
+    }
+
+    #[test]
+    fn all_marginal_query_gives_d() {
+        // S(∅) = 1 → d-scaled root ≈ d.
+        let Some((st, mut eng, model, _)) = trained(3) else { return };
+        let theta = learn::default_leaf_theta(&st);
+        let q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+        let (got, _) = private_eval(&mut eng, &st, &model, &q, &theta);
+        assert!((got - 256).abs() <= 26, "S(∅)·d = {got}");
+    }
+
+    #[test]
+    fn inference_cost_scales_with_edges() {
+        let Some((st, mut eng, model, _)) = trained(3) else { return };
+        let theta = learn::default_leaf_theta(&st);
+        let q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+        let (_, stats) = private_eval(&mut eng, &st, &model, &q, &theta);
+        // at least one secure op per edge
+        assert!(stats.exercises as usize >= st.stats.edges / 2);
+    }
+}

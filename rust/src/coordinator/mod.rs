@@ -1,0 +1,13 @@
+//! The paper's system coordinators.
+//!
+//! * [`approx`] — the §3.2 approximate path (additive shares + JRSZ), with
+//!   the paper's Example 1 reproduced digit-for-digit in tests.
+//! * [`train`]  — the §3.4 exact path: per-party counts → SQ2PQ → one
+//!   Newton inversion per sum node → per-edge multiply + truncate.
+//! * [`infer`]  — §4 private marginal inference over the learned shares.
+
+pub mod approx;
+pub mod infer;
+pub mod train;
+
+pub use train::{train, SharedModel, TrainConfig, TrainReport};

@@ -1,0 +1,253 @@
+//! Private parameter learning (§3.1 + §3.4): the exact secret-sharing path.
+//!
+//! Inputs: each party's *local* counts vector over its data shard (computed
+//! by the PJRT runtime from the AOT'd counts artifact, or by the native
+//! mirror `spn::eval::counts`).  Horizontal partitioning makes these counts
+//! additive contributions to the global counts — exactly Eq. (3).
+//!
+//! Per sum node i (weights share a denominator):
+//!   1. SQ2PQ the parties' local `den_i` and per-edge `num_ij` into
+//!      polynomial shares;
+//!   2. +1 (Laplace) smoothing of the denominator — public linear op,
+//!      guarantees the Newton precondition `b ≥ 1`;
+//!   3. one Newton inversion `[I] ≈ d·E/den` (§3.4);
+//!   4. per edge: secure multiply `[num]·[I]`, then truncate by E.
+//!
+//! The result is *shares* of the d-scaled weights — the paper's training
+//! deliverable. Reveal (for verification/deployment) is a separate step so
+//! Tables 2–3 accounting matches training only.
+
+use crate::protocols::division::{divide_shared_den, DivisionConfig};
+use crate::protocols::engine::{DataId, Engine};
+use crate::net::NetStats;
+use crate::spn::learn::SMOOTH;
+use crate::spn::structure::Structure;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub division: DivisionConfig,
+    /// Also learn leaf Bernoulli parameters privately (extension beyond the
+    /// paper, which trains sum weights only — §1 "weights for the sum nodes").
+    pub learn_leaves: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { division: DivisionConfig::default(), learn_leaves: false }
+    }
+}
+
+/// Shares of the learned model held by the members.
+pub struct SharedModel {
+    /// d-scaled sum-edge weights, indexed by param id (0..num_sum_edges).
+    pub sum_w: Vec<DataId>,
+    /// d-scaled leaf thetas (only when learn_leaves).
+    pub leaf_theta: Option<Vec<DataId>>,
+    pub d: u128,
+}
+
+/// Costs and diagnostics of a training run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainReport {
+    pub stats: NetStats,
+    pub divisions: usize,
+    pub sum_edges: usize,
+}
+
+/// Run private training. `shard_counts[i]` is party i's local counts vector
+/// (length `st.counts_len()`), `rows_total` the public dataset size bound.
+pub fn train(
+    eng: &mut Engine,
+    st: &Structure,
+    shard_counts: &[Vec<u64>],
+    rows_total: u64,
+    cfg: &TrainConfig,
+) -> (SharedModel, TrainReport) {
+    let n = eng.n();
+    assert_eq!(shard_counts.len(), n);
+    for c in shard_counts {
+        assert_eq!(c.len(), st.counts_len());
+    }
+    let before = eng.net.stats;
+    let bmax = rows_total as u128 + SMOOTH as u128;
+
+    // Enter the MPC: parties SQ2PQ their local count contributions for every
+    // count index the protocol touches (den per sum node, num per edge).
+    let mut sum_w: Vec<Option<DataId>> = vec![None; st.num_sum_edges];
+    let mut divisions = 0usize;
+
+    for g in &st.sum_groups {
+        let den_idx = st.param_den[g[0]];
+        let den_locals: Vec<Vec<u128>> =
+            (0..n).map(|i| vec![shard_counts[i][den_idx] as u128]).collect();
+        let den_raw = eng.sq2pq_inputs(&den_locals)[0];
+        // +SMOOTH smoothing (public linear op)
+        let den = eng.lin(SMOOTH as i128, &[(1, den_raw)]);
+
+        let num_locals: Vec<Vec<u128>> = (0..n)
+            .map(|i| g.iter().map(|&k| shard_counts[i][st.param_num[k]] as u128).collect())
+            .collect();
+        let nums = eng.sq2pq_inputs(&num_locals);
+
+        let ws = divide_shared_den(eng, &nums, den, bmax, &cfg.division);
+        divisions += 1;
+        for (&k, w) in g.iter().zip(ws) {
+            sum_w[k] = Some(w);
+        }
+    }
+
+    let leaf_theta = if cfg.learn_leaves {
+        let w0 = st.num_leaves();
+        let mut thetas = Vec::with_capacity(w0);
+        for leaf in 0..w0 {
+            let k = st.num_sum_edges + leaf;
+            let den_locals: Vec<Vec<u128>> =
+                (0..n).map(|i| vec![shard_counts[i][st.param_den[k]] as u128]).collect();
+            let den_raw = eng.sq2pq_inputs(&den_locals)[0];
+            let den = eng.lin(SMOOTH as i128, &[(1, den_raw)]);
+            let num_locals: Vec<Vec<u128>> =
+                (0..n).map(|i| vec![shard_counts[i][st.param_num[k]] as u128]).collect();
+            let num = eng.sq2pq_inputs(&num_locals)[0];
+            let ws = divide_shared_den(eng, &[num], den, bmax, &cfg.division);
+            divisions += 1;
+            thetas.push(ws[0]);
+        }
+        Some(thetas)
+    } else {
+        None
+    };
+
+    let model = SharedModel {
+        sum_w: sum_w.into_iter().map(Option::unwrap).collect(),
+        leaf_theta,
+        d: cfg.division.newton.d,
+    };
+    let mut stats = eng.net.stats;
+    stats.messages -= before.messages;
+    stats.bytes -= before.bytes;
+    stats.rounds -= before.rounds;
+    stats.exercises -= before.exercises;
+    stats.virtual_time_s -= before.virtual_time_s;
+    let report = TrainReport { stats, divisions, sum_edges: st.num_sum_edges };
+    (model, report)
+}
+
+/// Reveal the learned d-scaled sum weights (diagnostic / deployment step).
+pub fn reveal_weights(eng: &mut Engine, model: &SharedModel) -> Vec<i128> {
+    let vals = eng.reveal_vec(&model.sum_w);
+    vals.into_iter().map(|v| eng.field.to_i128(v)).collect()
+}
+
+/// Peek (no traffic accounting) — for tests and verification reports.
+pub fn peek_weights(eng: &Engine, model: &SharedModel) -> Vec<i128> {
+    model.sum_w.iter().map(|&id| eng.peek_int(id)).collect()
+}
+
+pub fn peek_leaf_theta(eng: &Engine, model: &SharedModel) -> Option<Vec<i128>> {
+    model
+        .leaf_theta
+        .as_ref()
+        .map(|ids| ids.iter().map(|&id| eng.peek_int(id)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::field::Field;
+    use crate::protocols::engine::EngineConfig;
+    use crate::spn::{eval, learn};
+    use crate::spn::structure::Structure;
+
+    fn toy() -> Option<Structure> {
+        let p = format!("{}/artifacts/toy.structure.json", env!("CARGO_MANIFEST_DIR"));
+        std::fs::read_to_string(p).ok().map(|s| Structure::from_json_str(&s).unwrap())
+    }
+
+    fn setup(n: usize, rows: usize) -> Option<(Structure, Vec<Vec<u64>>, Vec<u64>, u64)> {
+        let st = toy()?;
+        let gt = datasets::ground_truth_params(&st, 5);
+        let data = datasets::sample(&st, &gt, rows, 11);
+        let shards = datasets::partition(&data, n);
+        let shard_counts: Vec<Vec<u64>> =
+            shards.iter().map(|s| eval::counts(&st, s)).collect();
+        let global = eval::counts(&st, &data);
+        Some((st, shard_counts, global, rows as u64))
+    }
+
+    #[test]
+    fn private_weights_match_centralized_oracle() {
+        let Some((st, shard_counts, global, rows)) = setup(5, 2000) else { return };
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(5));
+        let cfg = TrainConfig::default();
+        let (model, report) = train(&mut eng, &st, &shard_counts, rows, &cfg);
+        let got = peek_weights(&eng, &model);
+        let oracle = learn::ml_weights_fixed(&st, &global, 256);
+        assert_eq!(report.divisions, st.sum_groups.len());
+        for (k, (&g, &o)) in got.iter().zip(&oracle).enumerate() {
+            assert!(
+                (g - o as i128).abs() <= 4,
+                "param {k}: private {g} vs oracle {o}"
+            );
+        }
+    }
+
+    #[test]
+    fn weights_per_sum_node_sum_to_d() {
+        let Some((st, shard_counts, _, rows)) = setup(3, 1000) else { return };
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(3));
+        let (model, _) = train(&mut eng, &st, &shard_counts, rows, &TrainConfig::default());
+        let got = peek_weights(&eng, &model);
+        for g in &st.sum_groups {
+            let tot: i128 = g.iter().map(|&k| got[k]).sum();
+            assert!((tot - 256).abs() <= 10, "group sums to {tot}");
+        }
+    }
+
+    #[test]
+    fn learned_leaves_extension() {
+        let Some((st, shard_counts, global, rows)) = setup(3, 2000) else { return };
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(3).batched());
+        let cfg = TrainConfig { learn_leaves: true, ..Default::default() };
+        let (model, report) = train(&mut eng, &st, &shard_counts, rows, &cfg);
+        assert_eq!(report.divisions, st.sum_groups.len() + st.num_leaves());
+        let thetas = peek_leaf_theta(&eng, &model).unwrap();
+        for (leaf, &th) in thetas.iter().enumerate() {
+            let k = st.num_sum_edges + leaf;
+            let oracle =
+                256 * global[st.param_num[k]] as i128 / (global[st.param_den[k]] + 1) as i128;
+            assert!((th - oracle).abs() <= 4, "leaf {leaf}: {th} vs {oracle}");
+        }
+    }
+
+    #[test]
+    fn member_shares_differ_from_weights() {
+        // Privacy smoke test: no single member's share equals the secret.
+        let Some((st, shard_counts, _, rows)) = setup(5, 500) else { return };
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(5));
+        let (model, _) = train(&mut eng, &st, &shard_counts, rows, &TrainConfig::default());
+        let secrets = peek_weights(&eng, &model);
+        // Secrets are small ints; shares should look like random field elems.
+        let mut coincidences = 0;
+        for (k, &id) in model.sum_w.iter().enumerate() {
+            for m in &eng.members {
+                let sh = {
+                    // members' stores are private; go through peek of single share
+                    // via reconstruct_subset of 1 point is impossible — compare raw
+                    let shares: Vec<u128> =
+                        eng.members.iter().map(|mm| mm_get(mm, id)).collect();
+                    shares[m.id - 1]
+                };
+                if sh == secrets[k].unsigned_abs() {
+                    coincidences += 1;
+                }
+            }
+        }
+        assert!(coincidences <= 1, "shares leak secrets");
+    }
+
+    // test-only accessor (Member::get is private)
+    fn mm_get(m: &crate::protocols::engine::Member, id: DataId) -> u128 {
+        m.share_for_test(id)
+    }
+}

@@ -1,0 +1,462 @@
+//! Arbitrary-precision unsigned integers (little-endian u64 limbs).
+//!
+//! Just enough for Paillier: add/sub/cmp, schoolbook mul, divrem, modpow
+//! (square-and-multiply with Barrett-free reduction via divrem), gcd/lcm,
+//! modular inverse, Miller–Rabin, and random prime generation.  Not
+//! constant-time — this is a *cost baseline*, not a production HE library
+//! (stated in DESIGN.md; the paper's point is that even an ideal HE
+//! implementation loses to secret sharing by orders of magnitude).
+
+use crate::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUint {
+    /// Little-endian limbs; no trailing zero limbs (canonical form).
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    pub fn from_u128(x: u128) -> Self {
+        let mut l = vec![x as u64, (x >> 64) as u64];
+        while l.last() == Some(&0) {
+            l.pop();
+        }
+        BigUint { limbs: l }
+    }
+
+    pub fn to_u128(&self) -> Option<u128> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0] as u128),
+            2 => Some(self.limbs[0] as u128 | (self.limbs[1] as u128) << 64),
+            _ => None,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().map_or(true, |l| l & 1 == 0)
+    }
+
+    pub fn bits(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => 64 * (self.limbs.len() - 1) + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    fn norm(mut self) -> Self {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+        self
+    }
+
+    pub fn cmp_big(&self, other: &Self) -> std::cmp::Ordering {
+        use std::cmp::Ordering::*;
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Equal => continue,
+                o => return o,
+            }
+        }
+        Equal
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        let n = self.limbs.len().max(other.limbs.len());
+        let mut out = Vec::with_capacity(n + 1);
+        let mut carry = 0u128;
+        for i in 0..n {
+            let a = *self.limbs.get(i).unwrap_or(&0) as u128;
+            let b = *other.limbs.get(i).unwrap_or(&0) as u128;
+            let s = a + b + carry;
+            out.push(s as u64);
+            carry = s >> 64;
+        }
+        if carry > 0 {
+            out.push(carry as u64);
+        }
+        BigUint { limbs: out }.norm()
+    }
+
+    /// self - other; panics on underflow.
+    pub fn sub(&self, other: &Self) -> Self {
+        assert!(self.cmp_big(other) != std::cmp::Ordering::Less, "bigint underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0i128;
+        for i in 0..self.limbs.len() {
+            let a = self.limbs[i] as i128;
+            let b = *other.limbs.get(i).unwrap_or(&0) as i128;
+            let mut d = a - b - borrow;
+            if d < 0 {
+                d += 1i128 << 64;
+                borrow = 1;
+            } else {
+                borrow = 0;
+            }
+            out.push(d as u64);
+        }
+        BigUint { limbs: out }.norm()
+    }
+
+    pub fn mul(&self, other: &Self) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let t = out[i + j] as u128 + a as u128 * b as u128 + carry;
+                out[i + j] = t as u64;
+                carry = t >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let t = out[k] as u128 + carry;
+                out[k] = t as u64;
+                carry = t >> 64;
+                k += 1;
+            }
+        }
+        BigUint { limbs: out }.norm()
+    }
+
+    pub fn shl_bits(&self, sh: usize) -> Self {
+        if self.is_zero() {
+            return Self::zero();
+        }
+        let limb_sh = sh / 64;
+        let bit_sh = sh % 64;
+        let mut out = vec![0u64; self.limbs.len() + limb_sh + 1];
+        for (i, &l) in self.limbs.iter().enumerate() {
+            out[i + limb_sh] |= l << bit_sh;
+            if bit_sh > 0 {
+                out[i + limb_sh + 1] |= l >> (64 - bit_sh);
+            }
+        }
+        BigUint { limbs: out }.norm()
+    }
+
+    pub fn shr_bits(&self, sh: usize) -> Self {
+        let limb_sh = sh / 64;
+        if limb_sh >= self.limbs.len() {
+            return Self::zero();
+        }
+        let bit_sh = sh % 64;
+        let mut out = Vec::with_capacity(self.limbs.len() - limb_sh);
+        for i in limb_sh..self.limbs.len() {
+            let mut v = self.limbs[i] >> bit_sh;
+            if bit_sh > 0 && i + 1 < self.limbs.len() {
+                v |= self.limbs[i + 1] << (64 - bit_sh);
+            }
+            out.push(v);
+        }
+        BigUint { limbs: out }.norm()
+    }
+
+    pub fn bit(&self, i: usize) -> bool {
+        let limb = i / 64;
+        self.limbs.get(limb).map_or(false, |l| (l >> (i % 64)) & 1 == 1)
+    }
+
+    /// Long division: (quotient, remainder). Bit-shift based; O(bits·limbs).
+    pub fn divrem(&self, div: &Self) -> (Self, Self) {
+        assert!(!div.is_zero(), "division by zero");
+        if self.cmp_big(div) == std::cmp::Ordering::Less {
+            return (Self::zero(), self.clone());
+        }
+        let shift = self.bits() - div.bits();
+        let mut rem = self.clone();
+        let mut quot = Self::zero();
+        for s in (0..=shift).rev() {
+            let cand = div.shl_bits(s);
+            if rem.cmp_big(&cand) != std::cmp::Ordering::Less {
+                rem = rem.sub(&cand);
+                // set bit s of quot
+                let limb = s / 64;
+                if quot.limbs.len() <= limb {
+                    quot.limbs.resize(limb + 1, 0);
+                }
+                quot.limbs[limb] |= 1u64 << (s % 64);
+            }
+        }
+        (quot.norm(), rem)
+    }
+
+    pub fn rem(&self, m: &Self) -> Self {
+        self.divrem(m).1
+    }
+
+    pub fn mulmod(&self, other: &Self, m: &Self) -> Self {
+        self.mul(other).rem(m)
+    }
+
+    pub fn modpow(&self, exp: &Self, m: &Self) -> Self {
+        let mut base = self.rem(m);
+        let mut acc = Self::one().rem(m);
+        for i in 0..exp.bits() {
+            if exp.bit(i) {
+                acc = acc.mulmod(&base, m);
+            }
+            base = base.mulmod(&base, m);
+        }
+        acc
+    }
+
+    pub fn gcd(&self, other: &Self) -> Self {
+        let (mut a, mut b) = (self.clone(), other.clone());
+        while !b.is_zero() {
+            let r = a.rem(&b);
+            a = b;
+            b = r;
+        }
+        a
+    }
+
+    pub fn lcm(&self, other: &Self) -> Self {
+        self.mul(other).divrem(&self.gcd(other)).0
+    }
+
+    /// Modular inverse via extended Euclid (values as signed bigint pairs).
+    pub fn modinv(&self, m: &Self) -> Option<Self> {
+        // extended gcd with (sign, magnitude) coefficients
+        let (mut r0, mut r1) = (m.clone(), self.rem(m));
+        let (mut s0, mut s1) = ((false, Self::zero()), (false, Self::one()));
+        while !r1.is_zero() {
+            let (q, r2) = r0.divrem(&r1);
+            // s2 = s0 - q*s1
+            let qs1 = q.mul(&s1.1);
+            let s2 = signed_sub(&s0, &(s1.0, qs1));
+            r0 = r1;
+            r1 = r2;
+            s0 = s1;
+            s1 = s2;
+        }
+        if r0.cmp_big(&Self::one()) != std::cmp::Ordering::Equal {
+            return None;
+        }
+        // normalize sign
+        let inv = if s0.0 { m.sub(&s0.1.rem(m)) } else { s0.1.rem(m) };
+        Some(inv.rem(m))
+    }
+
+    pub fn rand_bits<R: Rng + ?Sized>(rng: &mut R, bits: usize) -> Self {
+        assert!(bits > 0);
+        let limbs = bits.div_ceil(64);
+        let mut l: Vec<u64> = (0..limbs).map(|_| rng.next_u64()).collect();
+        let top_bits = bits - (limbs - 1) * 64;
+        if top_bits < 64 {
+            l[limbs - 1] &= (1u64 << top_bits) - 1;
+        }
+        // force exact bit length
+        l[limbs - 1] |= 1u64 << (top_bits - 1);
+        BigUint { limbs: l }.norm()
+    }
+
+    pub fn is_probable_prime<R: Rng + ?Sized>(&self, rounds: u32, rng: &mut R) -> bool {
+        if self.is_zero() {
+            return false;
+        }
+        for small in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+            let s = Self::from_u128(small as u128);
+            if self.cmp_big(&s) == std::cmp::Ordering::Equal {
+                return true;
+            }
+            if self.rem(&s).is_zero() {
+                return false;
+            }
+        }
+        let one = Self::one();
+        let two = Self::from_u128(2);
+        if self.cmp_big(&two) == std::cmp::Ordering::Less {
+            return false;
+        }
+        let n1 = self.sub(&one);
+        let mut d = n1.clone();
+        let mut r = 0usize;
+        while d.is_even() {
+            d = d.shr_bits(1);
+            r += 1;
+        }
+        'witness: for _ in 0..rounds {
+            // witness in [2, n-2]
+            let a = loop {
+                let c = Self::rand_bits(rng, self.bits().max(3) - 1);
+                if c.cmp_big(&two) != std::cmp::Ordering::Less
+                    && c.cmp_big(&n1) == std::cmp::Ordering::Less
+                {
+                    break c;
+                }
+            };
+            let mut x = a.modpow(&d, self);
+            if x.cmp_big(&one) == std::cmp::Ordering::Equal
+                || x.cmp_big(&n1) == std::cmp::Ordering::Equal
+            {
+                continue;
+            }
+            for _ in 0..r - 1 {
+                x = x.mulmod(&x, self);
+                if x.cmp_big(&n1) == std::cmp::Ordering::Equal {
+                    continue 'witness;
+                }
+            }
+            return false;
+        }
+        true
+    }
+
+    pub fn gen_prime<R: Rng + ?Sized>(rng: &mut R, bits: usize) -> Self {
+        loop {
+            let mut c = Self::rand_bits(rng, bits);
+            if c.is_even() {
+                c = c.add(&Self::one());
+            }
+            if c.is_probable_prime(16, rng) {
+                return c;
+            }
+        }
+    }
+}
+
+type Signed = (bool, BigUint); // (negative?, magnitude)
+
+fn signed_sub(a: &Signed, b: &Signed) -> Signed {
+    match (a.0, b.0) {
+        (false, false) => {
+            if a.1.cmp_big(&b.1) != std::cmp::Ordering::Less {
+                (false, a.1.sub(&b.1))
+            } else {
+                (true, b.1.sub(&a.1))
+            }
+        }
+        (true, true) => signed_sub(&(false, b.1.clone()), &(false, a.1.clone())),
+        (false, true) => (false, a.1.add(&b.1)),
+        (true, false) => (true, a.1.add(&b.1)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Prng;
+
+    fn big(x: u128) -> BigUint {
+        BigUint::from_u128(x)
+    }
+
+    #[test]
+    fn add_sub_mul_small_match_u128() {
+        let mut rng = Prng::seed_from_u64(1);
+        for _ in 0..500 {
+            let a = rng.gen_bits(60);
+            let b = rng.gen_bits(60);
+            assert_eq!(big(a).add(&big(b)).to_u128(), Some(a + b));
+            assert_eq!(big(a.max(b)).sub(&big(a.min(b))).to_u128(), Some(a.max(b) - a.min(b)));
+            assert_eq!(big(a).mul(&big(b)).to_u128(), Some(a * b));
+        }
+    }
+
+    #[test]
+    fn divrem_matches_u128() {
+        let mut rng = Prng::seed_from_u64(2);
+        for _ in 0..500 {
+            let a = rng.gen_bits(100);
+            let b = 1 + rng.gen_bits(60);
+            let (q, r) = big(a).divrem(&big(b));
+            assert_eq!(q.to_u128(), Some(a / b));
+            assert_eq!(r.to_u128(), Some(a % b));
+        }
+    }
+
+    #[test]
+    fn divrem_reconstructs() {
+        let mut rng = Prng::seed_from_u64(3);
+        for _ in 0..50 {
+            let a = BigUint::rand_bits(&mut rng, 300);
+            let b = BigUint::rand_bits(&mut rng, 150);
+            let (q, r) = a.divrem(&b);
+            assert_eq!(q.mul(&b).add(&r), a);
+            assert!(r.cmp_big(&b) == std::cmp::Ordering::Less);
+        }
+    }
+
+    #[test]
+    fn modpow_matches_u128_field() {
+        let p = crate::field::PAPER_P;
+        let f = crate::field::Field::paper();
+        let mut rng = Prng::seed_from_u64(4);
+        for _ in 0..20 {
+            let a = rng.gen_range_u128(p);
+            let e = rng.gen_bits(40);
+            let want = f.pow(a, e);
+            let got = big(a).modpow(&big(e), &big(p)).to_u128().unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn modinv_works() {
+        let mut rng = Prng::seed_from_u64(5);
+        let p = big(crate::field::PAPER_P);
+        for _ in 0..20 {
+            let a = big(1 + rng.gen_range_u128(crate::field::PAPER_P - 1));
+            let inv = a.modinv(&p).unwrap();
+            assert_eq!(a.mulmod(&inv, &p).to_u128(), Some(1));
+        }
+        // non-invertible
+        assert!(big(6).modinv(&big(12)).is_none());
+    }
+
+    #[test]
+    fn miller_rabin_agrees_with_known_values() {
+        let mut rng = Prng::seed_from_u64(6);
+        for prime in [2u128, 3, 5, 65537, (1 << 20) + 7, crate::field::PAPER_P] {
+            assert!(big(prime).is_probable_prime(16, &mut rng), "{prime}");
+        }
+        for comp in [1u128, 4, 100, 65536, (1 << 20) + 9, 3215031751] {
+            assert!(!big(comp).is_probable_prime(16, &mut rng), "{comp}");
+        }
+    }
+
+    #[test]
+    fn gen_prime_has_requested_bits() {
+        let mut rng = Prng::seed_from_u64(7);
+        let p = BigUint::gen_prime(&mut rng, 96);
+        assert_eq!(p.bits(), 96);
+        assert!(p.is_probable_prime(16, &mut rng));
+    }
+
+    #[test]
+    fn shifts_roundtrip() {
+        let mut rng = Prng::seed_from_u64(8);
+        for _ in 0..100 {
+            let a = BigUint::rand_bits(&mut rng, 200);
+            for sh in [1usize, 13, 64, 77, 130] {
+                assert_eq!(a.shl_bits(sh).shr_bits(sh), a);
+            }
+        }
+    }
+
+    #[test]
+    fn gcd_lcm() {
+        assert_eq!(big(12).gcd(&big(18)).to_u128(), Some(6));
+        assert_eq!(big(12).lcm(&big(18)).to_u128(), Some(36));
+        assert_eq!(big(17).gcd(&big(13)).to_u128(), Some(1));
+    }
+}

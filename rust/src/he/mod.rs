@@ -1,0 +1,20 @@
+//! Homomorphic-encryption baseline (§3.3 of the paper).
+//!
+//! The paper sketches an exact solution where parties encrypt `d·num_i` and
+//! `den_i` under an additively homomorphic scheme, a leader aggregates
+//! ciphertexts, and the division is done with the word-wise FHE method of
+//! Çetin et al. [17].  The point of the baseline is cost: HE is orders of
+//! magnitude slower than secret sharing.
+//!
+//! We implement textbook **Paillier** (additively homomorphic) over an
+//! in-tree arbitrary-precision integer ([`bigint`]) — the vendored crate
+//! set has no bignum crate, and building the substrate is in scope.  The
+//! `baseline_he` bench measures real encrypt/add/decrypt times at 512–2048
+//! bit moduli and reports the aggregation cost next to the secret-sharing
+//! path; the division-circuit cost is extrapolated per [17]'s gate counts
+//! (documented in the bench output).
+
+pub mod bigint;
+pub mod paillier;
+
+pub use paillier::{Keypair, Paillier};

@@ -1,0 +1,138 @@
+//! Textbook Paillier: the additively homomorphic scheme for the §3.3
+//! baseline.
+//!
+//! KeyGen: n = p·q, λ = lcm(p-1, q-1), g = n+1, μ = λ⁻¹ mod n.
+//! Enc(m; r) = (1+n)^m · r^n mod n², Dec(c) = L(c^λ mod n²)·μ mod n with
+//! L(x) = (x-1)/n.  Enc(m₁)·Enc(m₂) = Enc(m₁+m₂) — the property §3.3 uses
+//! to aggregate `Σ d·numᵢ` and `Σ denᵢ` at the leader.
+
+use super::bigint::BigUint;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Keypair {
+    pub n: BigUint,
+    pub n2: BigUint,
+    lambda: BigUint,
+    mu: BigUint,
+}
+
+pub struct Paillier;
+
+impl Paillier {
+    /// Generate a keypair with an n of ~`bits` bits.
+    pub fn keygen<R: Rng + ?Sized>(rng: &mut R, bits: usize) -> Keypair {
+        loop {
+            let p = BigUint::gen_prime(rng, bits / 2);
+            let q = BigUint::gen_prime(rng, bits / 2);
+            if p == q {
+                continue;
+            }
+            let n = p.mul(&q);
+            let one = BigUint::one();
+            let lambda = p.sub(&one).lcm(&q.sub(&one));
+            let n2 = n.mul(&n);
+            // μ = (L(g^λ mod n²))⁻¹ mod n with g = n+1:
+            // g^λ = (1+n)^λ = 1 + λn (mod n²) → L = λ mod n
+            let l = lambda.rem(&n);
+            let Some(mu) = l.modinv(&n) else { continue };
+            return Keypair { n, n2, lambda, mu };
+        }
+    }
+
+    pub fn encrypt<R: Rng + ?Sized>(kp: &Keypair, m: &BigUint, rng: &mut R) -> BigUint {
+        assert!(m.cmp_big(&kp.n) == std::cmp::Ordering::Less, "message too large");
+        // (1+n)^m = 1 + m·n (mod n²) — the standard shortcut
+        let gm = BigUint::one().add(&m.mulmod(&kp.n, &kp.n2)).rem(&kp.n2);
+        // r coprime to n
+        let r = loop {
+            let c = BigUint::rand_bits(rng, kp.n.bits() - 1);
+            if !c.is_zero() && c.gcd(&kp.n).to_u128() == Some(1) {
+                break c;
+            }
+        };
+        let rn = r.modpow(&kp.n, &kp.n2);
+        gm.mulmod(&rn, &kp.n2)
+    }
+
+    pub fn decrypt(kp: &Keypair, c: &BigUint) -> BigUint {
+        let x = c.modpow(&kp.lambda, &kp.n2);
+        // L(x) = (x-1)/n
+        let l = x.sub(&BigUint::one()).divrem(&kp.n).0;
+        l.mulmod(&kp.mu, &kp.n)
+    }
+
+    /// Homomorphic addition: Enc(a)·Enc(b) mod n².
+    pub fn add(kp: &Keypair, a: &BigUint, b: &BigUint) -> BigUint {
+        a.mulmod(b, &kp.n2)
+    }
+
+    /// Homomorphic scalar multiplication: Enc(a)^k = Enc(k·a).
+    pub fn scalar_mul(kp: &Keypair, a: &BigUint, k: &BigUint) -> BigUint {
+        a.modpow(k, &kp.n2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Prng;
+
+    fn kp(bits: usize, seed: u64) -> Keypair {
+        let mut rng = Prng::seed_from_u64(seed);
+        Paillier::keygen(&mut rng, bits)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let kp = kp(128, 1);
+        let mut rng = Prng::seed_from_u64(2);
+        for m in [0u128, 1, 42, 100_000, 1 << 40] {
+            let c = Paillier::encrypt(&kp, &BigUint::from_u128(m), &mut rng);
+            assert_eq!(Paillier::decrypt(&kp, &c).to_u128(), Some(m));
+        }
+    }
+
+    #[test]
+    fn homomorphic_addition_aggregates() {
+        // the §3.3 flow: parties encrypt local num/den; leader multiplies.
+        let kp = kp(128, 3);
+        let mut rng = Prng::seed_from_u64(4);
+        let nums = [71u128, 209, 320];
+        let mut acc = Paillier::encrypt(&kp, &BigUint::from_u128(0), &mut rng);
+        for &x in &nums {
+            let c = Paillier::encrypt(&kp, &BigUint::from_u128(x), &mut rng);
+            acc = Paillier::add(&kp, &acc, &c);
+        }
+        assert_eq!(Paillier::decrypt(&kp, &acc).to_u128(), Some(600));
+    }
+
+    #[test]
+    fn scalar_multiplication() {
+        let kp = kp(128, 5);
+        let mut rng = Prng::seed_from_u64(6);
+        let c = Paillier::encrypt(&kp, &BigUint::from_u128(7), &mut rng);
+        let c3 = Paillier::scalar_mul(&kp, &c, &BigUint::from_u128(3));
+        assert_eq!(Paillier::decrypt(&kp, &c3).to_u128(), Some(21));
+    }
+
+    #[test]
+    fn ciphertexts_are_randomized() {
+        let kp = kp(128, 7);
+        let mut rng = Prng::seed_from_u64(8);
+        let m = BigUint::from_u128(5);
+        let c1 = Paillier::encrypt(&kp, &m, &mut rng);
+        let c2 = Paillier::encrypt(&kp, &m, &mut rng);
+        assert_ne!(c1, c2, "semantic security needs randomized ciphertexts");
+        assert_eq!(Paillier::decrypt(&kp, &c1), Paillier::decrypt(&kp, &c2));
+    }
+
+    #[test]
+    fn larger_modulus_still_correct() {
+        let kp = kp(256, 9);
+        let mut rng = Prng::seed_from_u64(10);
+        let m = BigUint::from_u128(123456789);
+        let c = Paillier::encrypt(&kp, &m, &mut rng);
+        assert_eq!(Paillier::decrypt(&kp, &c).to_u128(), Some(123456789));
+    }
+}

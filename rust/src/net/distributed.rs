@@ -1,0 +1,308 @@
+//! Distributed Manager/Member session over real TCP sockets — the smoke-
+//! scale deployment of the exercise protocol (§5.2 / Appendix A).
+//!
+//! Each member runs in its own thread with its own private store and RNG
+//! and talks TCP to the Manager; exercises are broadcast as frames and the
+//! members' sub-share exchanges are *relayed* through the Manager (the
+//! paper's WebSocket topology also stars at the Manager).  The relay only
+//! ever sees Shamir sub-shares, but a malicious-manager deployment should
+//! use the pairwise mesh (`tcp::Frame` supports arbitrary endpoints); this
+//! module is the transport smoke test, while `SimNet` carries the paper's
+//! exact accounting.
+//!
+//! Supported exercises: Input, Mul (BGW resharing), DivPub (§3.4), Reveal.
+//! That is exactly the vocabulary one private division needs, so the
+//! integration test runs a real `⌊a·b/d⌋` across 5 OS threads.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::tcp::{read_frame, write_frame, Frame};
+use crate::field::Field;
+use crate::rng::{Prng, Rng};
+use crate::sharing::shamir::ShamirCtx;
+
+// Opcodes (first element of an exercise frame).
+const OP_INPUT: u128 = 1;
+const OP_MUL: u128 = 2;
+const OP_DIVPUB: u128 = 3;
+const OP_REVEAL: u128 = 4;
+const OP_SHUTDOWN: u128 = 5;
+
+/// One member's event loop: connect, then serve exercises until shutdown.
+fn member_loop(
+    addr: String,
+    id: usize, // 1-based
+    n: usize,
+    field: Field,
+    private_inputs: Vec<u128>,
+    seed: u64,
+) -> Result<()> {
+    let shamir = ShamirCtx::new(field, n);
+    let mut rng = Prng::seed_from_u64(seed ^ (id as u64) << 17);
+    let mut store: HashMap<u128, u128> = HashMap::new();
+    let mut s = TcpStream::connect(&addr)?;
+    write_frame(&mut s, &Frame { exercise_id: 0, from: id as u32, elems: vec![] })?;
+
+    loop {
+        let ex = read_frame(&mut s)?;
+        let op = ex.elems[0];
+        match op {
+            OP_SHUTDOWN => return Ok(()),
+            OP_INPUT => {
+                // [op, out, owner, input_idx]
+                let (out, owner, idx) = (ex.elems[1], ex.elems[2] as usize, ex.elems[3] as usize);
+                if owner == id {
+                    let shares = shamir.share(private_inputs[idx] % field.p, &mut rng);
+                    write_frame(
+                        &mut s,
+                        &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: shares },
+                    )?;
+                }
+                // everyone receives their share from the relay
+                let f = read_frame(&mut s)?;
+                store.insert(out, f.elems[0]);
+            }
+            OP_MUL => {
+                // [op, out, a, b]: local product -> deal -> combine
+                let (out, a, b) = (ex.elems[1], ex.elems[2], ex.elems[3]);
+                let z = field.mul(store[&a], store[&b]);
+                let sub = shamir.share(z, &mut rng);
+                write_frame(
+                    &mut s,
+                    &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: sub },
+                )?;
+                // relay returns the n sub-shares destined to me
+                let f = read_frame(&mut s)?;
+                let lambda = shamir.lambda();
+                let mut acc = 0u128;
+                for (i, &ss) in f.elems.iter().enumerate() {
+                    acc = field.add(acc, field.mul(lambda[i], ss));
+                }
+                store.insert(out, acc);
+            }
+            OP_DIVPUB => {
+                // [op, out, u, d]; Alice = member 1, Bob = member 2
+                let (out, u, d) = (ex.elems[1], ex.elems[2], ex.elems[3]);
+                if id == 1 {
+                    let r = rng.gen_bits(64);
+                    let q = r % d;
+                    let mut elems = shamir.share(r, &mut rng);
+                    elems.extend(shamir.share(q, &mut rng));
+                    write_frame(
+                        &mut s,
+                        &Frame { exercise_id: ex.exercise_id, from: id as u32, elems },
+                    )?;
+                }
+                let f = read_frame(&mut s)?; // my [r]_i, [q]_i
+                let (r_i, q_i) = (f.elems[0], f.elems[1]);
+                // z' = u + r opened to Bob (via relay)
+                let z_i = field.add(store[&u], r_i);
+                write_frame(
+                    &mut s,
+                    &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: vec![z_i] },
+                )?;
+                if id == 2 {
+                    let f = read_frame(&mut s)?; // all z' shares
+                    let z = shamir.reconstruct(&f.elems);
+                    let w = z % d;
+                    write_frame(
+                        &mut s,
+                        &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: shamir.share(w, &mut rng) },
+                    )?;
+                }
+                let f = read_frame(&mut s)?; // my [w]_i
+                let w_i = f.elems[0];
+                let dinv = field.inv(d % field.p);
+                let v = field.mul(field.sub(field.add(store[&u], q_i), w_i), dinv);
+                store.insert(out, v);
+            }
+            OP_REVEAL => {
+                // [op, a]: send my share to the manager
+                let a = ex.elems[1];
+                write_frame(
+                    &mut s,
+                    &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: vec![store[&a]] },
+                )?;
+            }
+            _ => return Err(anyhow!("member {id}: unknown opcode {op}")),
+        }
+    }
+}
+
+/// The Manager: owns the listener, schedules exercises, relays sub-shares.
+pub struct Manager {
+    n: usize,
+    field: Field,
+    shamir: ShamirCtx,
+    conns: Vec<TcpStream>, // index i = member i+1
+    next_ex: u64,
+    next_id: u128,
+    pub handles: Vec<JoinHandle<Result<()>>>,
+}
+
+impl Manager {
+    /// Spawn `n` member threads with the given private inputs and connect
+    /// them to an ephemeral local port.
+    pub fn spawn_local(field: Field, inputs: Vec<Vec<u128>>, seed: u64) -> Result<Self> {
+        let n = inputs.len();
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let mut handles = Vec::new();
+        for (i, inp) in inputs.into_iter().enumerate() {
+            let a = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                member_loop(a, i + 1, n, field, inp, seed)
+            }));
+        }
+        let mut conns_by_id: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (mut s, _) = listener.accept()?;
+            let hello = read_frame(&mut s)?;
+            conns_by_id[hello.from as usize - 1] = Some(s);
+        }
+        let conns: Vec<TcpStream> = conns_by_id.into_iter().map(|c| c.unwrap()).collect();
+        Ok(Manager {
+            n,
+            field,
+            shamir: ShamirCtx::new(field, n),
+            conns,
+            next_ex: 0,
+            next_id: 0,
+            handles,
+        })
+    }
+
+    fn broadcast(&mut self, elems: Vec<u128>) -> Result<u64> {
+        self.next_ex += 1;
+        let ex = self.next_ex;
+        for s in self.conns.iter_mut() {
+            write_frame(s, &Frame { exercise_id: ex, from: u32::MAX, elems: elems.clone() })?;
+        }
+        Ok(ex)
+    }
+
+    fn alloc(&mut self) -> u128 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    /// Schedule: owner deals shares of its `idx`-th private input.
+    pub fn input(&mut self, owner: usize, idx: usize) -> Result<u128> {
+        let out = self.alloc();
+        let ex = self.broadcast(vec![OP_INPUT, out, owner as u128, idx as u128])?;
+        let dealt = read_frame(&mut self.conns[owner - 1])?.elems;
+        for (j, s) in self.conns.iter_mut().enumerate() {
+            write_frame(s, &Frame { exercise_id: ex, from: owner as u32, elems: vec![dealt[j]] })?;
+        }
+        Ok(out)
+    }
+
+    /// Schedule a secure multiplication; relays the resharing mesh.
+    pub fn mul(&mut self, a: u128, b: u128) -> Result<u128> {
+        let out = self.alloc();
+        let ex = self.broadcast(vec![OP_MUL, out, a, b])?;
+        // collect each member's dealt vector, transpose, redistribute
+        let mut dealt = Vec::with_capacity(self.n);
+        for s in self.conns.iter_mut() {
+            dealt.push(read_frame(s)?.elems);
+        }
+        for (j, s) in self.conns.iter_mut().enumerate() {
+            let col: Vec<u128> = (0..self.n).map(|i| dealt[i][j]).collect();
+            write_frame(s, &Frame { exercise_id: ex, from: u32::MAX, elems: col })?;
+        }
+        Ok(out)
+    }
+
+    /// Schedule a §3.4 division-by-public.
+    pub fn divpub(&mut self, u: u128, d: u128) -> Result<u128> {
+        let out = self.alloc();
+        let ex = self.broadcast(vec![OP_DIVPUB, out, u, d])?;
+        // phase 1: Alice dealt [r] ++ [q]; forward per member
+        let alice = read_frame(&mut self.conns[0])?.elems;
+        let n = self.n;
+        for (j, s) in self.conns.iter_mut().enumerate() {
+            write_frame(
+                s,
+                &Frame { exercise_id: ex, from: 1, elems: vec![alice[j], alice[n + j]] },
+            )?;
+        }
+        // phase 2: collect z' shares, hand them to Bob
+        let mut zs = Vec::with_capacity(n);
+        for s in self.conns.iter_mut() {
+            zs.push(read_frame(s)?.elems[0]);
+        }
+        write_frame(&mut self.conns[1], &Frame { exercise_id: ex, from: u32::MAX, elems: zs })?;
+        // phase 3: Bob dealt [w]; forward per member
+        let bob = read_frame(&mut self.conns[1])?.elems;
+        for (j, s) in self.conns.iter_mut().enumerate() {
+            write_frame(s, &Frame { exercise_id: ex, from: 2, elems: vec![bob[j]] })?;
+        }
+        Ok(out)
+    }
+
+    /// Reveal a shared value to the manager.
+    pub fn reveal(&mut self, a: u128) -> Result<u128> {
+        self.broadcast(vec![OP_REVEAL, a])?;
+        let mut shares = Vec::with_capacity(self.n);
+        for s in self.conns.iter_mut() {
+            shares.push(read_frame(s)?.elems[0]);
+        }
+        Ok(self.shamir.reconstruct(&shares))
+    }
+
+    /// Stop all members and join their threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.broadcast(vec![OP_SHUTDOWN])?;
+        for h in self.handles.drain(..) {
+            h.join().map_err(|_| anyhow!("member thread panicked"))??;
+        }
+        Ok(())
+    }
+
+    pub fn signed(&self, v: u128) -> i128 {
+        self.field.to_i128(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributed_mul_and_divpub_over_tcp() {
+        let field = Field::paper();
+        // member 1 holds 123, member 2 holds 45; others have no inputs
+        let inputs = vec![vec![123u128], vec![45u128], vec![], vec![], vec![]];
+        let mut mgr = Manager::spawn_local(field, inputs, 0xBEEF).unwrap();
+        let a = mgr.input(1, 0).unwrap();
+        let b = mgr.input(2, 0).unwrap();
+        let ab = mgr.mul(a, b).unwrap();
+        assert_eq!(mgr.reveal(ab).unwrap(), 123 * 45);
+        // ⌊123·45/256⌋ = 21, ±1 protocol error
+        let q = mgr.divpub(ab, 256).unwrap();
+        let got = {
+            let v = mgr.reveal(q).unwrap();
+            mgr.signed(v)
+        };
+        assert!((got - 21).abs() <= 1, "got {got}");
+        mgr.shutdown().unwrap();
+    }
+
+    #[test]
+    fn distributed_three_members_chain() {
+        let field = Field::paper();
+        let inputs = vec![vec![7u128], vec![8u128], vec![9u128]];
+        let mut mgr = Manager::spawn_local(field, inputs, 0xCAFE).unwrap();
+        let a = mgr.input(1, 0).unwrap();
+        let b = mgr.input(2, 0).unwrap();
+        let c = mgr.input(3, 0).unwrap();
+        let ab = mgr.mul(a, b).unwrap();
+        let abc = mgr.mul(ab, c).unwrap();
+        assert_eq!(mgr.reveal(abc).unwrap(), 7 * 8 * 9);
+        mgr.shutdown().unwrap();
+    }
+}

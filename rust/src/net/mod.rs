@@ -1,0 +1,171 @@
+//! Simulated Manager/Member network (§5.2 + Appendix A of the paper).
+//!
+//! The paper's testbed runs one Manager and N Members over WebSockets with a
+//! 10 ms internal latency and reports *message counts*, *traffic* and
+//! *wall-clock time* (Tables 2–3).  Those quantities are deterministic
+//! functions of the protocol schedule, so we reproduce them with a
+//! discrete-event accounting model instead of sleeping through hours of
+//! virtual latency:
+//!
+//! * every logical message is counted exactly (count + serialized bytes);
+//! * virtual time advances per communication *round*: all messages sent in
+//!   one round travel in parallel, costing `latency + max_bytes/bandwidth`;
+//! * the Manager schedules exercises sequentially, exactly like Appendix A:
+//!   a schedule broadcast down, the exercise's internal rounds, then a
+//!   "finished" message from every member — all accounted.
+//!
+//! A real tokio/TCP transport with the same wire format lives in
+//! [`tcp`]; it is used by the smoke-scale distributed test to show the
+//! protocol code actually runs over sockets.
+
+pub mod distributed;
+pub mod tcp;
+
+/// Wire/latency model. Defaults reproduce the paper's setting.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// One-way per-message latency (paper: 10 ms).
+    pub latency_s: f64,
+    /// Link bandwidth in bytes/second (paper: LAN; 1 Gbit/s assumed).
+    pub bandwidth_bps: f64,
+    /// Framing overhead per message: exercise id, sender id, data id, length.
+    pub header_bytes: u64,
+    /// Payload bytes per field element (74-bit prime → 10 bytes).
+    pub share_bytes: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            latency_s: 0.010,
+            bandwidth_bps: 125_000_000.0,
+            header_bytes: 24,
+            share_bytes: 10,
+        }
+    }
+}
+
+/// Exact traffic/time accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NetStats {
+    pub messages: u64,
+    pub bytes: u64,
+    pub rounds: u64,
+    pub exercises: u64,
+    pub virtual_time_s: f64,
+}
+
+impl NetStats {
+    pub fn megabytes(&self) -> f64 {
+        self.bytes as f64 / 1_000_000.0
+    }
+}
+
+/// Discrete-event accountant for the simulated network.
+#[derive(Clone, Debug)]
+pub struct SimNet {
+    pub cfg: NetConfig,
+    pub stats: NetStats,
+    round_max_bytes: u64,
+    round_open: bool,
+}
+
+impl SimNet {
+    pub fn new(cfg: NetConfig) -> Self {
+        SimNet { cfg, stats: NetStats::default(), round_max_bytes: 0, round_open: false }
+    }
+
+    /// Record one message carrying `elems` field elements. Messages recorded
+    /// between two `end_round` calls travel in parallel.
+    pub fn send(&mut self, _from: usize, _to: usize, elems: u64) {
+        let bytes = self.cfg.header_bytes + elems * self.cfg.share_bytes;
+        self.stats.messages += 1;
+        self.stats.bytes += bytes;
+        self.round_max_bytes = self.round_max_bytes.max(bytes);
+        self.round_open = true;
+    }
+
+    /// Close a communication round: latency + serialization of the largest
+    /// message in the round (links are parallel).
+    pub fn end_round(&mut self) {
+        if !self.round_open {
+            return;
+        }
+        self.stats.rounds += 1;
+        self.stats.virtual_time_s +=
+            self.cfg.latency_s + self.round_max_bytes as f64 / self.cfg.bandwidth_bps;
+        self.round_max_bytes = 0;
+        self.round_open = false;
+    }
+
+    /// Account local computation time (measured off the critical path).
+    pub fn compute(&mut self, seconds: f64) {
+        self.stats.virtual_time_s += seconds;
+    }
+
+    /// Manager → members schedule broadcast + members → manager "finished"
+    /// (Appendix A). Called around every exercise by the engine.
+    pub fn exercise_overhead(&mut self, n: usize) {
+        self.stats.exercises += 1;
+        for m in 0..n {
+            self.send(usize::MAX, m, 1); // schedule msg (small payload)
+        }
+        self.end_round();
+        // body rounds happen in between (engine calls send/end_round)
+    }
+
+    pub fn exercise_finish(&mut self, n: usize) {
+        self.end_round(); // flush any open body round
+        for m in 0..n {
+            self.send(m, usize::MAX, 0); // "finished"
+        }
+        self.end_round();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_messages_and_bytes() {
+        let mut net = SimNet::new(NetConfig::default());
+        net.send(0, 1, 3);
+        net.send(1, 2, 1);
+        net.end_round();
+        assert_eq!(net.stats.messages, 2);
+        assert_eq!(net.stats.bytes, 24 + 30 + 24 + 10);
+        assert_eq!(net.stats.rounds, 1);
+        assert!((net.stats.virtual_time_s - (0.010 + 54.0 / 125e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_messages_share_latency() {
+        let mut net = SimNet::new(NetConfig::default());
+        for i in 0..100 {
+            net.send(0, i, 1);
+        }
+        net.end_round();
+        assert_eq!(net.stats.rounds, 1);
+        assert!(net.stats.virtual_time_s < 0.011);
+    }
+
+    #[test]
+    fn empty_round_is_free() {
+        let mut net = SimNet::new(NetConfig::default());
+        net.end_round();
+        net.end_round();
+        assert_eq!(net.stats.rounds, 0);
+        assert_eq!(net.stats.virtual_time_s, 0.0);
+    }
+
+    #[test]
+    fn exercise_overhead_counts_schedule_and_finished() {
+        let mut net = SimNet::new(NetConfig::default());
+        net.exercise_overhead(5);
+        net.exercise_finish(5);
+        assert_eq!(net.stats.messages, 10);
+        assert_eq!(net.stats.exercises, 1);
+        assert_eq!(net.stats.rounds, 2);
+    }
+}

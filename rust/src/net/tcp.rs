@@ -1,0 +1,144 @@
+//! Real TCP transport (std::net + threads) for smoke-scale distributed runs.
+//!
+//! The simulation in [`super::SimNet`] reproduces the paper's accounting;
+//! this module proves the same protocol messages actually move over
+//! sockets.  Each frame is: `exercise_id: u64 | from: u32 | n_elems: u32 |
+//! elems: n × 16-byte little-endian field elements` (the accountant's
+//! 24-byte-header + 10-byte-element model is the paper-calibrated wire
+//! estimate; see DESIGN.md §4).
+//!
+//! The vendored crate set has no async runtime, so this uses blocking
+//! sockets and `std::thread` — entirely adequate for the N ≤ 13 member
+//! smoke tests; the exercise engine itself is transport-agnostic.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::Result;
+
+/// A framed protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub exercise_id: u64,
+    pub from: u32,
+    pub elems: Vec<u128>,
+}
+
+impl Frame {
+    /// Bytes on the wire for this frame.
+    pub fn wire_bytes(&self) -> usize {
+        16 + self.elems.len() * 16
+    }
+}
+
+pub fn write_frame(s: &mut TcpStream, f: &Frame) -> Result<()> {
+    let mut buf = Vec::with_capacity(f.wire_bytes());
+    buf.extend_from_slice(&f.exercise_id.to_le_bytes());
+    buf.extend_from_slice(&f.from.to_le_bytes());
+    buf.extend_from_slice(&(f.elems.len() as u32).to_le_bytes());
+    for e in &f.elems {
+        buf.extend_from_slice(&e.to_le_bytes());
+    }
+    s.write_all(&buf)?;
+    Ok(())
+}
+
+pub fn read_frame(s: &mut TcpStream) -> Result<Frame> {
+    let mut hdr = [0u8; 16];
+    s.read_exact(&mut hdr)?;
+    let exercise_id = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+    let from = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+    let n = u32::from_le_bytes(hdr[12..16].try_into().unwrap()) as usize;
+    let mut body = vec![0u8; n * 16];
+    s.read_exact(&mut body)?;
+    let elems = body
+        .chunks_exact(16)
+        .map(|c| u128::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Frame { exercise_id, from, elems })
+}
+
+/// "Reveal to manager" over real sockets: accept `n` member connections,
+/// sum the first element of each frame mod `p`, reply with the sum.
+pub fn reveal_server_on(listener: TcpListener, n: usize, p: u128) -> Result<u128> {
+    let mut acc = 0u128;
+    let mut conns = Vec::new();
+    for _ in 0..n {
+        let (mut s, _) = listener.accept()?;
+        let f = read_frame(&mut s)?;
+        acc = (acc + f.elems[0] % p) % p;
+        conns.push(s);
+    }
+    for s in conns.iter_mut() {
+        write_frame(s, &Frame { exercise_id: 0, from: u32::MAX, elems: vec![acc] })?;
+    }
+    Ok(acc)
+}
+
+/// Member half of the smoke test: connect, send one share, read the sum.
+pub fn reveal_client(addr: &str, from: u32, share: u128) -> Result<u128> {
+    let mut s = TcpStream::connect(addr)?;
+    write_frame(&mut s, &Frame { exercise_id: 0, from, elems: vec![share] })?;
+    Ok(read_frame(&mut s)?.elems[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn frame_roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let want = Frame { exercise_id: 7, from: 3, elems: vec![1, u128::MAX / 3, 42] };
+        let w2 = want.clone();
+        let srv = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_frame(&mut s).unwrap()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, &w2).unwrap();
+        assert_eq!(srv.join().unwrap(), want);
+    }
+
+    #[test]
+    fn empty_frame_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let want = Frame { exercise_id: 1, from: 0, elems: vec![] };
+        let w2 = want.clone();
+        let srv = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_frame(&mut s).unwrap()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, &w2).unwrap();
+        assert_eq!(srv.join().unwrap(), want);
+    }
+
+    #[test]
+    fn additive_reveal_over_tcp() {
+        use crate::field::Field;
+        use crate::rng::Prng;
+        use crate::sharing::additive::additive_share;
+
+        let f = Field::paper();
+        let mut rng = Prng::seed_from_u64(9);
+        let secret = 123456789u128;
+        let shares = additive_share(&f, secret, 4, &mut rng);
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = thread::spawn(move || reveal_server_on(listener, 4, crate::field::PAPER_P));
+        let mut handles = Vec::new();
+        for (i, sh) in shares.into_iter().enumerate() {
+            let a = addr.clone();
+            handles.push(thread::spawn(move || reveal_client(&a, i as u32, sh)));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().unwrap(), secret);
+        }
+        assert_eq!(srv.join().unwrap().unwrap(), secret);
+    }
+}

@@ -1,0 +1,120 @@
+//! Division of a shared value by a *public* divisor `d` (§3.4).
+//!
+//! The paper's novel trick replaces the integer-share conversion of
+//! Algesheimer–Camenisch–Shoup [14] with a 3-round randomized protocol:
+//!
+//! 1. Alice samples `r ← [0, 2^ρ)`, sets `q = r mod d`, deals `[r], [q]`.
+//! 2. Everyone computes `[z'] = [u] + [r]` and opens `z'` **to Bob only**.
+//! 3. Bob deals `[w]` with `w = z' mod d`.
+//! 4. Locally: `[v] = ([u] + [q] − [w]) · d⁻¹ (mod p)`.
+//!
+//! Then `u + q − w ≡ 0 (mod d)` and `u − d ≤ v·d ≤ u + d`, so `v ∈
+//! [u/d − 1, u/d + 1]` — an approximate integer division with ±1 error.
+//!
+//! **Erratum.** The paper's step 4 prints `[u] − [q] + [w]`, whose residue
+//! mod d is `2(u mod d)`, not 0; the sign must be the one above (their own
+//! correctness argument `u mod d + r mod d − (r+u) mod d = 0` matches the
+//! corrected sign).  `tests::paper_identity_requires_sign_flip` demonstrates
+//! both.
+//!
+//! **Security.** The only opened value is `z' = u + r`, uniform over an
+//! interval of width `2^ρ ≫ u`; Bob learns nothing about `u` unless
+//! `z' ∉ [d, 2^ρ)`, which happens with probability ≤ `d/2^ρ` (ρ = 64 by
+//! default). There must also be no wraparound mod p: `u + 2^ρ < p` — with
+//! `u ≤ 2^62`, `ρ = 64` and `p ≈ 2^73.7` this always holds.
+
+use crate::rng::Rng;
+
+/// Alice's mask: uniform in `[0, 2^ρ)`.
+pub fn sample_r<R: Rng + ?Sized>(rng: &mut R, rho_bits: u32) -> u128 {
+    assert!(rho_bits > 0 && rho_bits < 128);
+    rng.next_u128() & ((1u128 << rho_bits) - 1)
+}
+
+/// The plaintext mirror of the whole protocol (integers, no shares): given
+/// `u`, `d` and Alice/Bob randomness, return the protocol's output `v`.
+/// Used by unit tests and by the Newton plaintext mirror.
+pub fn divpub_plain(u: u128, d: u128, r: u128) -> i128 {
+    let q = (r % d) as i128;
+    let z = u + r;
+    let w = (z % d) as i128;
+    let num = u as i128 + q - w;
+    debug_assert_eq!(num.rem_euclid(d as i128), 0);
+    num / d as i128
+}
+
+/// Worst-case output bounds: `v ∈ [u/d - 1, u/d + 1]`.
+pub fn divpub_error_bound() -> i128 {
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Prng, Rng};
+
+    #[test]
+    fn plain_close_to_true_division() {
+        let mut rng = Prng::seed_from_u64(1);
+        for _ in 0..2000 {
+            let u = rng.gen_bits(40);
+            let d = 1 + rng.gen_bits(20);
+            let r = sample_r(&mut rng, 64);
+            let v = divpub_plain(u, d, r);
+            let want = (u / d) as i128;
+            assert!((v - want).abs() <= divpub_error_bound(), "u={u} d={d} v={v}");
+        }
+    }
+
+    #[test]
+    fn paper_identity_requires_sign_flip() {
+        // With the paper's printed sign ([u] - [q] + [w]) the residue mod d
+        // is 2(u mod d) ≠ 0 in general; with the corrected sign it is 0.
+        let (u, d, r) = (1001u128, 256u128, 999_983u128);
+        let q = (r % d) as i128;
+        let w = ((u + r) % d) as i128;
+        let corrected = u as i128 + q - w;
+        let printed = u as i128 - q + w;
+        assert_eq!(corrected.rem_euclid(d as i128), 0);
+        assert_ne!(printed.rem_euclid(d as i128), 0);
+        assert_eq!(printed.rem_euclid(d as i128), (2 * (u % d) as i128) % d as i128);
+    }
+
+    #[test]
+    fn exact_when_u_multiple_of_d() {
+        let mut rng = Prng::seed_from_u64(2);
+        for _ in 0..200 {
+            let d = 1 + rng.gen_range_u128(999);
+            let k = rng.gen_bits(30);
+            let u = k * d;
+            let r = sample_r(&mut rng, 64);
+            // u multiple of d: still ±1 (masking may carry), but centered.
+            assert!((divpub_plain(u, d, r) - k as i128).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn mask_stays_below_two_pow_rho() {
+        let mut rng = Prng::seed_from_u64(3);
+        for rho in [8u32, 32, 64, 80] {
+            for _ in 0..100 {
+                assert!(sample_r(&mut rng, rho) < 1u128 << rho);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_divpub_error_and_residue() {
+        crate::rng::property(512, |rng| {
+            let u = rng.gen_bits(62);
+            let d = 1 + rng.gen_bits(30);
+            let r = sample_r(rng, 64);
+            let v = divpub_plain(u, d, r);
+            let want = (u / d) as i128;
+            assert!((v - want).abs() <= 1, "u={u} d={d}");
+            let q = (r % d) as i128;
+            let w = ((u + r) % d) as i128;
+            assert_eq!((u as i128 + q - w).rem_euclid(d as i128), 0);
+        });
+    }
+}

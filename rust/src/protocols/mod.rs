@@ -1,0 +1,20 @@
+//! The paper's secure-computation protocols (§3.4 + §4).
+//!
+//! * [`engine`]   — the Manager/Member exercise engine: per-member share
+//!   stores, the exercise vocabulary of Appendix A (input, linear ops,
+//!   multiplication, reveal, division-by-public), exact message accounting
+//!   through [`crate::net::SimNet`].
+//! * [`divpub`]   — the paper's novel randomized division-by-public-`d`
+//!   (§3.4, the Alice/Bob trick), as pure party-local pieces.
+//! * [`newton`]   — the progressive-precision Newton inverse `[d·e/b]`
+//!   starting from u=1 (the paper's headline protocol).
+//! * [`division`] — the full private division `⌊Σnum/Σden⌋·d` pipeline
+//!   (Eq. 3): numerator×inverse, then secure truncation.
+
+pub mod divpub;
+pub mod division;
+pub mod engine;
+pub mod newton;
+
+pub use division::DivisionConfig;
+pub use engine::{DataId, Engine, EngineConfig, Schedule};

@@ -1,0 +1,246 @@
+//! Progressive-precision Newton inverse of a secret-shared denominator
+//! (§3.4) — the paper's main protocol.
+//!
+//! Given polynomial shares `[b]` of an integer `1 ≤ b ≤ bmax` and the public
+//! normalization `d`, compute shares `[u] ≈ d·E/b` for a public final scale
+//! `E`, using only secure multiplications and divisions-by-public.
+//!
+//! Differences from Algesheimer–Camenisch–Shoup [14] that the paper claims
+//! (and we implement):
+//!  * no representation conversion — everything stays in polynomial shares;
+//!  * no initial guess `d/2b ≤ u ≤ d/b` is needed: start from `u = 1`
+//!    (an *under*estimate) and run `⌈log₂ D₀⌉ (+t)` warm-up iterations —
+//!    since `f_{i+1} = f_i²/(2f_i − 1)` halves the exponent of `f = D/(b·u)`
+//!    each step, `f ≤ 2` after `⌈log₂ D₀⌉` steps (paper §3.4);
+//!  * per-iteration precision doubling thereafter (`u ← u(2 − ub/(d·e))`,
+//!    `e ← 2e`) for `n = 16` refinement rounds (paper §5.3).
+//!
+//! We add `g` guard bits to the iteration (scale the quotient by `G = 2^g`
+//! before the division-by-public and divide back after), which keeps the
+//! ±1 rounding of each divpub at relative size `2⁻ᵍ` instead of `1/f` —
+//! without this the iteration can oscillate or collapse to 0 near
+//! convergence (`s = 2` exactly makes `u(2−s) = 0`).  This is our
+//! implementation refinement of the same protocol; the ablation bench
+//! `ablation_newton` sweeps `g`, including the paper-literal `g = 0`.
+
+use super::engine::{DataId, Engine};
+use crate::rng::Rng;
+#[allow(unused_imports)]
+use crate::rng::Prng as _PrngAlias;
+
+#[derive(Clone, Copy, Debug)]
+pub struct NewtonConfig {
+    /// Normalization factor (paper: d = 256).
+    pub d: u128,
+    /// Refinement (precision-doubling) iterations (paper: n = 16).
+    pub refine_iters: u32,
+    /// Extra warm-up guard iterations (paper: t = 5).
+    pub t_extra: u32,
+    /// Guard bits for the in-iteration divisions (0 = paper-literal).
+    pub guard_bits: u32,
+}
+
+impl Default for NewtonConfig {
+    fn default() -> Self {
+        NewtonConfig { d: 256, refine_iters: 16, t_extra: 5, guard_bits: 10 }
+    }
+}
+
+fn pow2_ceil(x: u128) -> u128 {
+    x.max(1).next_power_of_two()
+}
+
+fn ceil_log2(x: u128) -> u32 {
+    assert!(x >= 1);
+    128 - (x - 1).leading_zeros()
+}
+
+/// Public schedule derived from (d, bmax): initial scale, warmup count and
+/// the final scale E. Everything here is public information.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NewtonPlan {
+    pub e0: u128,
+    pub d0: u128,
+    pub warmup: u32,
+    pub refine: u32,
+    pub final_scale: u128, // E = e0 << refine
+}
+
+pub fn plan(cfg: &NewtonConfig, bmax: u128) -> NewtonPlan {
+    assert!(cfg.d >= 2 && bmax >= 1);
+    // D0 = d*e0 must exceed bmax so u=1 underestimates D0/b.
+    let e0 = pow2_ceil((2 * bmax).div_ceil(cfg.d));
+    let d0 = cfg.d * e0;
+    let warmup = ceil_log2(d0) + cfg.t_extra;
+    let refine = cfg.refine_iters;
+    let final_scale = e0 << refine;
+    // Overflow budget: the largest divpub input is u*b*G ≤ 2^62 (see
+    // divpub security note). u ≤ 2·d·E, b ≤ bmax, G = 2^g. This bound
+    // assumes b ≥ 1 — the training coordinator guarantees it by +1
+    // (Laplace) smoothing of denominators; for b = 0 the value u grows to
+    // at most 2^(warmup + 2·refine), which stays below the masking window
+    // but erodes its slack (documented degenerate case).
+    let u_bits = 128 - (2 * cfg.d * final_scale).leading_zeros();
+    let b_bits = 128 - bmax.leading_zeros();
+    assert!(
+        u_bits + b_bits + cfg.guard_bits <= 62,
+        "Newton overflow budget exceeded: u={u_bits}b b={b_bits}b g={}",
+        cfg.guard_bits
+    );
+    NewtonPlan { e0, d0, warmup, refine, final_scale }
+}
+
+/// Plaintext mirror of the protocol: identical integer arithmetic, with the
+/// same divpub randomness model. Returns (u ≈ d·E/b, plan).
+pub fn newton_plain<R: Rng + ?Sized>(
+    b: u128,
+    bmax: u128,
+    cfg: &NewtonConfig,
+    rho_bits: u32,
+    rng: &mut R,
+) -> (i128, NewtonPlan) {
+    let pl = plan(cfg, bmax);
+    let g = 1i128 << cfg.guard_bits;
+    let mut u: i128 = 1;
+    let mut dscale = pl.d0 as i128;
+    for it in 0..(pl.warmup + pl.refine) {
+        if it >= pl.warmup {
+            dscale *= 2;
+            u *= 2;
+        }
+        let t = u * b as i128;
+        let s = super::divpub::divpub_plain((t * g) as u128, dscale as u128,
+                                            super::divpub::sample_r(rng, rho_bits));
+        let v = u * (2 * g - s);
+        u = super::divpub::divpub_plain(v.max(0) as u128, g as u128,
+                                        super::divpub::sample_r(rng, rho_bits));
+    }
+    (u, pl)
+}
+
+/// The secure protocol over the exercise engine. `[b]` must hold an integer
+/// in `[0, bmax]`; returns `([u], plan)` with `u ≈ d·E/b` (u is the shared
+/// approximate inverse, E = plan.final_scale; for b = 0 the result is a
+/// bounded garbage value that multiplies to 0 weights downstream).
+pub fn newton_inverse(eng: &mut Engine, b: DataId, bmax: u128, cfg: &NewtonConfig)
+    -> (DataId, NewtonPlan) {
+    let pl = plan(cfg, bmax);
+    let g = 1i128 << cfg.guard_bits;
+    let mut u = eng.constant(1);
+    let mut dscale = pl.d0;
+    for it in 0..(pl.warmup + pl.refine) {
+        if it >= pl.warmup {
+            dscale *= 2;
+            u = eng.lin(0, &[(2, u)]);
+        }
+        let t = eng.mul(u, b);
+        let tg = eng.lin(0, &[(g, t)]);
+        let s = eng.divpub(tg, dscale);
+        let corr = eng.lin(2 * g, &[(-1, s)]);
+        let v = eng.mul(u, corr);
+        u = eng.divpub(v, g as u128);
+    }
+    (u, pl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Field;
+    use crate::protocols::engine::EngineConfig;
+    use crate::rng::Prng;
+
+    fn close(u: i128, b: u128, pl: &NewtonPlan, d: u128) -> bool {
+        let want = (d * pl.final_scale / b) as i128;
+        let tol = (want / 64).max(4); // ≤ ~1.6% relative + small absolute
+        (u - want).abs() <= tol
+    }
+
+    #[test]
+    fn plain_converges_across_b_range() {
+        let cfg = NewtonConfig::default();
+        let mut rng = Prng::seed_from_u64(1);
+        let bmax = 16384u128;
+        for b in [1u128, 2, 3, 10, 100, 255, 256, 1000, 9999, 16000, 16384] {
+            let (u, pl) = newton_plain(b, bmax, &cfg, 64, &mut rng);
+            assert!(close(u, b, &pl, cfg.d), "b={b}: u={u} want={}", cfg.d * pl.final_scale / b);
+        }
+    }
+
+    #[test]
+    fn plain_handles_b_zero_bounded() {
+        // b = 0 is degenerate (coordinator +1-smooths it away); the value
+        // must stay non-negative and below 2^(warmup + 2·refine) + slack so
+        // nothing wraps mod p.
+        let cfg = NewtonConfig::default();
+        let mut rng = Prng::seed_from_u64(2);
+        let (u, pl) = newton_plain(0, 1000, &cfg, 64, &mut rng);
+        let bound = 1i128 << (pl.warmup + 2 * pl.refine + 2);
+        assert!(u >= 0 && u <= bound, "u={u} bound={bound}");
+    }
+
+    #[test]
+    fn warmup_count_matches_paper_analysis() {
+        // ⌈log₂ D₀⌉ warmup: for d=256, bmax=16181 → e0=128, D0=2^15,
+        // warmup = 15 + t_extra.
+        let cfg = NewtonConfig::default();
+        let pl = plan(&cfg, 16181);
+        assert_eq!(pl.e0, 128);
+        assert_eq!(pl.d0, 1 << 15);
+        assert_eq!(pl.warmup, 15 + cfg.t_extra);
+        assert_eq!(pl.final_scale, 128 << 16);
+    }
+
+    #[test]
+    fn protocol_matches_quality_of_plain() {
+        let cfg = NewtonConfig::default();
+        let bmax = 2000u128;
+        for n in [3usize, 5] {
+            let mut eng = Engine::new(Field::paper(), EngineConfig::new(n));
+            for b in [1u128, 7, 256, 1999] {
+                let bid = eng.input(1, &[b])[0];
+                let (uid, pl) = newton_inverse(&mut eng, bid, bmax, &cfg);
+                let u = eng.peek_int(uid);
+                assert!(close(u, b, &pl, cfg.d), "n={n} b={b}: u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_literal_g0_can_collapse_guard_bits_fix_it() {
+        // g=0 (paper-literal iteration): the ±1 divpub rounding can make
+        // s = 2 exactly at convergence, collapsing u(2−s) to 0 — this is
+        // precisely why we add guard bits. The ablation_newton bench
+        // quantifies the error distribution across g.
+        let bmax = 1000u128;
+        let mut collapsed_g0 = 0;
+        let mut bad_g10 = 0;
+        for b in 1..=100u128 {
+            let cfg0 = NewtonConfig { guard_bits: 0, ..NewtonConfig::default() };
+            let mut rng = Prng::seed_from_u64(3 + b as u64);
+            let (u0, pl) = newton_plain(b, bmax, &cfg0, 64, &mut rng);
+            let want = (cfg0.d * pl.final_scale / b) as f64;
+            assert!(u0 >= 0, "g=0 must stay non-negative");
+            if ((u0 as f64) - want).abs() / want.max(1.0) > 0.5 {
+                collapsed_g0 += 1;
+            }
+            let cfg10 = NewtonConfig::default();
+            let (u1, pl1) = newton_plain(b, bmax, &cfg10, 64, &mut rng);
+            if !close(u1, b, &pl1, cfg10.d) {
+                bad_g10 += 1;
+            }
+        }
+        assert!(collapsed_g0 > 0, "expected g=0 to show collapses");
+        assert_eq!(bad_g10, 0, "g=10 must be uniformly accurate");
+    }
+
+    #[test]
+    fn prop_plain_accuracy() {
+        let cfg = NewtonConfig::default();
+        crate::rng::property(64, |rng| {
+            let b = 1 + rng.gen_range_u128(15999);
+            let (u, pl) = newton_plain(b, 16000, &cfg, 64, rng);
+            assert!(close(u, b, &pl, cfg.d), "b={} u={}", b, u);
+        });
+    }
+}

@@ -1,0 +1,216 @@
+//! PJRT runtime: load and execute the AOT'd HLO artifacts from rust.
+//!
+//! This is the Layer-3 ↔ Layer-2 bridge: `make artifacts` lowers the JAX
+//! counts/eval graphs (which call the Pallas layer kernels) to HLO *text*,
+//! and this module compiles and runs them on the PJRT CPU client — python
+//! never executes on the request path.  Pattern follows
+//! /opt/xla-example/load_hlo (text interchange because xla_extension 0.5.1
+//! rejects jax ≥ 0.5's 64-bit-id protos).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Json;
+use crate::spn::structure::Structure;
+
+/// Artifact bundle for one dataset structure.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub batch: usize,
+    pub num_vars: usize,
+    pub num_params: usize,
+    pub counts_out: usize,
+    pub structure_path: PathBuf,
+    pub counts_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+}
+
+/// Parsed artifacts/manifest.json.
+pub fn read_manifest(dir: impl AsRef<Path>) -> Result<Vec<ArtifactInfo>> {
+    let dir = dir.as_ref();
+    let txt = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {:?}/manifest.json — run `make artifacts`", dir))?;
+    let j = Json::parse(&txt).map_err(|e| anyhow!("{e}"))?;
+    let mut out = Vec::new();
+    if let Json::Obj(ds) = j.get("datasets") {
+        for (name, info) in ds {
+            out.push(ArtifactInfo {
+                name: name.clone(),
+                batch: info.get("batch").as_usize(),
+                num_vars: info.get("num_vars").as_usize(),
+                num_params: info.get("num_params").as_usize(),
+                counts_out: info.get("counts_out").as_usize(),
+                structure_path: dir.join(info.get("structure").as_str()),
+                counts_hlo: dir.join(info.get("counts_hlo").as_str()),
+                eval_hlo: dir.join(info.get("eval_hlo").as_str()),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// The PJRT client; compiled executables borrow from it logically (the xla
+/// crate keeps its own refcounts).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn load_counts(&self, info: &ArtifactInfo) -> Result<CountsExe> {
+        let proto = xla::HloModuleProto::from_text_file(
+            info.counts_hlo.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(CountsExe {
+            exe,
+            batch: info.batch,
+            num_vars: info.num_vars,
+            out_len: info.counts_out,
+        })
+    }
+
+    pub fn load_eval(&self, info: &ArtifactInfo) -> Result<EvalExe> {
+        let proto = xla::HloModuleProto::from_text_file(
+            info.eval_hlo.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(EvalExe {
+            exe,
+            batch: info.batch,
+            num_vars: info.num_vars,
+            num_params: info.num_params,
+        })
+    }
+}
+
+/// Compiled counts graph: (X:(B,nv) f32, row_mask:(B,) f32) -> (counts,).
+pub struct CountsExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub num_vars: usize,
+    pub out_len: usize,
+}
+
+impl CountsExe {
+    /// Counts over a shard of any size: chunked through the fixed-batch
+    /// executable with row masking on the tail chunk.
+    pub fn counts(&self, shard: &[Vec<u8>]) -> Result<Vec<u64>> {
+        let mut acc = vec![0u64; self.out_len];
+        for chunk in shard.chunks(self.batch) {
+            let mut xbuf = vec![0f32; self.batch * self.num_vars];
+            let mut mask = vec![0f32; self.batch];
+            for (i, row) in chunk.iter().enumerate() {
+                debug_assert_eq!(row.len(), self.num_vars);
+                for (v, &b) in row.iter().enumerate() {
+                    xbuf[i * self.num_vars + v] = b as f32;
+                }
+                mask[i] = 1.0;
+            }
+            let x = xla::Literal::vec1(&xbuf)
+                .reshape(&[self.batch as i64, self.num_vars as i64])?;
+            let m = xla::Literal::vec1(&mask);
+            let result = self.exe.execute::<xla::Literal>(&[x, m])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            let vals = out.to_vec::<f32>()?;
+            anyhow::ensure!(vals.len() == self.out_len, "counts output length mismatch");
+            for (a, v) in acc.iter_mut().zip(vals) {
+                // per-chunk counts are small integers; exact in f32
+                *a += v.round() as u64;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+/// Compiled eval graph: (X, marg, params) -> (logS per row,).
+pub struct EvalExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub num_vars: usize,
+    pub num_params: usize,
+}
+
+impl EvalExe {
+    /// Log-likelihoods for up to `batch` rows (padded internally).
+    pub fn logeval(&self, rows: &[Vec<u8>], marg: &[bool], params: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(rows.len() <= self.batch, "eval chunk too large");
+        anyhow::ensure!(params.len() == self.num_params);
+        let mut xbuf = vec![0f32; self.batch * self.num_vars];
+        for (i, row) in rows.iter().enumerate() {
+            for (v, &b) in row.iter().enumerate() {
+                xbuf[i * self.num_vars + v] = b as f32;
+            }
+        }
+        let x = xla::Literal::vec1(&xbuf)
+            .reshape(&[self.batch as i64, self.num_vars as i64])?;
+        let mg: Vec<f32> = marg.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect();
+        let mgl = xla::Literal::vec1(&mg);
+        let ps: Vec<f32> = params.iter().map(|&p| p as f32).collect();
+        let psl = xla::Literal::vec1(&ps);
+        let result = self.exe.execute::<xla::Literal>(&[x, mgl, psl])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let vals = out.to_vec::<f32>()?;
+        Ok(vals[..rows.len()].iter().map(|&v| v as f64).collect())
+    }
+
+    /// Mean log-likelihood over an arbitrary-size dataset (chunked).
+    pub fn mean_loglik(&self, data: &[Vec<u8>], params: &[f64]) -> Result<f64> {
+        let marg = vec![false; self.num_vars];
+        let mut tot = 0.0;
+        for chunk in data.chunks(self.batch) {
+            tot += self.logeval(chunk, &marg, params)?.iter().sum::<f64>();
+        }
+        Ok(tot / data.len() as f64)
+    }
+}
+
+/// Convenience: load structure + counts + eval for one dataset name.
+pub struct DatasetRuntime {
+    pub structure: Structure,
+    pub counts: CountsExe,
+    pub eval: EvalExe,
+}
+
+pub fn load_dataset(rt: &Runtime, dir: impl AsRef<Path>, name: &str) -> Result<DatasetRuntime> {
+    let infos = read_manifest(&dir)?;
+    let info = infos
+        .iter()
+        .find(|i| i.name == name)
+        .ok_or_else(|| anyhow!("dataset {name} not in manifest"))?;
+    Ok(DatasetRuntime {
+        structure: Structure::load(&info.structure_path)?,
+        counts: rt.load_counts(info)?,
+        eval: rt.load_eval(info)?,
+    })
+}
+
+/// Default artifacts directory (crate root / artifacts).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_if_present() {
+        let Ok(infos) = read_manifest(default_artifacts_dir()) else { return };
+        assert!(infos.iter().any(|i| i.name == "toy"));
+        for i in &infos {
+            assert!(i.batch > 0 && i.counts_out > 0);
+        }
+    }
+}

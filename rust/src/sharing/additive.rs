@@ -1,0 +1,110 @@
+//! Additive secret sharing over `Z_p` (§2.2.2).
+//!
+//! Shares of `x` are `x_1..x_n` with `Σ x_i = x (mod p)`; all but the last
+//! are uniform.  `jrsz` is the paper's *joint random sharing of zero*
+//! protocol, `JRSZ(Z_p)`: a dealer (third party / manager) hands each party
+//! a share of 0, consumed by the approximate path (§3.2) to mask the locally
+//! computed fractions.
+
+use crate::rng::Rng;
+
+use crate::field::Field;
+
+/// Split `x` into `n` additive shares.
+pub fn additive_share<R: Rng + ?Sized>(f: &Field, x: u128, n: usize, rng: &mut R) -> Vec<u128> {
+    assert!(n >= 1);
+    let mut shares = Vec::with_capacity(n);
+    let mut acc = 0u128;
+    for _ in 0..n - 1 {
+        let s = f.rand(rng);
+        acc = f.add(acc, s);
+        shares.push(s);
+    }
+    shares.push(f.sub(x % f.p, acc));
+    shares
+}
+
+/// Reconstruct from all `n` additive shares.
+pub fn reconstruct_additive(f: &Field, shares: &[u128]) -> u128 {
+    f.sum(shares)
+}
+
+/// Joint random sharing of zero: `n` shares summing to 0 mod p.
+pub fn jrsz<R: Rng + ?Sized>(f: &Field, n: usize, rng: &mut R) -> Vec<u128> {
+    additive_share(f, 0, n, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{Field, EXAMPLE_P};
+    use crate::rng::Prng;
+
+    #[test]
+    fn roundtrip() {
+        let f = Field::paper();
+        let mut rng = Prng::seed_from_u64(1);
+        for _ in 0..100 {
+            let x = f.rand(&mut rng);
+            let sh = additive_share(&f, x, 7, &mut rng);
+            assert_eq!(reconstruct_additive(&f, &sh), x);
+        }
+    }
+
+    #[test]
+    fn jrsz_sums_to_zero() {
+        let f = Field::new(EXAMPLE_P);
+        let mut rng = Prng::seed_from_u64(2);
+        for n in 1..10 {
+            let sh = jrsz(&f, n, &mut rng);
+            assert_eq!(reconstruct_additive(&f, &sh), 0);
+        }
+    }
+
+    #[test]
+    fn shares_are_additive_homomorphic() {
+        let f = Field::paper();
+        let mut rng = Prng::seed_from_u64(3);
+        let (x, y) = (f.rand(&mut rng), f.rand(&mut rng));
+        let sx = additive_share(&f, x, 5, &mut rng);
+        let sy = additive_share(&f, y, 5, &mut rng);
+        let sz: Vec<u128> = sx.iter().zip(&sy).map(|(&a, &b)| f.add(a, b)).collect();
+        assert_eq!(reconstruct_additive(&f, &sz), f.add(x, y));
+    }
+
+    #[test]
+    fn single_party_degenerates_to_value() {
+        let f = Field::paper();
+        let mut rng = Prng::seed_from_u64(4);
+        let sh = additive_share(&f, 42, 1, &mut rng);
+        assert_eq!(sh, vec![42]);
+    }
+
+    #[test]
+    fn first_shares_are_uniformish() {
+        // Chi-square-lite: bucket the first share of many sharings of the
+        // SAME secret; counts should not concentrate (secrecy smoke test).
+        let f = Field::new(EXAMPLE_P);
+        let mut rng = Prng::seed_from_u64(5);
+        let mut buckets = [0u32; 16];
+        for _ in 0..4096 {
+            let sh = additive_share(&f, 123, 3, &mut rng);
+            buckets[(sh[0] % 16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((150..=370).contains(&b), "bucket skew: {buckets:?}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        let f = Field::new(EXAMPLE_P);
+        crate::rng::property(128, |rng| {
+            let x = f.rand(rng);
+            let n = 1 + rng.gen_range_u64(11) as usize;
+            let sh = additive_share(&f, x, n, rng);
+            assert_eq!(sh.len(), n);
+            assert_eq!(reconstruct_additive(&f, &sh), x);
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! SQ2PQ: additive-to-polynomial share conversion [14] (§2.2.2).
+//!
+//! Each party Shamir-deals its additive share; every party then sums the
+//! sub-shares it received.  Because Shamir sharing is linearly homomorphic,
+//! the resulting polynomial shares encode `Σ additive_i = x`.
+//!
+//! This module provides the party-local pieces; the exercise engine in
+//! `protocols::engine` wires them with message accounting.
+
+use crate::rng::Rng;
+
+use super::shamir::ShamirCtx;
+
+/// Party-local half of SQ2PQ: deal one's additive share as Shamir shares.
+/// Returns `n` sub-shares, entry `j` to be sent to party `j+1`.
+pub fn sq2pq_local_deal<R: Rng + ?Sized>(
+    ctx: &ShamirCtx,
+    additive_share: u128,
+    rng: &mut R,
+) -> Vec<u128> {
+    ctx.share(additive_share, rng)
+}
+
+/// Combine the sub-shares a party received (one from each dealer).
+pub fn sq2pq_combine(ctx: &ShamirCtx, received: &[u128]) -> u128 {
+    ctx.f.sum(received)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Field;
+    use crate::sharing::additive::additive_share;
+    use crate::rng::Prng;
+
+    fn run_sq2pq(n: usize, x: u128, seed: u64) -> (ShamirCtx, Vec<u128>) {
+        let f = Field::paper();
+        let ctx = ShamirCtx::new(f, n);
+        let mut rng = Prng::seed_from_u64(seed);
+        let adds = additive_share(&f, x, n, &mut rng);
+        // deal: dealt[i][j] = sub-share from dealer i to party j
+        let dealt: Vec<Vec<u128>> = adds
+            .iter()
+            .map(|&a| sq2pq_local_deal(&ctx, a, &mut rng))
+            .collect();
+        // combine: party j sums column j
+        let poly: Vec<u128> = (0..n)
+            .map(|j| sq2pq_combine(&ctx, &dealt.iter().map(|row| row[j]).collect::<Vec<_>>()))
+            .collect();
+        (ctx, poly)
+    }
+
+    #[test]
+    fn converts_and_reconstructs() {
+        for n in [1, 3, 5, 13] {
+            let (ctx, poly) = run_sq2pq(n, 987654321, 7);
+            assert_eq!(ctx.reconstruct(&poly), 987654321);
+        }
+    }
+
+    #[test]
+    fn result_is_degree_t() {
+        // t+1 shares suffice after conversion.
+        let (ctx, poly) = run_sq2pq(7, 42, 8);
+        let pts: Vec<(usize, u128)> = (1..=ctx.t + 1).map(|i| (i, poly[i - 1])).collect();
+        assert_eq!(ctx.reconstruct_subset(&pts, ctx.t), 42);
+    }
+
+    #[test]
+    fn prop_sq2pq() {
+        crate::rng::property(64, |rng| {
+            use crate::rng::Rng;
+            let x = rng.gen_range_u128(crate::field::PAPER_P);
+            let n = 1 + rng.gen_range_u64(9) as usize;
+            let seed = rng.next_u64();
+            let (ctx, poly) = run_sq2pq(n, x, seed);
+            assert_eq!(ctx.reconstruct(&poly), x);
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Secret-sharing schemes (§2.2.2 of the paper).
+//!
+//! * [`additive`] — additive sharing over `Z_p` and the *joint random
+//!   sharing of zero* (JRSZ) used by the approximate path (§3.2).
+//! * [`shamir`]   — Shamir polynomial sharing with Lagrange reconstruction
+//!   and the degree-reduction combinators that power secure multiplication.
+//! * [`convert`]  — SQ2PQ [14]: additive → polynomial share conversion.
+
+pub mod additive;
+pub mod convert;
+pub mod shamir;
+
+pub use additive::{additive_share, jrsz, reconstruct_additive};
+pub use convert::sq2pq_local_deal;
+pub use shamir::ShamirCtx;

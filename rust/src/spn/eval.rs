@@ -1,0 +1,249 @@
+//! Batched layered evaluation in rust — the plaintext mirror of the AOT
+//! artifacts (counts and log-eval).
+//!
+//! On the request path the PJRT runtime executes the HLO artifacts; this
+//! module provides the same semantics in portable rust for (a) cross-checks
+//! between the two implementations (integration test
+//! `runtime_matches_native`), (b) environments without artifacts, and
+//! (c) the centralized "oracle" training used to verify the MPC result.
+
+use super::structure::{LayerKind, Structure};
+
+/// Bottom-up positivity for one instance: 1.0/0.0 per node, layer by layer
+/// (leaf gate claims, product AND, sum OR). Returns per-layer vectors with
+/// layer 0 = leaves.
+pub fn positivity(st: &Structure, x: &[u8]) -> Vec<Vec<f64>> {
+    let w0 = st.num_leaves();
+    let mut pos_leaf = vec![0.0; w0];
+    for i in 0..w0 {
+        let claim = st.leaf_claim[i];
+        pos_leaf[i] = if claim < 0 || x[st.leaf_var[i]] as i64 == claim { 1.0 } else { 0.0 };
+    }
+    let mut out = vec![pos_leaf];
+    for (li, l) in st.layers.iter().enumerate() {
+        let prev_w = if li > 0 { st.layer_widths[li] } else { 0 };
+        let mut acc = vec![0.0f64; l.width];
+        let mut deg = vec![0usize; l.width];
+        for (&r, &c) in l.rows.iter().zip(&l.cols) {
+            let v = if c < prev_w { out[li][c] } else { out[0][c - prev_w] };
+            match l.kind {
+                LayerKind::Product => {
+                    deg[r] += 1;
+                    acc[r] += v;
+                }
+                LayerKind::Sum => acc[r] = f64::max(acc[r], v),
+            }
+        }
+        if l.kind == LayerKind::Product {
+            for r in 0..l.width {
+                acc[r] = if acc[r] >= deg[r] as f64 - 0.5 { 1.0 } else { 0.0 };
+            }
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// Top-down activation from the bottom-up positivity (tree semantics:
+/// act(child) = act(parent) AND pos(child); root act = pos(root)).
+/// Returns (per-layer activations incl. layer 0 = leaves).
+pub fn activation(st: &Structure, pos: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let w0 = st.num_leaves();
+    let nl = st.layers.len();
+    let mut act: Vec<Vec<f64>> = st.layer_widths.iter().map(|&w| vec![0.0; w]).collect();
+    act[nl] = pos[nl].clone();
+    for li in (0..nl).rev() {
+        let l = &st.layers[li];
+        let prev_w = if li > 0 { st.layer_widths[li] } else { 0 };
+        // clone the parent activations to appease the borrow checker cheaply
+        let parent = act[li + 1].clone();
+        for (&r, &c) in l.rows.iter().zip(&l.cols) {
+            let down = parent[r];
+            if c < prev_w {
+                let v = down * pos[li][c];
+                if v > act[li][c] {
+                    act[li][c] = v;
+                }
+            } else {
+                let lf = c - prev_w;
+                let v = down * pos[0][lf];
+                if v > act[0][lf] {
+                    act[0][lf] = v;
+                }
+            }
+        }
+        let _ = w0;
+    }
+    act
+}
+
+/// The counts vector over a dataset shard: activation counts for all nodes
+/// (leaves then each layer) followed by `act ∧ (x_v = 1)` counts per leaf —
+/// byte-for-byte the artifact's output semantics.
+pub fn counts(st: &Structure, data: &[Vec<u8>]) -> Vec<u64> {
+    let w0 = st.num_leaves();
+    let mut cnt = vec![0u64; st.counts_len()];
+    for x in data {
+        let pos = positivity(st, x);
+        let act = activation(st, &pos);
+        let mut off = 0usize;
+        for layer_act in &act {
+            for (i, &a) in layer_act.iter().enumerate() {
+                if a > 0.5 {
+                    cnt[off + i] += 1;
+                }
+            }
+            off += layer_act.len();
+        }
+        for i in 0..w0 {
+            if act[0][i] > 0.5 && x[st.leaf_var[i]] == 1 {
+                cnt[st.total_nodes + i] += 1;
+            }
+        }
+    }
+    cnt
+}
+
+/// Log-domain evaluation of one instance given parameters in [0,1]
+/// (sum weights then leaf thetas, matching the artifact's input layout).
+/// `marg[v] = true` marginalizes variable v.
+pub fn logeval(st: &Structure, x: &[u8], marg: &[bool], params: &[f64]) -> f64 {
+    let w0 = st.num_leaves();
+    let nse = st.num_sum_edges;
+    let mut leaf_ll = vec![0.0f64; w0];
+    for i in 0..w0 {
+        let v = st.leaf_var[i];
+        if marg[v] {
+            leaf_ll[i] = 0.0;
+        } else {
+            let th = params[nse + i].clamp(1e-9, 1.0 - 1e-9);
+            leaf_ll[i] = if x[v] == 1 { th.ln() } else { (1.0 - th).ln() };
+        }
+    }
+    let mut vals = vec![leaf_ll.clone()];
+    for (li, l) in st.layers.iter().enumerate() {
+        let prev_w = if li > 0 { st.layer_widths[li] } else { 0 };
+        let get = |c: usize, vals: &Vec<Vec<f64>>| -> f64 {
+            if c < prev_w {
+                vals[li][c]
+            } else {
+                vals[0][c - prev_w]
+            }
+        };
+        let out = match l.kind {
+            LayerKind::Product => {
+                let mut acc = vec![0.0f64; l.width];
+                for (&r, &c) in l.rows.iter().zip(&l.cols) {
+                    acc[r] += get(c, &vals);
+                }
+                acc
+            }
+            LayerKind::Sum => {
+                let mut terms: Vec<Vec<f64>> = vec![Vec::new(); l.width];
+                for ((&r, &c), &p) in l.rows.iter().zip(&l.cols).zip(&l.param) {
+                    let w = params[p as usize].max(1e-30).ln();
+                    terms[r].push(w + get(c, &vals));
+                }
+                terms
+                    .into_iter()
+                    .map(|t| {
+                        let m = t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                        m + t.iter().map(|v| (v - m).exp()).sum::<f64>().ln()
+                    })
+                    .collect()
+            }
+        };
+        vals.push(out);
+    }
+    vals[st.layers.len()][0]
+}
+
+/// Mean log-likelihood of a dataset.
+pub fn mean_loglik(st: &Structure, data: &[Vec<u8>], params: &[f64]) -> f64 {
+    let marg = vec![false; st.num_vars];
+    let s: f64 = data.iter().map(|x| logeval(st, x, &marg, params)).sum();
+    s / data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Prng, Rng};
+
+    fn toy() -> Option<Structure> {
+        let p = format!("{}/artifacts/toy.structure.json", env!("CARGO_MANIFEST_DIR"));
+        std::fs::read_to_string(p).ok().map(|s| Structure::from_json_str(&s).unwrap())
+    }
+
+    fn rand_params(st: &Structure, rng: &mut Prng) -> Vec<f64> {
+        let mut p = vec![0.0; st.num_params];
+        for g in &st.sum_groups {
+            let mut tot = 0.0;
+            for &i in g {
+                p[i] = 0.05 + rng.gen_f64();
+                tot += p[i];
+            }
+            for &i in g {
+                p[i] /= tot;
+            }
+        }
+        for i in 0..st.num_leaves() {
+            let claim = st.leaf_claim[i];
+            p[st.num_sum_edges + i] = match claim {
+                1 => 0.95,
+                0 => 0.05,
+                _ => 0.2 + 0.6 * rng.gen_f64(),
+            };
+        }
+        p
+    }
+
+    #[test]
+    fn selectivity_and_den_identity() {
+        let Some(st) = toy() else { return };
+        let mut rng = Prng::seed_from_u64(1);
+        let data: Vec<Vec<u8>> = (0..200)
+            .map(|_| (0..st.num_vars).map(|_| rng.gen_bool(0.5) as u8).collect())
+            .collect();
+        let cnt = counts(&st, &data);
+        // den (sum node act) equals Σ child act for every sum group
+        for g in &st.sum_groups {
+            let den = cnt[st.param_den[g[0]]];
+            let nums: u64 = g.iter().map(|&p| cnt[st.param_num[p]]).sum();
+            assert_eq!(den, nums);
+        }
+        // root act count = all rows
+        assert_eq!(cnt[st.total_nodes - 1], data.len() as u64);
+    }
+
+    #[test]
+    fn logeval_normalized_over_instance_space() {
+        let Some(st) = toy() else { return };
+        let mut rng = Prng::seed_from_u64(2);
+        let params = rand_params(&st, &mut rng);
+        let marg = vec![false; st.num_vars];
+        let mut total = 0.0;
+        for bits in 0..(1u32 << st.num_vars) {
+            let x: Vec<u8> = (0..st.num_vars).map(|v| ((bits >> v) & 1) as u8).collect();
+            total += logeval(&st, &x, &marg, &params).exp();
+        }
+        assert!((total - 1.0).abs() < 1e-9, "Σ S(x) = {total}");
+        // all-marginalized = 1
+        let z = logeval(&st, &vec![0; st.num_vars], &vec![true; st.num_vars], &params);
+        assert!(z.abs() < 1e-9);
+    }
+
+    #[test]
+    fn counts_additive_over_shards() {
+        let Some(st) = toy() else { return };
+        let mut rng = Prng::seed_from_u64(3);
+        let data: Vec<Vec<u8>> = (0..100)
+            .map(|_| (0..st.num_vars).map(|_| rng.gen_bool(0.3) as u8).collect())
+            .collect();
+        let all = counts(&st, &data);
+        let a = counts(&st, &data[..40]);
+        let b = counts(&st, &data[40..]);
+        let sum: Vec<u64> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        assert_eq!(all, sum);
+    }
+}

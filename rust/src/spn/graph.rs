@@ -1,0 +1,296 @@
+//! Node-based SPN DAG (§2.3): arbitrary sum/product/leaf graphs with
+//! validation and exact evaluation — the general substrate underneath the
+//! layered artifact format, and home of the paper's Figure-1 example.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+/// Leaf semantics: indicator of `var == value` (Figure 1 style) or a
+/// Bernoulli with parameter θ (SPFlow style).
+#[derive(Clone, Debug)]
+pub enum Node {
+    Indicator { var: usize, value: u8 },
+    Bernoulli { var: usize, theta: f64 },
+    Sum { children: Vec<usize>, weights: Vec<f64> },
+    Product { children: Vec<usize> },
+}
+
+/// An SPN as a node arena; `root` indexes into `nodes`. Children must have
+/// smaller indices than their parents (topological by construction).
+#[derive(Clone, Debug, Default)]
+pub struct Spn {
+    pub nodes: Vec<Node>,
+    pub root: usize,
+    pub num_vars: usize,
+}
+
+impl Spn {
+    pub fn add(&mut self, n: Node) -> usize {
+        if let Node::Indicator { var, .. } | Node::Bernoulli { var, .. } = n {
+            self.num_vars = self.num_vars.max(var + 1);
+        }
+        self.nodes.push(n);
+        self.nodes.len() - 1
+    }
+
+    /// Scope (set of variables) per node.
+    pub fn scopes(&self) -> Vec<BTreeSet<usize>> {
+        let mut out: Vec<BTreeSet<usize>> = Vec::with_capacity(self.nodes.len());
+        for n in &self.nodes {
+            let s = match n {
+                Node::Indicator { var, .. } | Node::Bernoulli { var, .. } => {
+                    BTreeSet::from([*var])
+                }
+                Node::Sum { children, .. } | Node::Product { children } => {
+                    let mut s = BTreeSet::new();
+                    for &c in children {
+                        s.extend(out[c].iter().copied());
+                    }
+                    s
+                }
+            };
+            out.push(s);
+        }
+        out
+    }
+
+    /// Validate: child ordering, completeness (sum children share scope),
+    /// decomposability (product children disjoint), normalized weights.
+    pub fn validate(&self) -> Result<()> {
+        if self.root >= self.nodes.len() {
+            bail!("root out of range");
+        }
+        let scopes = self.scopes();
+        for (i, n) in self.nodes.iter().enumerate() {
+            match n {
+                Node::Sum { children, weights } => {
+                    if children.is_empty() || children.len() != weights.len() {
+                        bail!("sum {i}: bad children/weights");
+                    }
+                    if children.iter().any(|&c| c >= i) {
+                        bail!("sum {i}: child ordering violated");
+                    }
+                    let s0 = &scopes[children[0]];
+                    if children.iter().any(|&c| &scopes[c] != s0) {
+                        bail!("sum {i} is not complete");
+                    }
+                    let tot: f64 = weights.iter().sum();
+                    if (tot - 1.0).abs() > 1e-6 || weights.iter().any(|&w| w < 0.0) {
+                        bail!("sum {i}: weights must be a distribution (sum={tot})");
+                    }
+                }
+                Node::Product { children } => {
+                    if children.is_empty() {
+                        bail!("product {i}: no children");
+                    }
+                    if children.iter().any(|&c| c >= i) {
+                        bail!("product {i}: child ordering violated");
+                    }
+                    let mut seen: BTreeSet<usize> = BTreeSet::new();
+                    for &c in children {
+                        if !scopes[c].is_disjoint(&seen) {
+                            bail!("product {i} is not decomposable");
+                        }
+                        seen.extend(scopes[c].iter().copied());
+                    }
+                }
+                Node::Bernoulli { theta, .. } => {
+                    if !(0.0..=1.0).contains(theta) {
+                        bail!("bernoulli {i}: theta out of range");
+                    }
+                }
+                Node::Indicator { value, .. } => {
+                    if *value > 1 {
+                        bail!("indicator {i}: value must be 0/1");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Check selectivity empirically on all 2^v complete instances (small v)
+    /// — at most one child of every sum node positive.
+    pub fn is_selective_exhaustive(&self) -> bool {
+        assert!(self.num_vars <= 16, "exhaustive check only for small SPNs");
+        for bits in 0..(1u32 << self.num_vars) {
+            let x: Vec<u8> = (0..self.num_vars).map(|v| ((bits >> v) & 1) as u8).collect();
+            let vals = self.eval_all(&x, &vec![false; self.num_vars]);
+            for n in &self.nodes {
+                if let Node::Sum { children, .. } = n {
+                    let pos = children.iter().filter(|&&c| vals[c] > 0.0).count();
+                    if pos > 1 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Evaluate all node values for one instance. `marg[v]` marginalizes v
+    /// (its leaves evaluate to 1).
+    pub fn eval_all(&self, x: &[u8], marg: &[bool]) -> Vec<f64> {
+        let mut vals = Vec::with_capacity(self.nodes.len());
+        for n in &self.nodes {
+            let v = match n {
+                Node::Indicator { var, value } => {
+                    if marg[*var] {
+                        1.0
+                    } else if x[*var] == *value {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                Node::Bernoulli { var, theta } => {
+                    if marg[*var] {
+                        1.0
+                    } else if x[*var] == 1 {
+                        *theta
+                    } else {
+                        1.0 - *theta
+                    }
+                }
+                Node::Sum { children, weights } => children
+                    .iter()
+                    .zip(weights)
+                    .map(|(&c, &w)| w * vals[c])
+                    .sum(),
+                Node::Product { children } => children.iter().map(|&c| vals[c]).product(),
+            };
+            vals.push(v);
+        }
+        vals
+    }
+
+    /// Root value S(x) (with marginalization).
+    pub fn eval(&self, x: &[u8], marg: &[bool]) -> f64 {
+        self.eval_all(x, marg)[self.root]
+    }
+
+    /// Marginal query Pr(x | e) = S(x ∧ e) / S(e) (§4 of the paper).
+    pub fn conditional(&self, xe: &[u8], x_vars: &[usize], e_vars: &[usize]) -> f64 {
+        let mut marg_all = vec![true; self.num_vars];
+        for &v in x_vars.iter().chain(e_vars) {
+            marg_all[v] = false;
+        }
+        let s_xe = self.eval(xe, &marg_all);
+        let mut marg_e = vec![true; self.num_vars];
+        for &v in e_vars {
+            marg_e[v] = false;
+        }
+        let s_e = self.eval(xe, &marg_e);
+        s_xe / s_e
+    }
+}
+
+/// The paper's Figure-1 SPN over X1, X2 (weights as printed).
+pub fn figure1() -> Spn {
+    let mut g = Spn::default();
+    let x1 = g.add(Node::Indicator { var: 0, value: 1 });
+    let nx1 = g.add(Node::Indicator { var: 0, value: 0 });
+    let x2 = g.add(Node::Indicator { var: 1, value: 1 });
+    let nx2 = g.add(Node::Indicator { var: 1, value: 0 });
+    let s1 = g.add(Node::Sum { children: vec![x1, nx1], weights: vec![0.3, 0.7] });
+    let s2 = g.add(Node::Sum { children: vec![x1, nx1], weights: vec![0.6, 0.4] });
+    let s3 = g.add(Node::Sum { children: vec![x2, nx2], weights: vec![0.2, 0.8] });
+    let s4 = g.add(Node::Sum { children: vec![x2, nx2], weights: vec![0.1, 0.9] });
+    let p1 = g.add(Node::Product { children: vec![s1, s3] });
+    let p2 = g.add(Node::Product { children: vec![s1, s4] });
+    let p3 = g.add(Node::Product { children: vec![s2, s4] });
+    let s = g.add(Node::Sum { children: vec![p1, p2, p3], weights: vec![0.4, 0.5, 0.1] });
+    g.root = s;
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_validates() {
+        figure1().validate().unwrap();
+    }
+
+    #[test]
+    fn figure1_matches_hand_computation() {
+        let g = figure1();
+        // x = (X1=1, X2=1): S1=0.3 S2=0.6 S3=0.2 S4=0.1
+        // P1=0.06 P2=0.03 P3=0.06, S = 0.4*0.06+0.5*0.03+0.1*0.06 = 0.045
+        let v = g.eval(&[1, 1], &[false, false]);
+        assert!((v - 0.045).abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn figure1_normalized() {
+        let g = figure1();
+        let total: f64 = (0..4)
+            .map(|b| g.eval(&[(b & 1) as u8, (b >> 1) as u8], &[false, false]))
+            .sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        // full marginalization = 1
+        assert!((g.eval(&[0, 0], &[true, true]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conditional_is_bayes_consistent() {
+        let g = figure1();
+        // Pr(X1=1 | X2=1) = S(x1=1, x2=1)/S(x2=1)
+        let joint = g.eval(&[1, 1], &[false, false]);
+        let ev = g.eval(&[1, 1], &[true, false]);
+        let c = g.conditional(&[1, 1], &[0], &[1]);
+        assert!((c - joint / ev).abs() < 1e-12);
+        assert!((0.0..=1.0).contains(&c));
+    }
+
+    #[test]
+    fn figure1_is_not_selective() {
+        // Figure 1's sums mix both indicator polarities: both children can
+        // be positive under marginalization... but for complete evidence an
+        // indicator pair sum has exactly one positive child; the ROOT sum
+        // mixes overlapping products and is not selective.
+        let g = figure1();
+        assert!(!g.is_selective_exhaustive());
+    }
+
+    #[test]
+    fn validation_catches_bad_networks() {
+        // incomplete sum
+        let mut g = Spn::default();
+        let a = g.add(Node::Indicator { var: 0, value: 1 });
+        let b = g.add(Node::Indicator { var: 1, value: 1 });
+        let s = g.add(Node::Sum { children: vec![a, b], weights: vec![0.5, 0.5] });
+        g.root = s;
+        assert!(g.validate().is_err());
+
+        // non-decomposable product
+        let mut g = Spn::default();
+        let a = g.add(Node::Indicator { var: 0, value: 1 });
+        let b = g.add(Node::Indicator { var: 0, value: 0 });
+        let p = g.add(Node::Product { children: vec![a, b] });
+        g.root = p;
+        assert!(g.validate().is_err());
+
+        // unnormalized weights
+        let mut g = Spn::default();
+        let a = g.add(Node::Indicator { var: 0, value: 1 });
+        let b = g.add(Node::Indicator { var: 0, value: 0 });
+        let s = g.add(Node::Sum { children: vec![a, b], weights: vec![0.5, 0.9] });
+        g.root = s;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn bernoulli_leaves_evaluate() {
+        let mut g = Spn::default();
+        let a = g.add(Node::Bernoulli { var: 0, theta: 0.25 });
+        let b = g.add(Node::Bernoulli { var: 1, theta: 0.5 });
+        let p = g.add(Node::Product { children: vec![a, b] });
+        g.root = p;
+        g.validate().unwrap();
+        assert!((g.eval(&[1, 0], &[false, false]) - 0.125).abs() < 1e-12);
+        assert!((g.eval(&[1, 0], &[false, true]) - 0.25).abs() < 1e-12);
+    }
+}

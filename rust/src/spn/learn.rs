@@ -1,0 +1,176 @@
+//! Closed-form maximum-likelihood parameters for selective SPNs (Eq. (2) of
+//! the paper / Eq. (24) of the Sánchez-Cauce et al. survey) — the
+//! *centralized* oracle the private protocol must match.
+
+use super::structure::{ParamKind, Structure};
+
+/// Laplace smoothing constant added to denominators (also guarantees the
+/// Newton protocol's b ≥ 1 precondition; see protocols::newton).
+pub const SMOOTH: u64 = 1;
+
+/// ML parameters (floats in [0,1]) from a counts vector.
+pub fn ml_params(st: &Structure, counts: &[u64]) -> Vec<f64> {
+    assert_eq!(counts.len(), st.counts_len());
+    let mut p = vec![0.0f64; st.num_params];
+    for k in 0..st.num_params {
+        let num = counts[st.param_num[k]] as f64;
+        let den = (counts[st.param_den[k]] + SMOOTH) as f64;
+        p[k] = num / den;
+    }
+    // renormalize each sum group (smoothing skews them slightly)
+    for g in &st.sum_groups {
+        let tot: f64 = g.iter().map(|&i| p[i]).sum();
+        if tot > 0.0 {
+            for &i in g {
+                p[i] /= tot;
+            }
+        } else {
+            for &i in g {
+                p[i] = 1.0 / g.len() as f64;
+            }
+        }
+    }
+    p
+}
+
+/// Fixed-point (d-scaled) ML sum-edge weights — the integers the private
+/// protocol outputs; leaf params untouched (paper mode trains sums only).
+pub fn ml_weights_fixed(st: &Structure, counts: &[u64], d: u128) -> Vec<u128> {
+    st.sum_groups
+        .iter()
+        .flat_map(|g| {
+            let den = counts[st.param_den[g[0]]] as u128 + SMOOTH as u128;
+            g.iter().map(move |&k| d * counts[st.param_num[k]] as u128 / den)
+        })
+        .collect()
+}
+
+/// Convert d-scaled integer sum weights (+ given leaf thetas) into a float
+/// parameter vector, renormalizing each sum group.
+pub fn params_from_fixed(
+    st: &Structure,
+    fixed_sum_weights: &[i128],
+    leaf_theta: &[f64],
+    d: u128,
+) -> Vec<f64> {
+    assert_eq!(fixed_sum_weights.len(), st.num_sum_edges);
+    assert_eq!(leaf_theta.len(), st.num_leaves());
+    let mut p = vec![0.0f64; st.num_params];
+    for g in &st.sum_groups {
+        let mut tot = 0.0;
+        for &i in g {
+            let w = fixed_sum_weights[i].max(0) as f64 / d as f64;
+            p[i] = w;
+            tot += w;
+        }
+        for &i in g {
+            if tot > 0.0 {
+                p[i] /= tot;
+            } else {
+                p[i] = 1.0 / g.len() as f64;
+            }
+        }
+    }
+    for (i, &t) in leaf_theta.iter().enumerate() {
+        p[st.num_sum_edges + i] = t;
+    }
+    p
+}
+
+/// Default leaf parameters when leaves are not privately learned (paper
+/// mode): gates get their claim-consistent near-degenerate θ, plain leaves
+/// the global empirical frequency estimate 0.5.
+pub fn default_leaf_theta(st: &Structure) -> Vec<f64> {
+    st.leaf_claim
+        .iter()
+        .map(|&c| match c {
+            1 => 1.0 - 1e-6,
+            0 => 1e-6,
+            _ => 0.5,
+        })
+        .collect()
+}
+
+/// Which params are sum edges (helper for reporting).
+pub fn sum_edge_indices(st: &Structure) -> Vec<usize> {
+    (0..st.num_params).filter(|&k| st.param_kind[k] == ParamKind::SumEdge).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Prng, Rng};
+    use crate::spn::eval;
+
+    fn toy() -> Option<Structure> {
+        let p = format!("{}/artifacts/toy.structure.json", env!("CARGO_MANIFEST_DIR"));
+        std::fs::read_to_string(p).ok().map(|s| Structure::from_json_str(&s).unwrap())
+    }
+
+    fn gen_data(st: &Structure, n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Prng::seed_from_u64(seed);
+        (0..n).map(|_| (0..st.num_vars).map(|_| rng.gen_bool(0.4) as u8).collect()).collect()
+    }
+
+    #[test]
+    fn ml_params_are_distributions() {
+        let Some(st) = toy() else { return };
+        let data = gen_data(&st, 500, 1);
+        let cnt = eval::counts(&st, &data);
+        let p = ml_params(&st, &cnt);
+        for g in &st.sum_groups {
+            let tot: f64 = g.iter().map(|&i| p[i]).sum();
+            assert!((tot - 1.0).abs() < 1e-9);
+        }
+        for k in 0..st.num_params {
+            assert!((0.0..=1.0).contains(&p[k]), "param {k} = {}", p[k]);
+        }
+    }
+
+    #[test]
+    fn ml_improves_loglik_over_uniform() {
+        let Some(st) = toy() else { return };
+        let data = gen_data(&st, 1000, 2);
+        let cnt = eval::counts(&st, &data);
+        let ml = ml_params(&st, &cnt);
+        let mut uni = vec![0.0; st.num_params];
+        for g in &st.sum_groups {
+            for &i in g {
+                uni[i] = 1.0 / g.len() as f64;
+            }
+        }
+        for i in 0..st.num_leaves() {
+            uni[st.num_sum_edges + i] = 0.5;
+        }
+        let ll_ml = eval::mean_loglik(&st, &data, &ml);
+        let ll_uni = eval::mean_loglik(&st, &data, &uni);
+        assert!(ll_ml > ll_uni, "ml {ll_ml} vs uniform {ll_uni}");
+    }
+
+    #[test]
+    fn fixed_weights_approximate_float_weights() {
+        let Some(st) = toy() else { return };
+        let data = gen_data(&st, 800, 3);
+        let cnt = eval::counts(&st, &data);
+        let ml = ml_params(&st, &cnt);
+        let fixed = ml_weights_fixed(&st, &cnt, 256);
+        for (k, &fw) in fixed.iter().enumerate() {
+            assert!((fw as f64 / 256.0 - ml[k]).abs() < 0.02, "param {k}");
+        }
+    }
+
+    #[test]
+    fn params_from_fixed_roundtrip() {
+        let Some(st) = toy() else { return };
+        let data = gen_data(&st, 800, 4);
+        let cnt = eval::counts(&st, &data);
+        let fixed: Vec<i128> =
+            ml_weights_fixed(&st, &cnt, 256).iter().map(|&x| x as i128).collect();
+        let theta = default_leaf_theta(&st);
+        let p = params_from_fixed(&st, &fixed, &theta, 256);
+        for g in &st.sum_groups {
+            let tot: f64 = g.iter().map(|&i| p[i]).sum();
+            assert!((tot - 1.0).abs() < 1e-9);
+        }
+    }
+}

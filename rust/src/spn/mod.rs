@@ -1,0 +1,19 @@
+//! Sum-product network substrate (§2.3 of the paper).
+//!
+//! * [`graph`]     — node-based SPN DAG with validation (completeness,
+//!   decomposability, selectivity) and exact evaluation; includes the
+//!   paper's Figure-1 network as a constructor.
+//! * [`structure`] — the layered dense structure format shared with the
+//!   python compile path (`artifacts/<name>.structure.json`).
+//! * [`eval`]      — batched layered evaluation in rust: bottom-up
+//!   positivity, top-down activation, counts (the plaintext mirror of the
+//!   AOT'd counts artifact) and log-domain evaluation.
+//! * [`learn`]     — the closed-form ML weights of Eq. (2) from counts,
+//!   plus dataset log-likelihood.
+
+pub mod eval;
+pub mod graph;
+pub mod learn;
+pub mod structure;
+
+pub use structure::{Layer, LayerKind, ParamKind, Structure};

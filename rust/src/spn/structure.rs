@@ -1,0 +1,304 @@
+//! The layered structure format shared with the python compile path.
+//!
+//! `python/compile/structures.py` generates structures whose statistics
+//! match Table 1 of the paper exactly, and serializes them as JSON; this
+//! module parses and validates them on the rust side.  The same file is
+//! baked (as dense matrices) into the counts/eval HLO artifacts, so both
+//! sides agree on node numbering by construction.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Product,
+    Sum,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// A sum-edge weight (what the paper's protocol learns).
+    SumEdge,
+    /// A Bernoulli leaf parameter (learned only in `--learn-leaves` mode).
+    Leaf,
+}
+
+/// One non-leaf layer. The layer's *input* is `concat(previous layer,
+/// leaves)`; `cols` index into that concatenation.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub kind: LayerKind,
+    pub width: usize,
+    pub in_width: usize,
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+    /// Parameter id per edge; -1 for product edges.
+    pub param: Vec<i64>,
+}
+
+/// Table-1 style statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Stats {
+    pub sum: usize,
+    pub product: usize,
+    pub leaf: usize,
+    pub params: usize,
+    pub edges: usize,
+    pub layers: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Structure {
+    pub name: String,
+    pub num_vars: usize,
+    /// DEBD-matched dataset row count for this structure's source dataset.
+    pub rows: usize,
+    pub leaf_var: Vec<usize>,
+    pub leaf_claim: Vec<i64>, // -1 = plain Bernoulli, 0/1 = gate claim
+    pub layer_widths: Vec<usize>,
+    pub layer_offset: Vec<usize>,
+    pub total_nodes: usize,
+    pub layers: Vec<Layer>,
+    pub num_params: usize,
+    pub num_sum_edges: usize,
+    pub param_kind: Vec<ParamKind>,
+    /// Index into the counts vector (act counts ++ x1 counts) per param.
+    pub param_num: Vec<usize>,
+    pub param_den: Vec<usize>,
+    /// Per-sum-node groups of sum-edge param ids (weights sum to 1).
+    pub sum_groups: Vec<Vec<usize>>,
+    pub stats: Stats,
+}
+
+impl Structure {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let s = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_json_str(&s)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let layers = j
+            .get("layers")
+            .as_arr()
+            .iter()
+            .map(|l| {
+                let kind = match l.get("kind").as_str() {
+                    "product" => LayerKind::Product,
+                    "sum" => LayerKind::Sum,
+                    k => bail!("unknown layer kind {k}"),
+                };
+                Ok(Layer {
+                    kind,
+                    width: l.get("width").as_usize(),
+                    in_width: l.get("in_width").as_usize(),
+                    rows: l.get("rows").usize_vec(),
+                    cols: l.get("cols").usize_vec(),
+                    param: l.get("param").i64_vec(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let stats_j = j.get("stats");
+        let st = Structure {
+            name: j.get("name").as_str().to_string(),
+            num_vars: j.get("num_vars").as_usize(),
+            rows: j.get("rows").as_usize(),
+            leaf_var: j.get("leaf_var").usize_vec(),
+            leaf_claim: j.get("leaf_claim").i64_vec(),
+            layer_widths: j.get("layer_widths").usize_vec(),
+            layer_offset: j.get("layer_offset").usize_vec(),
+            total_nodes: j.get("total_nodes").as_usize(),
+            layers,
+            num_params: j.get("num_params").as_usize(),
+            num_sum_edges: j.get("num_sum_edges").as_usize(),
+            param_kind: j
+                .get("param_kind")
+                .as_arr()
+                .iter()
+                .map(|k| match k.as_str() {
+                    "sum" => ParamKind::SumEdge,
+                    _ => ParamKind::Leaf,
+                })
+                .collect(),
+            param_num: j.get("param_num").usize_vec(),
+            param_den: j.get("param_den").usize_vec(),
+            sum_groups: j.get("sum_groups").as_arr().iter().map(|g| g.usize_vec()).collect(),
+            stats: Stats {
+                sum: stats_j.get("sum").as_usize(),
+                product: stats_j.get("product").as_usize(),
+                leaf: stats_j.get("leaf").as_usize(),
+                params: stats_j.get("params").as_usize(),
+                edges: stats_j.get("edges").as_usize(),
+                layers: stats_j.get("layers").as_usize(),
+            },
+        };
+        st.validate()?;
+        Ok(st)
+    }
+
+    /// Number of leaves (width of layer 0).
+    pub fn num_leaves(&self) -> usize {
+        self.layer_widths[0]
+    }
+
+    /// Length of the counts vector the artifact emits.
+    pub fn counts_len(&self) -> usize {
+        self.total_nodes + self.num_leaves()
+    }
+
+    /// Structural validation: widths, edge bounds, alternation, parameter
+    /// coverage, tree property (every non-root node has exactly one parent).
+    pub fn validate(&self) -> Result<()> {
+        let w0 = self.num_leaves();
+        if self.leaf_var.len() != w0 || self.leaf_claim.len() != w0 {
+            bail!("leaf arrays inconsistent with layer 0 width");
+        }
+        for &v in &self.leaf_var {
+            if v >= self.num_vars {
+                bail!("leaf var {v} out of range");
+            }
+        }
+        if self.layer_widths.len() != self.layers.len() + 1 {
+            bail!("layer_widths length mismatch");
+        }
+        let mut expect = LayerKind::Product;
+        for (li, l) in self.layers.iter().enumerate() {
+            if l.kind != expect {
+                bail!("layer {li} breaks product/sum alternation");
+            }
+            expect = if expect == LayerKind::Product { LayerKind::Sum } else { LayerKind::Product };
+            if l.width != self.layer_widths[li + 1] {
+                bail!("layer {li} width mismatch");
+            }
+            let prev_w = if li > 0 { self.layer_widths[li] } else { 0 };
+            if l.in_width != prev_w + w0 {
+                bail!("layer {li} in_width mismatch");
+            }
+            if l.rows.len() != l.cols.len() || l.rows.len() != l.param.len() {
+                bail!("layer {li} COO arrays inconsistent");
+            }
+            for (&r, &c) in l.rows.iter().zip(&l.cols) {
+                if r >= l.width || c >= l.in_width {
+                    bail!("layer {li} edge ({r},{c}) out of bounds");
+                }
+            }
+            // every row must have at least one edge
+            let mut deg = vec![0usize; l.width];
+            for &r in &l.rows {
+                deg[r] += 1;
+            }
+            if deg.iter().any(|&d| d == 0) {
+                bail!("layer {li} has a childless node");
+            }
+        }
+        if self.layers.last().map(|l| l.width) != Some(1) {
+            bail!("root layer must have width 1");
+        }
+        // tree property
+        let mut leaf_refs = vec![0usize; w0];
+        for (li, l) in self.layers.iter().enumerate() {
+            let prev_w = if li > 0 { self.layer_widths[li] } else { 0 };
+            let mut prev_refs = vec![0usize; prev_w];
+            for &c in &l.cols {
+                if c < prev_w {
+                    prev_refs[c] += 1;
+                } else {
+                    leaf_refs[c - prev_w] += 1;
+                }
+            }
+            if li > 0 && prev_refs.iter().any(|&r| r != 1) {
+                bail!("layer {} nodes must have exactly one parent", li - 1);
+            }
+        }
+        if leaf_refs.iter().any(|&r| r != 1) {
+            bail!("every leaf must have exactly one parent");
+        }
+        // params
+        if self.param_kind.len() != self.num_params
+            || self.param_num.len() != self.num_params
+            || self.param_den.len() != self.num_params
+        {
+            bail!("param arrays inconsistent");
+        }
+        let mut seen = vec![false; self.num_sum_edges];
+        for l in &self.layers {
+            for &p in &l.param {
+                if l.kind == LayerKind::Sum {
+                    let p = usize::try_from(p).map_err(|_| anyhow::anyhow!("negative sum param"))?;
+                    if p >= self.num_sum_edges || seen[p] {
+                        bail!("bad/duplicate sum param {p}");
+                    }
+                    seen[p] = true;
+                } else if p != -1 {
+                    bail!("product edge with param");
+                }
+            }
+        }
+        if seen.iter().any(|&s| !s) {
+            bail!("uncovered sum params");
+        }
+        let covered: usize = self.sum_groups.iter().map(|g| g.len()).sum();
+        if covered != self.num_sum_edges {
+            bail!("sum_groups do not cover sum edges");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(name: &str) -> Option<Structure> {
+        let p = format!("{}/artifacts/{name}.structure.json", env!("CARGO_MANIFEST_DIR"));
+        std::fs::read_to_string(p).ok().map(|s| Structure::from_json_str(&s).unwrap())
+    }
+
+    #[test]
+    fn loads_and_validates_toy() {
+        let Some(st) = artifact("toy") else { return };
+        assert_eq!(st.name, "toy");
+        assert_eq!(st.num_vars, 4);
+        assert_eq!(st.layers.last().unwrap().width, 1);
+    }
+
+    #[test]
+    fn table1_stats_match_paper() {
+        let expect = [
+            ("nltcs", Stats { sum: 13, product: 26, leaf: 74, params: 100, edges: 112, layers: 9 }),
+            ("jester", Stats { sum: 10, product: 20, leaf: 225, params: 245, edges: 254, layers: 5 }),
+            ("baudio", Stats { sum: 17, product: 36, leaf: 282, params: 318, edges: 334, layers: 7 }),
+            ("bnetflix", Stats { sum: 27, product: 54, leaf: 265, params: 319, edges: 345, layers: 7 }),
+        ];
+        for (name, want) in expect {
+            let Some(st) = artifact(name) else { continue };
+            assert_eq!(st.stats, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_broken_structures() {
+        let Some(st) = artifact("toy") else { return };
+        // childless node
+        let mut bad = st.clone();
+        bad.layers[0].rows.clear();
+        bad.layers[0].cols.clear();
+        bad.layers[0].param.clear();
+        assert!(bad.validate().is_err());
+        // out-of-bounds edge
+        let mut bad = st.clone();
+        bad.layers[0].cols[0] = 10_000;
+        assert!(bad.validate().is_err());
+        // double-parent leaf
+        let mut bad = st.clone();
+        let c0 = bad.layers[0].cols[0];
+        bad.layers[0].rows.push(0);
+        bad.layers[0].cols.push(c0);
+        bad.layers[0].param.push(-1);
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Cross-layer integration tests: PJRT runtime ⇄ native mirror ⇄ MPC
+//! protocols ⇄ coordinators, plus the real-TCP smoke test.
+//!
+//! These need `make artifacts` to have run; each test skips gracefully if
+//! the artifacts directory is absent so `cargo test` stays green on a fresh
+//! checkout (CI runs `make test` which builds artifacts first).
+
+use spn_mpc::coordinator::infer::{private_eval, Query};
+use spn_mpc::coordinator::train::{peek_weights, train, TrainConfig};
+use spn_mpc::datasets;
+use spn_mpc::field::Field;
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::runtime;
+use spn_mpc::spn::structure::Structure;
+use spn_mpc::spn::{eval, learn};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = runtime::default_artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn runtime_counts_match_native_mirror_all_datasets() {
+    let Some(dir) = artifacts() else { return };
+    let rt = runtime::Runtime::cpu().unwrap();
+    for name in ["toy", "nltcs", "jester", "baudio", "bnetflix"] {
+        let ds = runtime::load_dataset(&rt, &dir, name).unwrap();
+        let st = &ds.structure;
+        let gt = datasets::ground_truth_params(st, 3);
+        let data = datasets::sample(st, &gt, 700, 99); // non-multiple of 512: tail masking
+        let native = eval::counts(st, &data);
+        let pjrt = ds.counts.counts(&data).unwrap();
+        assert_eq!(native, pjrt, "{name}: artifact and native counts diverge");
+    }
+}
+
+#[test]
+fn runtime_eval_matches_native_logeval() {
+    let Some(dir) = artifacts() else { return };
+    let rt = runtime::Runtime::cpu().unwrap();
+    let ds = runtime::load_dataset(&rt, &dir, "nltcs").unwrap();
+    let st = &ds.structure;
+    let gt = datasets::ground_truth_params(st, 4);
+    let data = datasets::sample(st, &gt, 64, 5);
+    let marg = vec![false; st.num_vars];
+    let got = ds.eval.logeval(&data, &marg, &gt).unwrap();
+    for (i, row) in data.iter().enumerate() {
+        let want = eval::logeval(st, row, &marg, &gt);
+        assert!(
+            (got[i] - want).abs() < 1e-3,
+            "row {i}: pjrt {} vs native {want}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn full_pipeline_pjrt_counts_into_private_training() {
+    let Some(dir) = artifacts() else { return };
+    let rt = runtime::Runtime::cpu().unwrap();
+    let ds = runtime::load_dataset(&rt, &dir, "toy").unwrap();
+    let st = &ds.structure;
+    let gt = datasets::ground_truth_params(st, 7);
+    let data = datasets::sample(st, &gt, 1500, 42);
+    let shards = datasets::partition(&data, 4);
+    let counts: Vec<Vec<u64>> =
+        shards.iter().map(|s| ds.counts.counts(s).unwrap()).collect();
+
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(4));
+    let (model, report) = train(&mut eng, st, &counts, 1500, &TrainConfig::default());
+    assert_eq!(report.divisions, st.sum_groups.len());
+
+    let oracle = learn::ml_weights_fixed(st, &eval::counts(st, &data), model.d);
+    for (k, (&g, &o)) in peek_weights(&eng, &model).iter().zip(&oracle).enumerate() {
+        assert!((g - o as i128).abs() <= 3, "param {k}");
+    }
+}
+
+#[test]
+fn training_then_inference_shares_flow() {
+    let Some(dir) = artifacts() else { return };
+    let st = Structure::load(dir.join("toy.structure.json")).unwrap();
+    let gt = datasets::ground_truth_params(&st, 7);
+    let data = datasets::sample(&st, &gt, 2000, 11);
+    let shards = datasets::partition(&data, 5);
+    let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(5).batched());
+    let (model, _) = train(&mut eng, &st, &counts, 2000, &TrainConfig::default());
+    let theta = learn::default_leaf_theta(&st);
+    let q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+    let (root, _) = private_eval(&mut eng, &st, &model, &q, &theta);
+    assert!((root - model.d as i128).abs() <= model.d as i128 / 8, "S(∅) ≈ 1");
+}
+
+#[test]
+fn skewed_partition_still_exact() {
+    // Eq. (3) holds for ANY horizontal partition — exactness is the paper's
+    // core claim vs the §3.2 approximation.
+    let Some(dir) = artifacts() else { return };
+    let st = Structure::load(dir.join("toy.structure.json")).unwrap();
+    let gt = datasets::ground_truth_params(&st, 8);
+    let data = datasets::sample(&st, &gt, 3000, 12);
+    let oracle = learn::ml_weights_fixed(&st, &eval::counts(&st, &data), 256);
+    for skew in [0.5, 0.9] {
+        let shards = datasets::partition_skewed(&data, 4, skew);
+        let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(4).batched());
+        let (model, _) = train(&mut eng, &st, &counts, 3000, &TrainConfig::default());
+        for (k, (&g, &o)) in peek_weights(&eng, &model).iter().zip(&oracle).enumerate() {
+            assert!((g - o as i128).abs() <= 3, "skew {skew} param {k}");
+        }
+    }
+}
+
+#[test]
+fn member_count_does_not_change_result() {
+    let Some(dir) = artifacts() else { return };
+    let st = Structure::load(dir.join("toy.structure.json")).unwrap();
+    let gt = datasets::ground_truth_params(&st, 9);
+    let data = datasets::sample(&st, &gt, 1200, 13);
+    let mut results = Vec::new();
+    for n in [2usize, 3, 7, 13] {
+        let shards = datasets::partition(&data, n);
+        let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+        let (model, _) = train(&mut eng, &st, &counts, 1200, &TrainConfig::default());
+        results.push(peek_weights(&eng, &model));
+    }
+    for w in &results[1..] {
+        for (k, (&a, &b)) in results[0].iter().zip(w).enumerate() {
+            assert!((a - b).abs() <= 3, "param {k} differs across member counts");
+        }
+    }
+}
+
+#[test]
+fn tcp_transport_reveals_across_threads() {
+    use spn_mpc::net::tcp;
+    use spn_mpc::rng::Prng;
+    use spn_mpc::sharing::additive::additive_share;
+    use std::net::TcpListener;
+    use std::thread;
+
+    let f = Field::paper();
+    let mut rng = Prng::seed_from_u64(77);
+    let secret = 424_242u128;
+    let shares = additive_share(&f, secret, 5, &mut rng);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let srv = thread::spawn(move || tcp::reveal_server_on(listener, 5, f.p).unwrap());
+    let handles: Vec<_> = shares
+        .into_iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            let a = addr.clone();
+            thread::spawn(move || tcp::reveal_client(&a, i as u32, sh).unwrap())
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), secret);
+    }
+    assert_eq!(srv.join().unwrap(), secret);
+}
+
+#[test]
+fn approx_and_exact_agree_on_iid_shards() {
+    let Some(dir) = artifacts() else { return };
+    use spn_mpc::coordinator::approx::{approx_divide, LocalFraction};
+    use spn_mpc::net::NetConfig;
+    let st = Structure::load(dir.join("toy.structure.json")).unwrap();
+    let gt = datasets::ground_truth_params(&st, 10);
+    let data = datasets::sample(&st, &gt, 6000, 14);
+    let shards = datasets::partition(&data, 3);
+    let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+
+    let mut params_in = Vec::new();
+    for k in 0..st.num_sum_edges {
+        params_in.push(
+            (0..3)
+                .map(|i| LocalFraction {
+                    num: counts[i][st.param_num[k]],
+                    den: counts[i][st.param_den[k]],
+                })
+                .collect::<Vec<_>>(),
+        );
+    }
+    let approx = approx_divide(&Field::paper(), &params_in, 256, NetConfig::default(), 5);
+
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(3).batched());
+    let (model, _) = train(&mut eng, &st, &counts, 6000, &TrainConfig::default());
+    let exact = peek_weights(&eng, &model);
+    for k in 0..st.num_sum_edges {
+        let a = approx.revealed[k] as i128;
+        let e = exact[k];
+        assert!((a - e).abs() <= 12, "param {k}: approx {a} exact {e}");
+    }
+}
