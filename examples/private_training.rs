@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     let st = &ds.structure;
     let rows: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(st.rows);
     println!("[1/5] dataset {dataset}: {:?}, rows {rows}, members {members}", st.stats);
-    println!("      PJRT platform: {}", rt.platform());
+    println!("      runtime platform: {}", rt.platform());
 
     // ---- synthetic data from a ground-truth SPN ----------------------------
     let gt = datasets::ground_truth_params(st, 7);

@@ -1,13 +1,40 @@
 """Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
 
 Hypothesis sweeps the kernel over shapes, sparsity patterns and modes;
-every case asserts allclose against kernels/ref.py.
+every case asserts allclose against kernels/ref.py.  On images without
+`hypothesis` the sweep tests skip and the deterministic cases still run
+(same degrade-gracefully contract as the rust artifact tests).
 """
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image without hypothesis: skip the sweeps only
+
+    class _St:
+        """Stand-in for hypothesis.strategies: arguments are ignored."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _St()
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def wrapper():
+                pytest.skip("hypothesis not installed")
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
 
 from compile.kernels import ref
 from compile.kernels import spn_layer as K

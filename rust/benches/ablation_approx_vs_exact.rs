@@ -19,7 +19,10 @@ use spn_mpc::protocols::engine::{Engine, EngineConfig};
 use spn_mpc::spn::{eval, learn};
 
 fn main() {
-    let st = common::load("nltcs");
+    if !common::guard("ablation_approx_vs_exact", &["nltcs"]) {
+        return;
+    }
+    let st = common::load("nltcs").expect("guarded above");
     let members = 5;
     let d = 256u128;
     let gt = datasets::ground_truth_params(&st, 7);

@@ -22,11 +22,14 @@ use spn_mpc::protocols::engine::{Engine, EngineConfig, Schedule};
 use spn_mpc::spn::{eval, learn};
 
 fn main() {
+    if !common::guard("baseline_cryptospn", &common::DEBD) {
+        return;
+    }
     let aes = gc::measure_aes_per_sec(5_000_000);
     println!("AES-equivalent rate: {:.1}M blocks/s\n", aes / 1e6);
     let mut rows = Vec::new();
     for name in common::DEBD {
-        let st = common::load(name);
+        let st = common::load(name).expect("guarded above");
         // quick training for weight shares
         let gt = datasets::ground_truth_params(&st, 7);
         let data = datasets::sample(&st, &gt, 2000, 42);

@@ -62,7 +62,10 @@ fn main() {
 
     // §3.3 flow for nltcs at 1024-bit: N=5 parties, 2 ciphertexts per sum
     // node + edge numerators.
-    let st = common::load("nltcs");
+    if !common::guard("baseline_he (nltcs flow)", &["nltcs"]) {
+        return;
+    }
+    let st = common::load("nltcs").expect("guarded above");
     let n_cts = 2 * st.num_sum_edges + st.sum_groups.len();
     let he_aggregate_s = n_cts as f64 * 5.0 * enc_1024; // encrypt dominates
     // division per [17]: word-wise FHE division needs thousands of

@@ -1,6 +1,12 @@
 #![allow(dead_code)]
 //! Shared helpers for the bench targets (plain-main harness; the vendored
 //! crate set has no criterion).
+//!
+//! Every loader returns `Option` and every target starts with a
+//! [`guard`]-style check: on a fresh checkout without `make artifacts` the
+//! benches print a skip message and exit 0 instead of panicking — the same
+//! contract as `rust/tests/integration.rs` (the skip path itself is
+//! unit-tested in `spn_mpc::bench`).
 
 use spn_mpc::coordinator::train::{train, TrainConfig, TrainReport};
 use spn_mpc::datasets;
@@ -11,16 +17,28 @@ use spn_mpc::spn::structure::Structure;
 
 pub const DEBD: [&str; 4] = ["nltcs", "jester", "baudio", "bnetflix"];
 
-pub fn load(name: &str) -> Structure {
-    let p = format!("{}/artifacts/{name}.structure.json", env!("CARGO_MANIFEST_DIR"));
-    Structure::load(p).expect("run `make artifacts` first")
+/// Load a generated structure; `None` (not a panic) when `make artifacts`
+/// has not run.
+pub fn load(name: &str) -> Option<Structure> {
+    spn_mpc::bench::try_load_structure(name)
+}
+
+/// Skip-or-proceed guard for a bench target needing `names`' artifacts.
+/// Prints the standard skip message and returns false when they're absent.
+pub fn guard(target: &str, names: &[&str]) -> bool {
+    if spn_mpc::bench::artifacts_available(names) {
+        true
+    } else {
+        println!("{}", spn_mpc::bench::skip_message(target));
+        false
+    }
 }
 
 /// Full private-training accounting run for one dataset (native counts —
 /// the runtime path is exercised by the examples/integration tests; benches
-/// measure the protocol).
-pub fn train_run(name: &str, members: usize, schedule: Schedule) -> (TrainReport, f64) {
-    let st = load(name);
+/// measure the protocol). `None` when the structure artifact is absent.
+pub fn train_run(name: &str, members: usize, schedule: Schedule) -> Option<(TrainReport, f64)> {
+    let st = load(name)?;
     let gt = datasets::ground_truth_params(&st, 7);
     let data = datasets::sample(&st, &gt, st.rows, 42);
     let shards = datasets::partition(&data, members);
@@ -30,5 +48,5 @@ pub fn train_run(name: &str, members: usize, schedule: Schedule) -> (TrainReport
     let mut eng = Engine::new(Field::paper(), cfg);
     let t0 = std::time::Instant::now();
     let (_, report) = train(&mut eng, &st, &counts, st.rows as u64, &TrainConfig::default());
-    (report, t0.elapsed().as_secs_f64())
+    Some((report, t0.elapsed().as_secs_f64()))
 }

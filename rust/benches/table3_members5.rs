@@ -14,10 +14,14 @@ const PAPER: [(&str, u64, f64, f64); 4] = [
 ];
 
 fn main() {
+    if !common::guard("table3_members5", &common::DEBD) {
+        return;
+    }
     let mut rows = Vec::new();
     let mut ours5 = Vec::new();
     for (name, p_msgs, p_mb, p_time) in PAPER {
-        let (report, wall) = common::train_run(name, 5, Schedule::PerOp);
+        let (report, wall) =
+            common::train_run(name, 5, Schedule::PerOp).expect("guarded above");
         ours5.push(report.stats.messages as f64);
         rows.push(vec![
             name.to_string(),
@@ -50,7 +54,7 @@ fn main() {
 
     // member scaling: paper's 13-member/5-member message ratio is ~4.6
     // (mesh resharing dominates: ~n(n-1) per multiplication).
-    let (r13, _) = common::train_run("nltcs", 13, Schedule::PerOp);
+    let (r13, _) = common::train_run("nltcs", 13, Schedule::PerOp).expect("guarded above");
     let ratio = r13.stats.messages as f64 / ours5[0];
     let paper_ratio = 4_231_815.0 / 915_273.0;
     println!(

@@ -30,6 +30,7 @@ pub const MAX_MOD_BITS: u32 = 74;
 /// A prime-field context. Cheap to copy; all element ops are methods.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Field {
+    /// The prime modulus; elements are `u128` in `[0, p)`.
     pub p: u128,
     /// 2^128 mod p, used to fold the high product limb.
     r128: u128,
@@ -101,11 +102,13 @@ impl Field {
         Field::new(PAPER_P)
     }
 
+    /// Reduce an arbitrary `u128` into `[0, p)`.
     #[inline]
     pub fn reduce(&self, x: u128) -> u128 {
         x % self.p
     }
 
+    /// `a + b (mod p)` for reduced operands.
     #[inline]
     pub fn add(&self, a: u128, b: u128) -> u128 {
         let s = a + b; // a,b < p < 2^74: no overflow
@@ -116,6 +119,7 @@ impl Field {
         }
     }
 
+    /// `a - b (mod p)` for reduced operands.
     #[inline]
     pub fn sub(&self, a: u128, b: u128) -> u128 {
         if a >= b {
@@ -125,6 +129,7 @@ impl Field {
         }
     }
 
+    /// `-a (mod p)` for a reduced operand.
     #[inline]
     pub fn neg(&self, a: u128) -> u128 {
         if a == 0 {
@@ -191,6 +196,7 @@ impl Field {
         (a.wrapping_mul(b)) % self.p
     }
 
+    /// `base^exp (mod p)` by square-and-multiply.
     pub fn pow(&self, mut base: u128, mut exp: u128) -> u128 {
         let mut acc: u128 = 1;
         base %= self.p;

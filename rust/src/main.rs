@@ -106,7 +106,7 @@ fn shard_counts(
     }
     let rt = runtime::Runtime::cpu()?;
     let ds = runtime::load_dataset(&rt, runtime::default_artifacts_dir(), name)?;
-    eprintln!("[runtime] counts via PJRT ({})", rt.platform());
+    eprintln!("[runtime] counts via artifact runtime ({})", rt.platform());
     shards.iter().map(|s| ds.counts.counts(s)).collect()
 }
 
@@ -338,8 +338,8 @@ fn cmd_info() -> Result<()> {
         Err(e) => println!("  no manifest: {e}"),
     }
     match runtime::Runtime::cpu() {
-        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
-        Err(e) => println!("PJRT unavailable: {e}"),
+        Ok(rt) => println!("runtime platform: {}", rt.platform()),
+        Err(e) => println!("runtime unavailable: {e}"),
     }
     Ok(())
 }

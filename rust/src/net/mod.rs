@@ -48,10 +48,15 @@ impl Default for NetConfig {
 /// Exact traffic/time accounting.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct NetStats {
+    /// Logical messages sent (schedule + body + finished).
     pub messages: u64,
+    /// Serialized bytes (header + share payloads).
     pub bytes: u64,
+    /// Communication rounds (parallel messages share a round).
     pub rounds: u64,
+    /// Exercises the Manager scheduled.
     pub exercises: u64,
+    /// Simulated wall-clock: Σ per-round `latency + max_bytes/bandwidth`.
     pub virtual_time_s: f64,
 }
 
@@ -64,7 +69,9 @@ impl NetStats {
 /// Discrete-event accountant for the simulated network.
 #[derive(Clone, Debug)]
 pub struct SimNet {
+    /// The wire/latency model in force.
     pub cfg: NetConfig,
+    /// Running totals; diff before/after a protocol to cost it.
     pub stats: NetStats,
     round_max_bytes: u64,
     round_open: bool,

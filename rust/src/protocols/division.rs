@@ -16,6 +16,8 @@ use super::newton::{newton_inverse, NewtonConfig};
 /// End-to-end division parameters (paper §5.3: d=256, n=16, t=5).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DivisionConfig {
+    /// Parameters of the Newton inversion stage; see
+    /// [`NewtonConfig`](super::newton::NewtonConfig).
     pub newton: NewtonConfig,
 }
 

@@ -26,7 +26,25 @@ use crate::sharing::shamir::ShamirCtx;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct DataId(pub u64);
 
-/// How the manager schedules vector operations.
+/// How the manager schedules vector operations — the message-accounting
+/// contract behind Tables 2–3 (see DESIGN.md §2).
+///
+/// For a k-wide vector operation whose body needs one full-mesh sub-share
+/// exchange (e.g. [`Engine::mul_vec`]) with `n` members:
+///
+/// * **`PerOp`** schedules k exercises. Each costs one schedule broadcast
+///   (n messages), `n·(n−1)` single-element body messages in their own
+///   round, and n "finished" messages — so k·(n² + n) messages and
+///   3·k rounds. This is how the paper's implementation runs, and the
+///   mode its Tables 2–3 are reproduced in.
+/// * **`Batched`** schedules one exercise for the whole vector; each link
+///   carries all k elements in one message (`n·(n−1)` body messages
+///   total, each k elements). Same round *structure*, ~k× fewer messages
+///   and k× fewer rounds — the §Perf optimization, quantified by
+///   `batched_mul_fewer_messages_same_result`.
+///
+/// Virtual time charges `latency + max_bytes/bandwidth` per round either
+/// way, so `Batched` also wins wall-clock on latency-dominated links.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Schedule {
     /// One exercise (and one message per link) per scalar op — paper mode.
@@ -35,19 +53,27 @@ pub enum Schedule {
     Batched,
 }
 
+/// Configuration for [`Engine::new`]: party count, threshold, schedule,
+/// masking width, determinism seed and network cost model.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
+    /// Number of computing members (the Manager is not a member).
     pub n: usize,
     /// Shamir degree; defaults to ⌊(n-1)/2⌋ (see DESIGN.md §4).
     pub threshold: Option<usize>,
+    /// Vector-operation scheduling mode; see [`Schedule`].
     pub schedule: Schedule,
     /// Security parameter ρ for division-by-public (§3.4); r ∈ [0, 2^ρ).
     pub rho_bits: u32,
+    /// Seed for the per-member deterministic RNGs (reproducible runs).
     pub seed: u64,
+    /// Latency/bandwidth/framing model for the accounted network.
     pub net: NetConfig,
 }
 
 impl EngineConfig {
+    /// Paper-mode defaults for `n` members: `PerOp` schedule, ρ = 64,
+    /// honest-majority threshold, 10 ms / 1 Gbit links.
     pub fn new(n: usize) -> Self {
         EngineConfig {
             n,
@@ -59,6 +85,7 @@ impl EngineConfig {
         }
     }
 
+    /// Switch to the vectorized [`Schedule::Batched`] mode.
     pub fn batched(mut self) -> Self {
         self.schedule = Schedule::Batched;
         self
@@ -67,7 +94,8 @@ impl EngineConfig {
 
 /// One computing party. `store` maps DataId → this member's share.
 pub struct Member {
-    pub id: usize, // 1..=n (Shamir x-coordinate)
+    /// Member id in `1..=n` (also the Shamir evaluation point).
+    pub id: usize,
     store: HashMap<u64, u128>,
     rng: Prng,
 }
@@ -89,10 +117,16 @@ impl Member {
 
 /// The Manager plus all Members plus the accounted network.
 pub struct Engine {
+    /// The prime field all shares live in.
     pub field: Field,
+    /// Shamir context (party set + threshold + Lagrange coefficients).
     pub shamir: ShamirCtx,
+    /// The configuration this engine was built with. `schedule` may be
+    /// switched between runs to compare accounting modes.
     pub cfg: EngineConfig,
+    /// The computing parties, each with a private store and RNG.
     pub members: Vec<Member>,
+    /// The accounted network; read `net.stats` for cost reports.
     pub net: SimNet,
     next_id: u64,
     #[allow(dead_code)]
@@ -100,6 +134,8 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine: constructs the Shamir context (honest-majority
+    /// threshold unless overridden) and one [`Member`] per party.
     pub fn new(field: Field, cfg: EngineConfig) -> Self {
         let shamir = match cfg.threshold {
             Some(t) => ShamirCtx::with_threshold(field, cfg.n, t),
@@ -123,10 +159,12 @@ impl Engine {
         }
     }
 
+    /// Number of computing members.
     pub fn n(&self) -> usize {
         self.cfg.n
     }
 
+    /// Allocate a fresh [`DataId`] handle.
     pub fn alloc(&mut self) -> DataId {
         self.next_id += 1;
         DataId(self.next_id)
@@ -258,6 +296,7 @@ impl Engine {
         self.lin_vec(&[(c0, terms.to_vec())])[0]
     }
 
+    /// Vectorized [`Engine::lin`]: each entry is `(c0, [(ck, ak), ...])`.
     pub fn lin_vec(&mut self, ops: &[(i128, Vec<(i128, DataId)>)]) -> Vec<DataId> {
         let ids = self.alloc_vec(ops.len());
         self.begin_exercise(ops.len());
@@ -275,10 +314,12 @@ impl Engine {
         ids
     }
 
+    /// `[a] + [b]` (local linear exercise).
     pub fn add(&mut self, a: DataId, b: DataId) -> DataId {
         self.lin(0, &[(1, a), (1, b)])
     }
 
+    /// `[a] - [b]` (local linear exercise).
     pub fn sub(&mut self, a: DataId, b: DataId) -> DataId {
         self.lin(0, &[(1, a), (-1, b)])
     }
@@ -289,6 +330,8 @@ impl Engine {
         self.mul_vec(&[(a, b)])[0]
     }
 
+    /// Vectorized [`Engine::mul`]: one mesh exchange for all pairs under
+    /// the `Batched` schedule.
     pub fn mul_vec(&mut self, pairs: &[(DataId, DataId)]) -> Vec<DataId> {
         let k = pairs.len();
         let ids = self.alloc_vec(k);
@@ -331,6 +374,7 @@ impl Engine {
         self.reveal_vec(&[a])[0]
     }
 
+    /// Vectorized [`Engine::reveal`].
     pub fn reveal_vec(&mut self, ids: &[DataId]) -> Vec<u128> {
         self.begin_exercise(ids.len());
         self.star_exchange(false, ids.len());
@@ -353,6 +397,8 @@ impl Engine {
         self.divpub_vec(&[u], d)[0]
     }
 
+    /// Vectorized [`Engine::divpub`]: Alice/Bob deal for all k values in
+    /// one exercise (one message per link per phase under `Batched`).
     pub fn divpub_vec(&mut self, us: &[DataId], d: u128) -> Vec<DataId> {
         assert!(d > 0);
         let k = us.len();

@@ -25,8 +25,6 @@
 
 use super::engine::{DataId, Engine};
 use crate::rng::Rng;
-#[allow(unused_imports)]
-use crate::rng::Prng as _PrngAlias;
 
 #[derive(Clone, Copy, Debug)]
 pub struct NewtonConfig {

@@ -15,8 +15,12 @@ use crate::field::Field;
 /// Shamir context for a fixed party set `1..=n` and degree `t`.
 #[derive(Clone, Debug)]
 pub struct ShamirCtx {
+    /// The field all polynomials live in.
     pub f: Field,
+    /// Number of parties; party `i ∈ 1..=n` holds evaluation point `i`.
     pub n: usize,
+    /// Polynomial degree (threshold): any `t` shares reveal nothing,
+    /// `t + 1` reconstruct. Secure multiplication requires `2t < n`.
     pub t: usize,
     /// Lagrange coefficients at 0 for interpolating from all n points
     /// (valid for any polynomial of degree ≤ n-1, in particular degree 2t).
@@ -29,6 +33,8 @@ impl ShamirCtx {
         Self::with_threshold(f, n, (n - 1) / 2)
     }
 
+    /// Explicit threshold; rejects `2t ≥ n` (which would break secure
+    /// multiplication — the §4 deviation documented in DESIGN.md §4).
     pub fn with_threshold(f: Field, n: usize, t: usize) -> Self {
         assert!(n >= 1 && (n as u128) < f.p, "party ids must be distinct mod p");
         assert!(2 * t < n, "secure multiplication needs 2t+1 <= n (got n={n}, t={t})");
@@ -60,6 +66,8 @@ impl ShamirCtx {
         self.share_deg(secret, self.t, rng)
     }
 
+    /// Share with an explicit polynomial degree (used by tests to build
+    /// degree-2t sharings directly).
     pub fn share_deg<R: Rng + ?Sized>(&self, secret: u128, deg: usize, rng: &mut R) -> Vec<u128> {
         let f = &self.f;
         let mut coeffs = Vec::with_capacity(deg + 1);

@@ -1,0 +1,236 @@
+//! Vendored offline subset of the `anyhow` error-handling crate.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! this workspace path crate implements the (small) API surface `spn_mpc`
+//! actually uses, with the same names and semantics as the real crate:
+//!
+//! * [`Error`] — a boxed, `Display`-able error value carrying an optional
+//!   source chain; any `std::error::Error + Send + Sync + 'static` converts
+//!   into it via `?`.
+//! * [`Result<T>`](Result) — `std::result::Result<T, Error>` with a
+//!   defaulted error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` adapters on
+//!   `Result` and `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros
+//!   (including the message-less `ensure!(cond)` form, which reports the
+//!   stringified condition).
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` itself (that would conflict with the blanket
+//! `From<E: Error>` conversion); it implements `Display` and a
+//! chain-printing `Debug`, which is what `fn main() -> anyhow::Result<()>`
+//! needs.
+
+use std::fmt;
+
+/// A dynamic error value with an optional chain of sources.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error value, preserving it as the source.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap this error with an outer context message (`{context}: {self}`
+    /// when displayed; the chain is kept for `Debug`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The deepest available source message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> + '_ {
+        let mut next: Option<&(dyn std::error::Error + 'static)> =
+            self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut sources = self.chain().peekable();
+        if sources.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, s) in sources.enumerate() {
+                write!(f, "\n    {i}: {s}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `std::result::Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching adapters for `Result` and `Option`, mirroring
+/// `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a context message, eagerly evaluated.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a context message, lazily evaluated only on the error path.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds. The
+/// message-less form reports the stringified condition.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_wraps_messages() {
+        let e = io_fail().with_context(|| "reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+        let e = io_fail().context("ctx").unwrap_err();
+        assert!(e.to_string().starts_with("ctx: "));
+        assert_eq!(e.chain().count(), 1);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u8).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 7);
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(12).unwrap_err().to_string().contains("x too big: 12"));
+        assert!(f(7).unwrap_err().to_string().contains("x != 7"));
+        assert!(f(3).unwrap_err().to_string().contains("three"));
+        let name = "toy";
+        let e: Error = anyhow!("dataset {name} missing");
+        assert_eq!(e.to_string(), "dataset toy missing");
+        let e: Error = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e: Error = anyhow!(format!("from {}", "expr"));
+        assert_eq!(e.to_string(), "from expr");
+    }
+
+    #[test]
+    fn debug_prints_chain() {
+        let e = io_fail().context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+    }
+}
