@@ -8,6 +8,12 @@
 #   make build      — cargo build --release (whole workspace)
 #   make test       — artifacts (best effort) + cargo test -q
 #   make bench      — artifacts (best effort) + all plain-main bench targets
+#   make bench-json — instrumented benches → machine-readable BENCH_*.json
+#                     rows ({bench, metric, value}); artifact-dependent
+#                     targets write an empty array when artifacts are absent.
+#                     BENCH_*.json are the repo's perf trajectory: meant to
+#                     be committed when refreshed (so neither gitignored
+#                     nor removed by `make clean`)
 #   make doc        — cargo doc --no-deps (zero warnings is the contract)
 #   make clean      — remove build output and generated artifacts
 
@@ -15,7 +21,7 @@ PY            ?= python3
 ARTIFACTS_DIR := rust/artifacts
 DATASETS      ?= toy,nltcs,jester,baudio,bnetflix
 
-.PHONY: all build test bench doc artifacts fmt clean
+.PHONY: all build test bench bench-json doc artifacts fmt clean
 
 all: build
 
@@ -39,6 +45,12 @@ test: artifacts
 
 bench: artifacts
 	cargo bench
+
+bench-json: artifacts
+	cargo bench --bench microbench_field -- --json BENCH_microbench_field.json
+	cargo bench --bench table2_members13 -- --json BENCH_table2_members13.json
+	cargo bench --bench table3_members5 -- --json BENCH_table3_members5.json
+	cargo bench --bench kmeans_bench -- --json BENCH_kmeans.json
 
 doc:
 	cargo doc --no-deps

@@ -1,6 +1,7 @@
 //! §6 / Eq. (7): the division primitive powering private k-means — cost and
 //! accuracy across party counts and cluster counts.
 
+use spn_mpc::bench::JsonSink;
 use spn_mpc::field::Field;
 use spn_mpc::kmeans::{plain_kmeans, private_kmeans, KmeansConfig, PartyData};
 use spn_mpc::metrics::render_table;
@@ -24,6 +25,7 @@ fn make_blobs(k: usize, per: usize, seed: u64) -> Vec<Vec<i64>> {
 }
 
 fn main() {
+    let mut json = JsonSink::from_env_args();
     let mut rows = Vec::new();
     for (members, k) in [(2usize, 2usize), (3, 2), (3, 3), (5, 3), (5, 4)] {
         let all = make_blobs(k, 60, 9);
@@ -46,6 +48,11 @@ fn main() {
             }
         }
         assert!(max_dev <= 8, "centroids must match plaintext Lloyd's");
+        let case = format!("n{members}_k{k}");
+        json.push("kmeans", &format!("{case}_messages"), out.stats.messages as f64);
+        json.push("kmeans", &format!("{case}_virtual_s"), out.stats.virtual_time_s);
+        json.push("kmeans", &format!("{case}_wall_s"), wall);
+        json.push("kmeans", &format!("{case}_max_dev"), max_dev as f64);
         rows.push(vec![
             format!("{members}"),
             format!("{k}"),
@@ -64,5 +71,6 @@ fn main() {
             &rows
         )
     );
+    json.finish().expect("write --json output");
     println!("kmeans bench OK");
 }

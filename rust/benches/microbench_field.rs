@@ -1,7 +1,7 @@
 //! L3 microbenchmarks: the field/share/protocol primitives on the hot path.
 //! This is the §Perf instrument — run before/after optimization.
 
-use spn_mpc::bench::{throughput, time_it};
+use spn_mpc::bench::{throughput, time_it, JsonSink};
 use spn_mpc::field::Field;
 use spn_mpc::metrics::render_table;
 use spn_mpc::protocols::division::{private_divide, DivisionConfig};
@@ -10,6 +10,7 @@ use spn_mpc::rng::Prng;
 use spn_mpc::sharing::shamir::ShamirCtx;
 
 fn main() {
+    let mut json = JsonSink::from_env_args();
     let f = Field::paper();
     let mut rng = Prng::seed_from_u64(1);
     let xs: Vec<u128> = (0..4096).map(|_| f.rand(&mut rng)).collect();
@@ -29,6 +30,7 @@ fn main() {
         format!("{:.1} M ops/s", throughput(&s, 4096) / 1e6),
         s.per_iter_str(),
     ]);
+    json.push("microbench_field", "mulmod_mops", throughput(&s, 4096) / 1e6);
 
     let s = time_it(3, 20, || {
         let mut acc = 0u128;
@@ -42,18 +44,22 @@ fn main() {
         format!("{:.1} M ops/s", throughput(&s, 8192) / 1e6),
         s.per_iter_str(),
     ]);
+    json.push("microbench_field", "addsub_mops", throughput(&s, 8192) / 1e6);
 
     let s = time_it(2, 10, || f.inv(xs[0]));
     rows.push(vec!["field inverse (Fermat)".into(), String::new(), s.per_iter_str()]);
+    json.push("microbench_field", "inverse_ns", s.mean_s * 1e9);
 
     for n in [5usize, 13] {
         let ctx = ShamirCtx::new(f, n);
         let mut rng = Prng::seed_from_u64(2);
         let s = time_it(2, 50, || ctx.share(12345, &mut rng));
         rows.push(vec![format!("shamir share (n={n})"), String::new(), s.per_iter_str()]);
+        json.push("microbench_field", &format!("share_n{n}_ns"), s.mean_s * 1e9);
         let sh = ctx.share(12345, &mut rng);
         let s = time_it(2, 200, || ctx.reconstruct(&sh));
         rows.push(vec![format!("shamir reconstruct (n={n})"), String::new(), s.per_iter_str()]);
+        json.push("microbench_field", &format!("reconstruct_n{n}_ns"), s.mean_s * 1e9);
     }
 
     for n in [5usize, 13] {
@@ -62,8 +68,10 @@ fn main() {
         let b = eng.input(2, &[456])[0];
         let s = time_it(2, 50, || eng.mul(a, b));
         rows.push(vec![format!("engine secure mul (n={n})"), String::new(), s.per_iter_str()]);
+        json.push("microbench_field", &format!("secure_mul_n{n}_us"), s.mean_s * 1e6);
         let s = time_it(1, 20, || eng.divpub(a, 256));
         rows.push(vec![format!("engine divpub (n={n})"), String::new(), s.per_iter_str()]);
+        json.push("microbench_field", &format!("divpub_n{n}_us"), s.mean_s * 1e6);
         let num = eng.input(1, &[600])[0];
         let den = eng.input(1, &[2169])[0];
         let s = time_it(1, 5, || private_divide(&mut eng, num, den, 4096, &DivisionConfig::default()));
@@ -72,11 +80,13 @@ fn main() {
             String::new(),
             s.per_iter_str(),
         ]);
+        json.push("microbench_field", &format!("private_division_n{n}_ms"), s.mean_s * 1e3);
     }
 
     println!(
         "{}",
         render_table("L3 primitive microbenchmarks", &["primitive", "throughput", "latency"], &rows)
     );
+    json.finish().expect("write --json output");
     println!("microbench_field OK");
 }

@@ -9,6 +9,7 @@
 
 mod common;
 
+use spn_mpc::bench::JsonSink;
 use spn_mpc::metrics::{group_thousands, render_table};
 use spn_mpc::protocols::engine::Schedule;
 
@@ -19,13 +20,17 @@ const PAPER_MSGS: [(&str, u64, f64, f64); 4] = [
     ("bnetflix", 8_622_747, 347.0, 15640.0),
 ];
 
-fn run(members: usize, table: &str) {
+fn run(members: usize, table: &str, json: &mut JsonSink) {
     let mut rows = Vec::new();
     let mut ours_msgs = Vec::new();
     for (name, p_msgs, p_mb, p_time) in PAPER_MSGS {
         let (report, wall) =
             common::train_run(name, members, Schedule::PerOp).expect("guarded in main");
         ours_msgs.push((name, report.stats.messages as f64));
+        json.push("table2_members13", &format!("{name}_messages"), report.stats.messages as f64);
+        json.push("table2_members13", &format!("{name}_mb"), report.stats.megabytes());
+        json.push("table2_members13", &format!("{name}_virtual_s"), report.stats.virtual_time_s);
+        json.push("table2_members13", &format!("{name}_wall_s"), wall);
         rows.push(vec![
             name.to_string(),
             group_thousands(p_msgs),
@@ -74,8 +79,11 @@ fn run(members: usize, table: &str) {
 }
 
 fn main() {
+    let mut json = JsonSink::from_env_args();
     if !common::guard("table2_members13", &common::DEBD) {
+        json.finish().expect("write --json output");
         return;
     }
-    run(13, "Table 2");
+    run(13, "Table 2", &mut json);
+    json.finish().expect("write --json output");
 }

@@ -3,6 +3,7 @@
 
 mod common;
 
+use spn_mpc::bench::JsonSink;
 use spn_mpc::metrics::{group_thousands, render_table};
 use spn_mpc::protocols::engine::Schedule;
 
@@ -14,7 +15,9 @@ const PAPER: [(&str, u64, f64, f64); 4] = [
 ];
 
 fn main() {
+    let mut json = JsonSink::from_env_args();
     if !common::guard("table3_members5", &common::DEBD) {
+        json.finish().expect("write --json output");
         return;
     }
     let mut rows = Vec::new();
@@ -23,6 +26,10 @@ fn main() {
         let (report, wall) =
             common::train_run(name, 5, Schedule::PerOp).expect("guarded above");
         ours5.push(report.stats.messages as f64);
+        json.push("table3_members5", &format!("{name}_messages"), report.stats.messages as f64);
+        json.push("table3_members5", &format!("{name}_mb"), report.stats.megabytes());
+        json.push("table3_members5", &format!("{name}_virtual_s"), report.stats.virtual_time_s);
+        json.push("table3_members5", &format!("{name}_wall_s"), wall);
         rows.push(vec![
             name.to_string(),
             group_thousands(p_msgs),
@@ -64,5 +71,7 @@ fn main() {
         ratio > 2.5 && ratio < 9.0,
         "scaling must be superlinear in members (mesh resharing)"
     );
+    json.push("table3_members5", "nltcs_member_scaling_ratio", ratio);
+    json.finish().expect("write --json output");
     println!("table3 OK");
 }

@@ -6,6 +6,7 @@
 
 use crate::field::Field;
 use crate::net::{NetConfig, NetStats, SimNet};
+use crate::protocols::session::MpcSession;
 use crate::rng::Prng;
 use crate::sharing::additive::jrsz;
 
@@ -53,13 +54,7 @@ pub fn approx_divide(
         // Local: F^k = round(d * num / den / N), masked.
         let mut sh = Vec::with_capacity(n);
         for (i, loc) in locals.iter().enumerate() {
-            let fk = if loc.den == 0 {
-                0u128
-            } else {
-                // round(d*num / (den*N))
-                let numer = d * loc.num as u128 * 2 + (loc.den as u128 * n as u128);
-                numer / (2 * loc.den as u128 * n as u128)
-            };
+            let fk = local_scaled_fraction(loc, d, n);
             sh.push(f.add(fk % f.p, masks[i]));
         }
 
@@ -73,6 +68,44 @@ pub fn approx_divide(
     }
 
     ApproxOutcome { shares, revealed, stats: net.stats }
+}
+
+/// The local scaled fraction `F^k = ⌊d·num/(den·N)⌉` each party computes
+/// before masking (0 when the party holds no mass).
+pub fn local_scaled_fraction(loc: &LocalFraction, d: u128, n: usize) -> u128 {
+    if loc.den == 0 {
+        0
+    } else {
+        let numer = d * loc.num as u128 * 2 + (loc.den as u128 * n as u128);
+        numer / (2 * loc.den as u128 * n as u128)
+    }
+}
+
+/// §3.2 over any [`MpcSession`] backend: each party's local `F^k` enters as
+/// its additive SQ2PQ contribution (which hides individual terms exactly
+/// like the JRSZ mask does) and only the sum is revealed. Functionally
+/// identical to [`approx_divide`] — the revealed values match element for
+/// element — but deployable over real TCP parties through the same session
+/// the exact path uses. The standalone [`approx_divide`] remains the
+/// reference for the paper's 2-round JRSZ accounting.
+pub fn approx_divide_session<S: MpcSession>(
+    sess: &mut S,
+    params: &[Vec<LocalFraction>],
+    d: u128,
+) -> (Vec<u128>, NetStats) {
+    let n = sess.n();
+    let before = sess.stats();
+    for locals in params {
+        assert_eq!(locals.len(), n);
+    }
+    // One vectorized SQ2PQ for all parameters: member i contributes its
+    // local F^k for every k in a single exercise (k elements per frame).
+    let contribs: Vec<Vec<u128>> = (0..n)
+        .map(|i| params.iter().map(|locals| local_scaled_fraction(&locals[i], d, n)).collect())
+        .collect();
+    let ids = sess.sq2pq_vec(&contribs);
+    let revealed = sess.reveal_vec(&ids);
+    (revealed, sess.stats().delta_since(&before))
 }
 
 #[cfg(test)]
@@ -150,6 +183,31 @@ mod tests {
         let truth = 300.0 / 1200.0;
         assert!((got_iid - truth).abs() < 0.001);
         assert!((got_skew - truth).abs() > 0.05, "skew should bias: {got_skew}");
+    }
+
+    #[test]
+    fn session_variant_matches_standalone_protocol() {
+        use crate::protocols::engine::{Engine, EngineConfig};
+        let f = Field::new(EXAMPLE_P);
+        let locals = vec![
+            vec![
+                LocalFraction { num: 71, den: 256 },
+                LocalFraction { num: 209, den: 786 },
+                LocalFraction { num: 320, den: 1127 },
+            ],
+            vec![
+                LocalFraction { num: 0, den: 0 },
+                LocalFraction { num: 50, den: 100 },
+                LocalFraction { num: 10, den: 40 },
+            ],
+        ];
+        let standalone = approx_divide(&f, &locals, 1000, NetConfig::default(), 4);
+        // the session runs over the paper field; values are small ints so
+        // reconstruction agrees across moduli
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(3).batched());
+        let (revealed, stats) = approx_divide_session(&mut eng, &locals, 1000);
+        assert_eq!(revealed, standalone.revealed);
+        assert!(stats.messages > 0);
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //! intended workload; the `infer` tests quantify accuracy against the
 //! float oracle.
 
-use crate::protocols::engine::{DataId, Engine};
+use crate::protocols::engine::DataId;
+use crate::protocols::session::MpcSession;
 use crate::coordinator::train::SharedModel;
 use crate::net::NetStats;
 use crate::spn::structure::{LayerKind, Structure};
@@ -23,28 +24,28 @@ pub struct Query {
     pub marg: Vec<bool>,
 }
 
-/// Evaluate S(query) over shares; returns the revealed d-scaled root value
-/// and the traffic spent.
-pub fn private_eval(
-    eng: &mut Engine,
+/// Evaluate S(query) over shares on any [`MpcSession`] backend; returns
+/// the revealed d-scaled root value and the traffic spent.
+pub fn private_eval<S: MpcSession>(
+    sess: &mut S,
     st: &Structure,
     model: &SharedModel,
     q: &Query,
     default_leaf_theta: &[f64],
 ) -> (i128, NetStats) {
-    let before = eng.net.stats;
+    let before = sess.stats();
     let d = model.d;
     let w0 = st.num_leaves();
 
     // --- client shares its input: one bit per variable --------------------
     let xvals: Vec<u128> = q.x.iter().map(|&b| b as u128).collect();
-    let x_ids = eng.input(1, &xvals);
+    let x_ids = sess.input_vec(1, &xvals);
 
     // --- leaf values -------------------------------------------------------
     // marginalized leaf → public d; else Bernoulli: x·θ + (1-x)·(d-θ)
     //   = [x]·(2θ - d) + (d - θ), one secure mul per live leaf.
     let mut leaf_vals: Vec<DataId> = Vec::with_capacity(w0);
-    let const_d = eng.constant(d);
+    let const_d = sess.constant(d);
     for leaf in 0..w0 {
         let v = st.leaf_var[leaf];
         if q.marg[v] {
@@ -56,12 +57,12 @@ pub fn private_eval(
             None => {
                 // public default θ (paper mode): d-scaled constant
                 let th = (default_leaf_theta[leaf] * d as f64).round() as u128;
-                eng.constant(th.min(d))
+                sess.constant(th.min(d))
             }
         };
-        let slope = eng.lin(-(d as i128), &[(2, theta)]); // 2θ - d
-        let prod = eng.mul(x_ids[v], slope);
-        let val = eng.lin(d as i128, &[(1, prod), (-1, theta)]); // d - θ + x(2θ-d)
+        let slope = sess.lin(-(d as i128), &[(2, theta)]); // 2θ - d
+        let prod = sess.mul(x_ids[v], slope);
+        let val = sess.lin(d as i128, &[(1, prod), (-1, theta)]); // d - θ + x(2θ-d)
         leaf_vals.push(val);
     }
 
@@ -87,8 +88,8 @@ pub fn private_eval(
                     // sequential secure mult + truncate to stay d-scaled
                     let mut acc = get(ch[0].0);
                     for &(c, _) in &ch[1..] {
-                        let m = eng.mul(acc, get(c));
-                        acc = eng.divpub(m, d);
+                        let m = sess.mul(acc, get(c));
+                        acc = sess.divpub(m, d);
                     }
                     out.push(acc);
                 }
@@ -96,10 +97,10 @@ pub fn private_eval(
                     // Σ_j w_j · v_j / d — pairwise muls then one truncate
                     let pairs: Vec<(DataId, DataId)> =
                         ch.iter().map(|&(c, p)| (model.sum_w[p as usize], get(c))).collect();
-                    let prods = eng.mul_vec(&pairs);
+                    let prods = sess.mul_vec(&pairs);
                     let terms: Vec<(i128, DataId)> = prods.iter().map(|&p| (1, p)).collect();
-                    let sum = eng.lin(0, &terms);
-                    out.push(eng.divpub(sum, d));
+                    let sum = sess.lin(0, &terms);
+                    out.push(sess.divpub(sum, d));
                 }
             }
         }
@@ -107,21 +108,15 @@ pub fn private_eval(
     }
 
     // --- reveal root to the client ------------------------------------------
-    let root = eng.reveal(prev[0]);
-    let val = eng.field.to_i128(root);
-    let mut stats = eng.net.stats;
-    stats.messages -= before.messages;
-    stats.bytes -= before.bytes;
-    stats.rounds -= before.rounds;
-    stats.exercises -= before.exercises;
-    stats.virtual_time_s -= before.virtual_time_s;
+    let val = sess.reveal_int(prev[0]);
+    let stats = sess.stats().delta_since(&before);
     (val, stats)
 }
 
 /// Conditional Pr(x | e) = S(x∧e)/S(e) — two private evaluations, client
 /// divides the revealed d-scaled values (§4).
-pub fn private_conditional(
-    eng: &mut Engine,
+pub fn private_conditional<S: MpcSession>(
+    sess: &mut S,
     st: &Structure,
     model: &SharedModel,
     x_assign: &[(usize, u8)],
@@ -141,13 +136,13 @@ pub fn private_conditional(
         marg_e[v] = false;
     }
     let (sxe, st1) = private_eval(
-        eng,
+        sess,
         st,
         model,
         &Query { x: x.clone(), marg: marg_xe },
         default_leaf_theta,
     );
-    let (se, st2) = private_eval(eng, st, model, &Query { x, marg: marg_e }, default_leaf_theta);
+    let (se, st2) = private_eval(sess, st, model, &Query { x, marg: marg_e }, default_leaf_theta);
     let p = if se <= 0 { 0.0 } else { (sxe.max(0) as f64) / (se as f64) };
     let stats = NetStats {
         messages: st1.messages + st2.messages,
@@ -165,7 +160,7 @@ mod tests {
     use crate::coordinator::train::{train, TrainConfig};
     use crate::datasets;
     use crate::field::Field;
-    use crate::protocols::engine::EngineConfig;
+    use crate::protocols::engine::{Engine, EngineConfig};
     use crate::spn::{eval, learn};
     use crate::spn::structure::Structure;
 

@@ -1,7 +1,11 @@
-//! The paper's system coordinators.
+//! The paper's system coordinators, generic over the transport-agnostic
+//! [`MpcSession`](crate::protocols::session::MpcSession) backend: the same
+//! code drives the in-process simulation (paper-exact accounting) and real
+//! TCP member threads (DESIGN.md §Session API).
 //!
 //! * [`approx`] — the §3.2 approximate path (additive shares + JRSZ), with
-//!   the paper's Example 1 reproduced digit-for-digit in tests.
+//!   the paper's Example 1 reproduced digit-for-digit in tests; the
+//!   session-backed variant runs the same math over any backend.
 //! * [`train`]  — the §3.4 exact path: per-party counts → SQ2PQ → one
 //!   Newton inversion per sum node → per-edge multiply + truncate.
 //! * [`infer`]  — §4 private marginal inference over the learned shares.

@@ -19,6 +19,7 @@
 
 use crate::protocols::division::{divide_shared_den, DivisionConfig};
 use crate::protocols::engine::{DataId, Engine};
+use crate::protocols::session::MpcSession;
 use crate::net::NetStats;
 use crate::spn::learn::SMOOTH;
 use crate::spn::structure::Structure;
@@ -54,21 +55,23 @@ pub struct TrainReport {
     pub sum_edges: usize,
 }
 
-/// Run private training. `shard_counts[i]` is party i's local counts vector
-/// (length `st.counts_len()`), `rows_total` the public dataset size bound.
-pub fn train(
-    eng: &mut Engine,
+/// Run private training over any [`MpcSession`] backend — the in-process
+/// simulation ([`Engine`]) or real TCP parties. `shard_counts[i]` is party
+/// i's local counts vector (length `st.counts_len()`), `rows_total` the
+/// public dataset size bound.
+pub fn train<S: MpcSession>(
+    sess: &mut S,
     st: &Structure,
     shard_counts: &[Vec<u64>],
     rows_total: u64,
     cfg: &TrainConfig,
 ) -> (SharedModel, TrainReport) {
-    let n = eng.n();
+    let n = sess.n();
     assert_eq!(shard_counts.len(), n);
     for c in shard_counts {
         assert_eq!(c.len(), st.counts_len());
     }
-    let before = eng.net.stats;
+    let before = sess.stats();
     let bmax = rows_total as u128 + SMOOTH as u128;
 
     // Enter the MPC: parties SQ2PQ their local count contributions for every
@@ -80,16 +83,16 @@ pub fn train(
         let den_idx = st.param_den[g[0]];
         let den_locals: Vec<Vec<u128>> =
             (0..n).map(|i| vec![shard_counts[i][den_idx] as u128]).collect();
-        let den_raw = eng.sq2pq_inputs(&den_locals)[0];
+        let den_raw = sess.sq2pq_vec(&den_locals)[0];
         // +SMOOTH smoothing (public linear op)
-        let den = eng.lin(SMOOTH as i128, &[(1, den_raw)]);
+        let den = sess.lin(SMOOTH as i128, &[(1, den_raw)]);
 
         let num_locals: Vec<Vec<u128>> = (0..n)
             .map(|i| g.iter().map(|&k| shard_counts[i][st.param_num[k]] as u128).collect())
             .collect();
-        let nums = eng.sq2pq_inputs(&num_locals);
+        let nums = sess.sq2pq_vec(&num_locals);
 
-        let ws = divide_shared_den(eng, &nums, den, bmax, &cfg.division);
+        let ws = divide_shared_den(sess, &nums, den, bmax, &cfg.division);
         divisions += 1;
         for (&k, w) in g.iter().zip(ws) {
             sum_w[k] = Some(w);
@@ -103,12 +106,12 @@ pub fn train(
             let k = st.num_sum_edges + leaf;
             let den_locals: Vec<Vec<u128>> =
                 (0..n).map(|i| vec![shard_counts[i][st.param_den[k]] as u128]).collect();
-            let den_raw = eng.sq2pq_inputs(&den_locals)[0];
-            let den = eng.lin(SMOOTH as i128, &[(1, den_raw)]);
+            let den_raw = sess.sq2pq_vec(&den_locals)[0];
+            let den = sess.lin(SMOOTH as i128, &[(1, den_raw)]);
             let num_locals: Vec<Vec<u128>> =
                 (0..n).map(|i| vec![shard_counts[i][st.param_num[k]] as u128]).collect();
-            let num = eng.sq2pq_inputs(&num_locals)[0];
-            let ws = divide_shared_den(eng, &[num], den, bmax, &cfg.division);
+            let num = sess.sq2pq_vec(&num_locals)[0];
+            let ws = divide_shared_den(sess, &[num], den, bmax, &cfg.division);
             divisions += 1;
             thetas.push(ws[0]);
         }
@@ -122,23 +125,21 @@ pub fn train(
         leaf_theta,
         d: cfg.division.newton.d,
     };
-    let mut stats = eng.net.stats;
-    stats.messages -= before.messages;
-    stats.bytes -= before.bytes;
-    stats.rounds -= before.rounds;
-    stats.exercises -= before.exercises;
-    stats.virtual_time_s -= before.virtual_time_s;
+    let stats = sess.stats().delta_since(&before);
     let report = TrainReport { stats, divisions, sum_edges: st.num_sum_edges };
     (model, report)
 }
 
-/// Reveal the learned d-scaled sum weights (diagnostic / deployment step).
-pub fn reveal_weights(eng: &mut Engine, model: &SharedModel) -> Vec<i128> {
-    let vals = eng.reveal_vec(&model.sum_w);
-    vals.into_iter().map(|v| eng.field.to_i128(v)).collect()
+/// Reveal the learned d-scaled sum weights (diagnostic / deployment step;
+/// works over any backend and is how the TCP path reads its result out).
+pub fn reveal_weights<S: MpcSession>(sess: &mut S, model: &SharedModel) -> Vec<i128> {
+    let f = sess.field();
+    let vals = sess.reveal_vec(&model.sum_w);
+    vals.into_iter().map(|v| f.to_i128(v)).collect()
 }
 
-/// Peek (no traffic accounting) — for tests and verification reports.
+/// Peek (no traffic accounting) — simulation-only diagnostics; TCP
+/// deployments must use [`reveal_weights`].
 pub fn peek_weights(eng: &Engine, model: &SharedModel) -> Vec<i128> {
     model.sum_w.iter().map(|&id| eng.peek_int(id)).collect()
 }

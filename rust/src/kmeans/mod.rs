@@ -11,7 +11,7 @@
 //! Coordinates are fixed-point integers scaled by `scale` (e.g. 1000).
 
 use crate::protocols::division::{divide_shared_den, DivisionConfig};
-use crate::protocols::engine::Engine;
+use crate::protocols::session::MpcSession;
 use crate::net::NetStats;
 
 /// One party's local view of the data: points in fixed-point coordinates.
@@ -40,19 +40,20 @@ fn dist2(a: &[i64], b: &[i64]) -> i128 {
     a.iter().zip(b).map(|(&x, &y)| ((x - y) as i128).pow(2)).sum()
 }
 
-/// Run private k-means across the engine's parties. `init` are public
-/// initial centroids (as in [2], the centroids are revealed each round;
-/// the private inputs are the per-party point sets).
-pub fn private_kmeans(
-    eng: &mut Engine,
+/// Run private k-means across the session's parties (simulated engine or
+/// real TCP members). `init` are public initial centroids (as in [2], the
+/// centroids are revealed each round; the private inputs are the per-party
+/// point sets).
+pub fn private_kmeans<S: MpcSession>(
+    sess: &mut S,
     parties: &[PartyData],
     init: &[Vec<i64>],
     cfg: &KmeansConfig,
 ) -> KmeansOutcome {
-    let n = eng.n();
+    let n = sess.n();
     assert_eq!(parties.len(), n);
     let dim = init[0].len();
-    let before = eng.net.stats;
+    let before = sess.stats();
     let mut centroids: Vec<Vec<i64>> = init.to_vec();
     let total_points: u64 = parties.iter().map(|p| p.points.len() as u64).sum();
     // public bound for the division: count ≤ total points; sums need the
@@ -98,22 +99,23 @@ pub fn private_kmeans(
         let _ = max_coord_sum;
         let mut new_centroids = Vec::with_capacity(cfg.k);
         for c in 0..cfg.k {
-            let den_raw = eng.sq2pq_inputs(&cnt_loc[c].iter().map(|&v| vec![v]).collect::<Vec<_>>())[0];
-            let den = eng.lin(1, &[(1, den_raw)]); // +1 smoothing, b ≥ 1
+            let den_raw = sess.sq2pq_vec(&cnt_loc[c].iter().map(|&v| vec![v]).collect::<Vec<_>>())[0];
+            let den = sess.lin(1, &[(1, den_raw)]); // +1 smoothing, b ≥ 1
             let nums: Vec<_> = (0..dim)
                 .map(|d| {
-                    eng.sq2pq_inputs(
+                    sess.sq2pq_vec(
                         &sum_loc[c][d].iter().map(|&v| vec![v]).collect::<Vec<_>>(),
                     )[0]
                 })
                 .collect();
-            let ws = divide_shared_den(eng, &nums, den, total_points as u128 + 1, &cfg.division);
+            let ws = divide_shared_den(sess, &nums, den, total_points as u128 + 1, &cfg.division);
             // reveal the centroid (public per [2])
-            let revealed = eng.reveal_vec(&ws);
+            let f = sess.field();
+            let revealed = sess.reveal_vec(&ws);
             let coord: Vec<i64> = revealed
                 .iter()
                 .map(|&v| {
-                    let q = eng.field.to_i128(v).max(0);
+                    let q = f.to_i128(v).max(0);
                     // q ≈ d·sum/count → divide by d to get the mean
                     (q / cfg.division.newton.d as i128) as i64 + offset
                 })
@@ -128,12 +130,7 @@ pub fn private_kmeans(
         centroids = new_centroids;
     }
 
-    let mut stats = eng.net.stats;
-    stats.messages -= before.messages;
-    stats.bytes -= before.bytes;
-    stats.rounds -= before.rounds;
-    stats.exercises -= before.exercises;
-    stats.virtual_time_s -= before.virtual_time_s;
+    let stats = sess.stats().delta_since(&before);
     KmeansOutcome { centroids, assignments_counts: counts_out, stats, iterations_run }
 }
 
@@ -171,7 +168,7 @@ pub fn plain_kmeans(all_points: &[Vec<i64>], init: &[Vec<i64>], iters: usize) ->
 mod tests {
     use super::*;
     use crate::field::Field;
-    use crate::protocols::engine::EngineConfig;
+    use crate::protocols::engine::{Engine, EngineConfig};
     use crate::rng::{Prng, Rng};
 
     fn blob(rng: &mut Prng, cx: i64, cy: i64, n: usize, spread: i64) -> Vec<Vec<i64>> {

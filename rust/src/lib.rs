@@ -10,8 +10,9 @@
 //!
 //! Architecture (three layers; see DESIGN.md):
 //! * **rust (this crate)** — the Layer-3 coordinator: fields, shares, the
-//!   exercise engine with exact message accounting, the paper's protocols,
-//!   baselines, CLI.
+//!   transport-agnostic session API ([`protocols::MpcSession`]) with its
+//!   two backends (the exercise engine with exact message accounting, and
+//!   real-TCP member threads), the paper's protocols, baselines, CLI.
 //! * **JAX (python/compile)** — Layer-2 per-party local counting/eval
 //!   graphs, AOT-compiled to HLO text artifacts.
 //! * **Pallas (python/compile/kernels)** — Layer-1 masked-matmul layer

@@ -2,10 +2,12 @@
 //!
 //! Subcommands:
 //!   train   --dataset <name> [--members N] [--latency MS] [--batched]
-//!           [--learn-leaves] [--native-counts] — private parameter learning
+//!           [--learn-leaves] [--native-counts] [--backend sim|tcp]
+//!           — private parameter learning
 //!   infer   --dataset <name> [--members N] [--evidence v=b,...]
-//!           [--target v=b,...] — private marginal inference
-//!   kmeans  [--members N] [--k K] [--points P] — private clustering demo
+//!           [--target v=b,...] [--backend sim|tcp] — private inference
+//!   kmeans  [--members N] [--k K] [--points P] [--backend sim|tcp]
+//!           — private clustering demo
 //!   tables  [--members N] — reproduce the paper's Tables 1–3 rows
 //!   info    — artifact / runtime status
 //!
@@ -13,14 +15,15 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use spn_mpc::coordinator::infer::private_conditional;
-use spn_mpc::coordinator::train::{peek_weights, train, TrainConfig};
+use spn_mpc::coordinator::train::{peek_weights, reveal_weights, train, TrainConfig};
 use spn_mpc::datasets;
 use spn_mpc::field::Field;
 use spn_mpc::kmeans::{plain_kmeans, private_kmeans, KmeansConfig, PartyData};
 use spn_mpc::metrics::{group_thousands, render_table, stats_row};
+use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
 use spn_mpc::net::NetConfig;
 use spn_mpc::protocols::division::DivisionConfig;
 use spn_mpc::protocols::engine::{Engine, EngineConfig, Schedule};
@@ -87,10 +90,36 @@ fn engine_config(args: &Args, n: usize) -> EngineConfig {
     cfg
 }
 
+fn tcp_config(args: &Args, n: usize) -> TcpSessionConfig {
+    let mut cfg = TcpSessionConfig::new(n);
+    if let Some(t) = args.get("threshold") {
+        cfg.threshold = Some(t.parse().expect("bad threshold"));
+    }
+    // Simulation-only flags have no meaning on real sockets; say so rather
+    // than silently ignoring them.
+    if args.get("latency").is_some() {
+        eprintln!("[backend] note: --latency models the simulation only; tcp runs real links");
+    }
+    if args.has("batched") {
+        eprintln!("[backend] note: --batched selects a simulation schedule; tcp always packs vectors");
+    }
+    cfg
+}
+
+/// The `--backend` flag shared by train/infer/kmeans: `sim` (default, the
+/// accounted in-process simulation) or `tcp` (real member threads over
+/// loopback sockets; same seed → byte-identical results).
+fn backend(args: &Args) -> Result<&str> {
+    match args.get("backend").unwrap_or("sim") {
+        b @ ("sim" | "tcp") => Ok(b),
+        other => bail!("unknown --backend {other} (expected sim|tcp)"),
+    }
+}
+
 fn load_structure(name: &str) -> Result<Structure> {
     let dir = runtime::default_artifacts_dir();
     Structure::load(dir.join(format!("{name}.structure.json")))
-        .with_context(|| format!("structure for {name} — run `make artifacts`"))
+        .map_err(|e| e.context(format!("structure for {name} — run `make artifacts`")))
 }
 
 /// Per-party counts: via the PJRT runtime (AOT artifacts) by default, or
@@ -122,19 +151,31 @@ fn cmd_train(args: &Args) -> Result<()> {
     let shards = datasets::partition(&data, n);
     let counts = shard_counts(name, &st, &shards, args.has("native-counts"))?;
 
-    let mut eng = Engine::new(Field::paper(), engine_config(args, n));
     let cfg = TrainConfig {
         division: DivisionConfig::default(),
         learn_leaves: args.has("learn-leaves"),
     };
     let t0 = std::time::Instant::now();
-    let (model, report) = train(&mut eng, &st, &counts, rows as u64, &cfg);
+    let (d, got, report) = match backend(args)? {
+        "tcp" => {
+            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let (model, report) = train(&mut sess, &st, &counts, rows as u64, &cfg);
+            let got = reveal_weights(&mut sess, &model);
+            sess.shutdown()?;
+            println!("[backend] tcp: {n} member threads over loopback");
+            (model.d, got, report)
+        }
+        _ => {
+            let mut eng = Engine::new(Field::paper(), engine_config(args, n));
+            let (model, report) = train(&mut eng, &st, &counts, rows as u64, &cfg);
+            (model.d, peek_weights(&eng, &model), report)
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     // verification vs centralized oracle
     let global = eval::counts(&st, &data);
-    let oracle = learn::ml_weights_fixed(&st, &global, model.d);
-    let got = peek_weights(&eng, &model);
+    let oracle = learn::ml_weights_fixed(&st, &global, d);
     let max_err = got
         .iter()
         .zip(&oracle)
@@ -151,11 +192,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.stats.virtual_time_s,
         wall,
     );
-    println!("max |private - oracle| over d-scaled sum weights: {max_err} (d={})", model.d);
+    println!("max |private - oracle| over d-scaled sum weights: {max_err} (d={d})");
 
     // model quality
     let theta = learn::default_leaf_theta(&st);
-    let params = learn::params_from_fixed(&st, &got, &theta, model.d);
+    let params = learn::params_from_fixed(&st, &got, &theta, d);
     let ml = learn::ml_params(&st, &global);
     println!(
         "mean log-likelihood: private {:.4} vs centralized {:.4} vs ground-truth {:.4}",
@@ -187,23 +228,40 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let data = datasets::sample(&st, &gt, rows, 42);
     let shards = datasets::partition(&data, n);
     let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
-    let mut eng_cfg = engine_config(args, n);
-    eng_cfg.schedule = Schedule::Batched;
-    let mut eng = Engine::new(Field::paper(), eng_cfg);
-    let (model, _) = train(&mut eng, &st, &counts, rows as u64, &TrainConfig::default());
 
     let theta = learn::default_leaf_theta(&st);
     let target = parse_assign(args.get("target").unwrap_or("0=1"))?;
     let evidence = parse_assign(args.get("evidence").unwrap_or(""))?;
 
-    // switch to per-op accounting for the inference cost report
-    eng.cfg.schedule = if args.has("batched") { Schedule::Batched } else { Schedule::PerOp };
-    let (p, stats) = private_conditional(&mut eng, &st, &model, &target, &evidence, &theta);
+    let (p, stats, fixed, d) = match backend(args)? {
+        "tcp" => {
+            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let (model, _) = train(&mut sess, &st, &counts, rows as u64, &TrainConfig::default());
+            let (p, stats) =
+                private_conditional(&mut sess, &st, &model, &target, &evidence, &theta);
+            let fixed = reveal_weights(&mut sess, &model);
+            sess.shutdown()?;
+            println!("[backend] tcp: {n} member threads over loopback");
+            (p, stats, fixed, model.d)
+        }
+        _ => {
+            let mut eng_cfg = engine_config(args, n);
+            eng_cfg.schedule = Schedule::Batched;
+            let mut eng = Engine::new(Field::paper(), eng_cfg);
+            let (model, _) = train(&mut eng, &st, &counts, rows as u64, &TrainConfig::default());
+            // switch to per-op accounting for the inference cost report
+            eng.cfg.schedule =
+                if args.has("batched") { Schedule::Batched } else { Schedule::PerOp };
+            let (p, stats) =
+                private_conditional(&mut eng, &st, &model, &target, &evidence, &theta);
+            let fixed = peek_weights(&eng, &model);
+            (p, stats, fixed, model.d)
+        }
+    };
     println!("Pr({target:?} | {evidence:?}) = {p:.4}");
 
     // oracle comparison
-    let fixed = peek_weights(&eng, &model);
-    let params = learn::params_from_fixed(&st, &fixed, &theta, model.d);
+    let params = learn::params_from_fixed(&st, &fixed, &theta, d);
     let mut x = vec![0u8; st.num_vars];
     let mut m_xe = vec![true; st.num_vars];
     let mut m_e = vec![true; st.num_vars];
@@ -216,7 +274,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     }
     let want = eval::logeval(&st, &x, &m_xe, &params).exp()
         / eval::logeval(&st, &x, &m_e, &params).exp();
-    println!("float oracle: {want:.4}   (fixed-point d = {})", model.d);
+    println!("float oracle: {want:.4}   (fixed-point d = {d})");
     println!(
         "inference cost: {} messages, {:.2} MB, {:.1} s virtual",
         group_thousands(stats.messages),
@@ -249,9 +307,20 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     let init: Vec<Vec<i64>> =
         (0..k).map(|i| vec![500 + 13 * i as i64, 500 - 17 * i as i64]).collect();
 
-    let mut eng = Engine::new(Field::paper(), engine_config(args, n));
     let cfg = KmeansConfig { k, iters: 10, division: DivisionConfig::default() };
-    let out = private_kmeans(&mut eng, &parties, &init, &cfg);
+    let out = match backend(args)? {
+        "tcp" => {
+            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let out = private_kmeans(&mut sess, &parties, &init, &cfg);
+            sess.shutdown()?;
+            println!("[backend] tcp: {n} member threads over loopback");
+            out
+        }
+        _ => {
+            let mut eng = Engine::new(Field::paper(), engine_config(args, n));
+            private_kmeans(&mut eng, &parties, &init, &cfg)
+        }
+    };
     let plain = plain_kmeans(&all, &init, 10);
     println!("private centroids: {:?}", out.centroids);
     println!("plain   centroids: {plain:?}");
@@ -360,6 +429,9 @@ fn main() -> Result<()> {
                  usage: spn-mpc <train|infer|kmeans|tables|info> [flags]\n\
                  common flags: --dataset <toy|nltcs|jester|baudio|bnetflix> --members N\n\
                  \t--latency MS --batched --learn-leaves --native-counts --rows N\n\
+                 \t--backend sim|tcp (train/infer/kmeans; default sim = accounted\n\
+                 \t    simulation, tcp = real member threads over loopback sockets\n\
+                 \t    running the same protocol byte-identically)\n\
                  infer flags: --target v=b,... --evidence v=b,...\n\
                  kmeans flags: --k K --points P"
             );

@@ -14,12 +14,14 @@
 //!   a schedule broadcast down, the exercise's internal rounds, then a
 //!   "finished" message from every member — all accounted.
 //!
-//! A real tokio/TCP transport with the same wire format lives in
-//! [`tcp`]; it is used by the smoke-scale distributed test to show the
-//! protocol code actually runs over sockets.
+//! A real TCP transport with the same wire format lives in [`tcp`], and
+//! [`tcp_session::TcpSession`] drives the full session vocabulary over it —
+//! the deployment-path implementation of
+//! [`MpcSession`](crate::protocols::session::MpcSession), byte-identical to
+//! the simulation under the same seed.
 
-pub mod distributed;
 pub mod tcp;
+pub mod tcp_session;
 
 /// Wire/latency model. Defaults reproduce the paper's setting.
 #[derive(Clone, Copy, Debug)]
@@ -63,6 +65,19 @@ pub struct NetStats {
 impl NetStats {
     pub fn megabytes(&self) -> f64 {
         self.bytes as f64 / 1_000_000.0
+    }
+
+    /// Difference of two running-total snapshots: `self` (taken after a
+    /// protocol ran) minus `before`. The standard way to cost one protocol
+    /// run over any [`MpcSession`](crate::protocols::session::MpcSession).
+    pub fn delta_since(&self, before: &NetStats) -> NetStats {
+        NetStats {
+            messages: self.messages - before.messages,
+            bytes: self.bytes - before.bytes,
+            rounds: self.rounds - before.rounds,
+            exercises: self.exercises - before.exercises,
+            virtual_time_s: self.virtual_time_s - before.virtual_time_s,
+        }
     }
 }
 
@@ -164,6 +179,22 @@ mod tests {
         net.end_round();
         assert_eq!(net.stats.rounds, 0);
         assert_eq!(net.stats.virtual_time_s, 0.0);
+    }
+
+    #[test]
+    fn delta_since_diffs_every_counter() {
+        let mut net = SimNet::new(NetConfig::default());
+        net.send(0, 1, 3);
+        net.end_round();
+        let before = net.stats;
+        net.send(1, 0, 2);
+        net.send(0, 1, 2);
+        net.end_round();
+        let d = net.stats.delta_since(&before);
+        assert_eq!(d.messages, 2);
+        assert_eq!(d.rounds, 1);
+        assert_eq!(d.bytes, 2 * (24 + 20));
+        assert!(d.virtual_time_s > 0.0);
     }
 
     #[test]

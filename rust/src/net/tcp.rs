@@ -9,7 +9,8 @@
 //!
 //! The vendored crate set has no async runtime, so this uses blocking
 //! sockets and `std::thread` — entirely adequate for the N ≤ 13 member
-//! smoke tests; the exercise engine itself is transport-agnostic.
+//! sessions. [`super::tcp_session::TcpSession`] drives the full
+//! transport-agnostic session vocabulary over these frames.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};

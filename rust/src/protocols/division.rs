@@ -10,8 +10,9 @@
 //! this is why the paper's Tables 2–3 costs scale with the number of sum
 //! nodes, not the number of parameters.
 
-use super::engine::{DataId, Engine};
+use super::engine::DataId;
 use super::newton::{newton_inverse, NewtonConfig};
+use super::session::MpcSession;
 
 /// End-to-end division parameters (paper §5.3: d=256, n=16, t=5).
 #[derive(Clone, Copy, Debug, Default)]
@@ -21,39 +22,39 @@ pub struct DivisionConfig {
     pub newton: NewtonConfig,
 }
 
-/// `[num]/[den]·d` for a single pair. `bmax` is the public upper bound on
-/// the denominator (the total dataset size — public in the horizontal
-/// partitioning setting).
-pub fn private_divide(
-    eng: &mut Engine,
+/// `[num]/[den]·d` for a single pair, over any [`MpcSession`] backend.
+/// `bmax` is the public upper bound on the denominator (the total dataset
+/// size — public in the horizontal partitioning setting).
+pub fn private_divide<S: MpcSession>(
+    sess: &mut S,
     num: DataId,
     den: DataId,
     bmax: u128,
     cfg: &DivisionConfig,
 ) -> DataId {
-    divide_shared_den(eng, &[num], den, bmax, cfg)[0]
+    divide_shared_den(sess, &[num], den, bmax, cfg)[0]
 }
 
 /// All numerators against one shared denominator: one Newton inversion,
 /// then per-numerator multiply + truncate.
-pub fn divide_shared_den(
-    eng: &mut Engine,
+pub fn divide_shared_den<S: MpcSession>(
+    sess: &mut S,
     nums: &[DataId],
     den: DataId,
     bmax: u128,
     cfg: &DivisionConfig,
 ) -> Vec<DataId> {
-    let (inv, pl) = newton_inverse(eng, den, bmax, &cfg.newton);
+    let (inv, pl) = newton_inverse(sess, den, bmax, &cfg.newton);
     let pairs: Vec<(DataId, DataId)> = nums.iter().map(|&n| (n, inv)).collect();
-    let prods = eng.mul_vec(&pairs);
-    eng.divpub_vec(&prods, pl.final_scale)
+    let prods = sess.mul_vec(&pairs);
+    sess.divpub_vec(&prods, pl.final_scale)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::field::Field;
-    use crate::protocols::engine::EngineConfig;
+    use crate::protocols::engine::{Engine, EngineConfig};
 
     fn eng(n: usize) -> Engine {
         Engine::new(Field::paper(), EngineConfig::new(n))

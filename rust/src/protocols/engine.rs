@@ -103,6 +103,11 @@ pub struct Member {
 impl Member {
     /// Diagnostics/tests only: expose this member's raw share (used by the
     /// privacy smoke tests to check shares don't coincide with secrets).
+    /// Compiled only for the crate's own tests or under the opt-in
+    /// `test-introspection` feature — a raw-share accessor is
+    /// privacy-sensitive and not part of the advertised public API.
+    #[cfg(any(test, feature = "test-introspection"))]
+    #[doc(hidden)]
     pub fn share_for_test(&self, a: DataId) -> u128 {
         self.get(a)
     }

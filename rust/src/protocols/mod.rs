@@ -10,11 +10,17 @@
 //!   starting from u=1 (the paper's headline protocol).
 //! * [`division`] — the full private division `⌊Σnum/Σden⌋·d` pipeline
 //!   (Eq. 3): numerator×inverse, then secure truncation.
+//! * [`session`]  — the transport-agnostic [`MpcSession`] trait all
+//!   protocol code is generic over: [`SimSession`] (= the engine, with the
+//!   paper-exact accounting) or the real-socket
+//!   [`crate::net::tcp_session::TcpSession`].
 
 pub mod divpub;
 pub mod division;
 pub mod engine;
 pub mod newton;
+pub mod session;
 
 pub use division::DivisionConfig;
 pub use engine::{DataId, Engine, EngineConfig, Schedule};
+pub use session::{MpcSession, SimSession};

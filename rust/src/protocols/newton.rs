@@ -23,7 +23,8 @@
 //! implementation refinement of the same protocol; the ablation bench
 //! `ablation_newton` sweeps `g`, including the paper-literal `g = 0`.
 
-use super::engine::{DataId, Engine};
+use super::engine::DataId;
+use super::session::MpcSession;
 use crate::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
@@ -116,27 +117,28 @@ pub fn newton_plain<R: Rng + ?Sized>(
     (u, pl)
 }
 
-/// The secure protocol over the exercise engine. `[b]` must hold an integer
-/// in `[0, bmax]`; returns `([u], plan)` with `u ≈ d·E/b` (u is the shared
-/// approximate inverse, E = plan.final_scale; for b = 0 the result is a
-/// bounded garbage value that multiplies to 0 weights downstream).
-pub fn newton_inverse(eng: &mut Engine, b: DataId, bmax: u128, cfg: &NewtonConfig)
+/// The secure protocol over any [`MpcSession`] backend (the simulated
+/// engine or real TCP parties). `[b]` must hold an integer in `[0, bmax]`;
+/// returns `([u], plan)` with `u ≈ d·E/b` (u is the shared approximate
+/// inverse, E = plan.final_scale; for b = 0 the result is a bounded garbage
+/// value that multiplies to 0 weights downstream).
+pub fn newton_inverse<S: MpcSession>(sess: &mut S, b: DataId, bmax: u128, cfg: &NewtonConfig)
     -> (DataId, NewtonPlan) {
     let pl = plan(cfg, bmax);
     let g = 1i128 << cfg.guard_bits;
-    let mut u = eng.constant(1);
+    let mut u = sess.constant(1);
     let mut dscale = pl.d0;
     for it in 0..(pl.warmup + pl.refine) {
         if it >= pl.warmup {
             dscale *= 2;
-            u = eng.lin(0, &[(2, u)]);
+            u = sess.lin(0, &[(2, u)]);
         }
-        let t = eng.mul(u, b);
-        let tg = eng.lin(0, &[(g, t)]);
-        let s = eng.divpub(tg, dscale);
-        let corr = eng.lin(2 * g, &[(-1, s)]);
-        let v = eng.mul(u, corr);
-        u = eng.divpub(v, g as u128);
+        let t = sess.mul(u, b);
+        let tg = sess.lin(0, &[(g, t)]);
+        let s = sess.divpub(tg, dscale);
+        let corr = sess.lin(2 * g, &[(-1, s)]);
+        let v = sess.mul(u, corr);
+        u = sess.divpub(v, g as u128);
     }
     (u, pl)
 }
@@ -145,7 +147,7 @@ pub fn newton_inverse(eng: &mut Engine, b: DataId, bmax: u128, cfg: &NewtonConfi
 mod tests {
     use super::*;
     use crate::field::Field;
-    use crate::protocols::engine::EngineConfig;
+    use crate::protocols::engine::{Engine, EngineConfig};
     use crate::rng::Prng;
 
     fn close(u: i128, b: u128, pl: &NewtonPlan, d: u128) -> bool {

@@ -1,0 +1,208 @@
+//! The transport-agnostic MPC session API (DESIGN.md §Session API).
+//!
+//! Every protocol in this crate — training (Eq. (3)/§3.4), inference (§4),
+//! k-means (§6), the Newton inverse — is written against [`MpcSession`],
+//! the vectorized primitive vocabulary the coordinators actually use:
+//! `input_vec`, local affine ops (`lin_vec`), `mul_vec`, `divpub_vec`,
+//! `reveal_vec`, `sq2pq_vec`, plus [`MpcSession::stats`] for cost
+//! accounting. Two first-class implementations exist:
+//!
+//! * [`SimSession`] (= [`Engine`]) — the in-process Manager/Member
+//!   simulation with the paper-exact message/byte/round accounting of
+//!   Tables 2–3. **Authoritative for all reported numbers.**
+//! * [`crate::net::tcp_session::TcpSession`] — a Manager-side driver plus
+//!   one OS thread per member speaking the framed TCP protocol of
+//!   [`crate::net::tcp`]. The deployment path: the same coordinator code
+//!   runs unchanged over real sockets and, under the same seed, produces
+//!   **byte-identical** shares, weights and posteriors (asserted by the
+//!   cross-backend integration tests).
+//!
+//! The scalar operations (`mul`, `divpub`, `lin`, …) are provided methods
+//! that delegate to their `_vec` counterparts, exactly like the engine's
+//! inherent wrappers do — so generic protocol code has the same accounting
+//! as code written directly against [`Engine`].
+
+use crate::field::Field;
+use crate::net::NetStats;
+
+use super::engine::{DataId, Engine};
+
+/// The in-process simulation backend is the engine itself; the alias makes
+/// call sites explicit about which side of the Sim/Tcp pair they are on.
+pub type SimSession = Engine;
+
+/// A live MPC session: one Manager (the caller) driving `n` members that
+/// each hold a private share store and RNG.
+///
+/// Semantics contract (shared by both implementations, and what the
+/// byte-identical cross-backend tests pin): member `i ∈ 1..=n` holds
+/// Shamir evaluation point `i`, deals with an RNG seeded
+/// `seed ^ i·0x9E3779B97F4A7C15`, and each primitive draws randomness in
+/// the same per-member order. Transport failures in a remote backend abort
+/// the session via panic — the session API mirrors the engine's infallible
+/// signatures; see `net::tcp_session` for the rationale.
+pub trait MpcSession {
+    /// Number of computing members (the Manager is not a member).
+    fn n(&self) -> usize;
+
+    /// The prime field all shares live in.
+    fn field(&self) -> Field;
+
+    /// Party `owner` (1-based) Shamir-deals its private values.
+    fn input_vec(&mut self, owner: usize, values: &[u128]) -> Vec<DataId>;
+
+    /// A public constant as a (constant-polynomial) shared value. Local.
+    fn constant(&mut self, c: u128) -> DataId;
+
+    /// Vectorized affine exercise: each entry is `(c0, [(ck, ak), ...])`
+    /// computing `c0 + Σ ck·[ak]`. Local math, but a scheduled exercise.
+    fn lin_vec(&mut self, ops: &[(i128, Vec<(i128, DataId)>)]) -> Vec<DataId>;
+
+    /// Secure multiplication (BGW resharing) for all pairs.
+    fn mul_vec(&mut self, pairs: &[(DataId, DataId)]) -> Vec<DataId>;
+
+    /// Division by a public `d` (§3.4) for all values.
+    fn divpub_vec(&mut self, us: &[DataId], d: u128) -> Vec<DataId>;
+
+    /// Reveal to the manager; returns the reconstructions.
+    fn reveal_vec(&mut self, ids: &[DataId]) -> Vec<u128>;
+
+    /// SQ2PQ: convert per-party additive contributions (`local_values[i]`
+    /// is member i's vector) into polynomial shares of the sums.
+    fn sq2pq_vec(&mut self, local_values: &[Vec<u128>]) -> Vec<DataId>;
+
+    /// Running cost totals; diff two snapshots (see
+    /// [`NetStats::delta_since`]) to cost a protocol. For [`SimSession`]
+    /// this is the paper-exact Tables 2–3 accounting; for the TCP backend
+    /// it counts the actual relayed frames.
+    fn stats(&self) -> NetStats;
+
+    // --- provided scalar conveniences (same delegation as the engine) ----
+
+    /// Scalar [`MpcSession::lin_vec`].
+    fn lin(&mut self, c0: i128, terms: &[(i128, DataId)]) -> DataId {
+        self.lin_vec(&[(c0, terms.to_vec())])[0]
+    }
+
+    /// `[a] + [b]` (local affine exercise).
+    fn add(&mut self, a: DataId, b: DataId) -> DataId {
+        self.lin(0, &[(1, a), (1, b)])
+    }
+
+    /// `[a] - [b]` (local affine exercise).
+    fn sub(&mut self, a: DataId, b: DataId) -> DataId {
+        self.lin(0, &[(1, a), (-1, b)])
+    }
+
+    /// Scalar [`MpcSession::mul_vec`].
+    fn mul(&mut self, a: DataId, b: DataId) -> DataId {
+        self.mul_vec(&[(a, b)])[0]
+    }
+
+    /// Scalar [`MpcSession::divpub_vec`].
+    fn divpub(&mut self, u: DataId, d: u128) -> DataId {
+        self.divpub_vec(&[u], d)[0]
+    }
+
+    /// Scalar [`MpcSession::reveal_vec`].
+    fn reveal(&mut self, a: DataId) -> u128 {
+        self.reveal_vec(&[a])[0]
+    }
+
+    /// Reveal interpreted as a signed small integer (protocol outputs are).
+    fn reveal_int(&mut self, a: DataId) -> i128 {
+        let f = self.field();
+        let v = self.reveal(a);
+        f.to_i128(v)
+    }
+}
+
+impl MpcSession for Engine {
+    fn n(&self) -> usize {
+        self.cfg.n
+    }
+
+    fn field(&self) -> Field {
+        self.field
+    }
+
+    fn input_vec(&mut self, owner: usize, values: &[u128]) -> Vec<DataId> {
+        Engine::input(self, owner, values)
+    }
+
+    fn constant(&mut self, c: u128) -> DataId {
+        Engine::constant(self, c)
+    }
+
+    fn lin_vec(&mut self, ops: &[(i128, Vec<(i128, DataId)>)]) -> Vec<DataId> {
+        Engine::lin_vec(self, ops)
+    }
+
+    fn mul_vec(&mut self, pairs: &[(DataId, DataId)]) -> Vec<DataId> {
+        Engine::mul_vec(self, pairs)
+    }
+
+    fn divpub_vec(&mut self, us: &[DataId], d: u128) -> Vec<DataId> {
+        Engine::divpub_vec(self, us, d)
+    }
+
+    fn reveal_vec(&mut self, ids: &[DataId]) -> Vec<u128> {
+        Engine::reveal_vec(self, ids)
+    }
+
+    fn sq2pq_vec(&mut self, local_values: &[Vec<u128>]) -> Vec<DataId> {
+        Engine::sq2pq_inputs(self, local_values)
+    }
+
+    fn stats(&self) -> NetStats {
+        self.net.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Field;
+    use crate::protocols::engine::EngineConfig;
+
+    /// A protocol written only against the trait must behave exactly like
+    /// the same calls made on the engine's inherent API (same values, same
+    /// accounting) — the redesign's compatibility contract.
+    fn generic_mad<S: MpcSession>(sess: &mut S, a: u128, b: u128, d: u128) -> i128 {
+        let ia = sess.input_vec(1, &[a])[0];
+        let ib = sess.input_vec(2, &[b])[0];
+        let prod = sess.mul(ia, ib);
+        let q = sess.divpub(prod, d);
+        sess.reveal_int(q)
+    }
+
+    #[test]
+    fn engine_behind_trait_matches_inherent_api() {
+        let mut via_trait = Engine::new(Field::paper(), EngineConfig::new(5));
+        let got = generic_mad(&mut via_trait, 123, 45, 256);
+        assert!((got - 21).abs() <= 1, "⌊123·45/256⌋ = 21 ± 1, got {got}");
+
+        let mut inherent = Engine::new(Field::paper(), EngineConfig::new(5));
+        let ia = inherent.input(1, &[123])[0];
+        let ib = inherent.input(2, &[45])[0];
+        let prod = inherent.mul(ia, ib);
+        let q = inherent.divpub(prod, 256);
+        let r = inherent.reveal(q);
+        assert_eq!(inherent.field.to_i128(r), got, "trait and inherent paths agree");
+        assert_eq!(
+            via_trait.net.stats, inherent.net.stats,
+            "trait delegation must not change the accounting"
+        );
+    }
+
+    #[test]
+    fn provided_scalar_ops_compose() {
+        let mut e = Engine::new(Field::paper(), EngineConfig::new(3));
+        let a = MpcSession::input_vec(&mut e, 1, &[10])[0];
+        let b = MpcSession::input_vec(&mut e, 2, &[4])[0];
+        let sum = MpcSession::add(&mut e, a, b);
+        let dif = MpcSession::sub(&mut e, a, b);
+        assert_eq!(e.peek(sum), 14);
+        assert_eq!(e.peek(dif), 6);
+    }
+}

@@ -1,17 +1,24 @@
 //! Cross-layer integration tests: PJRT runtime ⇄ native mirror ⇄ MPC
-//! protocols ⇄ coordinators, plus the real-TCP smoke test.
+//! protocols ⇄ coordinators, plus the cross-backend session tests.
 //!
-//! These need `make artifacts` to have run; each test skips gracefully if
-//! the artifacts directory is absent so `cargo test` stays green on a fresh
-//! checkout (CI runs `make test` which builds artifacts first).
+//! The artifact-driven tests need `make artifacts` to have run; each skips
+//! gracefully if the artifacts directory is absent so `cargo test` stays
+//! green on a fresh checkout (CI runs `make test` which builds artifacts
+//! first). The `cross_backend_*` tests build a miniature in-code structure
+//! instead, so they run everywhere — including artifact-less CI — and pin
+//! the session redesign's core contract: the same coordinator code over
+//! `SimSession` (PerOp and Batched) and `TcpSession` produces
+//! byte-identical weights, posteriors and centroids under the same seed.
 
 use spn_mpc::coordinator::infer::{private_eval, Query};
-use spn_mpc::coordinator::train::{peek_weights, train, TrainConfig};
+use spn_mpc::coordinator::train::{peek_weights, reveal_weights, train, TrainConfig};
 use spn_mpc::datasets;
 use spn_mpc::field::Field;
-use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
+use spn_mpc::protocols::engine::{Engine, EngineConfig, Schedule};
+use spn_mpc::protocols::newton::{newton_inverse, NewtonConfig};
 use spn_mpc::runtime;
-use spn_mpc::spn::structure::Structure;
+use spn_mpc::spn::structure::{Layer, LayerKind, ParamKind, Stats, Structure};
 use spn_mpc::spn::{eval, learn};
 
 fn artifacts() -> Option<std::path::PathBuf> {
@@ -131,6 +138,181 @@ fn member_count_does_not_change_result() {
             assert!((a - b).abs() <= 3, "param {k} differs across member counts");
         }
     }
+}
+
+/// A miniature selective SPN built directly in code (no artifacts needed):
+/// 2 variables, 4 gate leaves, one product layer, one sum root —
+/// `w₀·[x₀=1 ∧ x₁=1] + w₁·[x₀=0 ∧ x₁=0]`. Small enough that the TCP
+/// backend trains in well under a second, rich enough to exercise SQ2PQ,
+/// Newton, divpub and the layered inference ladder.
+fn mini_structure() -> Structure {
+    let st = Structure {
+        name: "mini".into(),
+        num_vars: 2,
+        rows: 240,
+        leaf_var: vec![0, 1, 0, 1],
+        leaf_claim: vec![1, 1, 0, 0],
+        layer_widths: vec![4, 2, 1],
+        layer_offset: vec![0, 4, 6],
+        total_nodes: 7,
+        layers: vec![
+            Layer {
+                kind: LayerKind::Product,
+                width: 2,
+                in_width: 4,
+                rows: vec![0, 0, 1, 1],
+                cols: vec![0, 1, 2, 3],
+                param: vec![-1, -1, -1, -1],
+            },
+            Layer {
+                kind: LayerKind::Sum,
+                width: 1,
+                in_width: 6,
+                rows: vec![0, 0],
+                cols: vec![0, 1],
+                param: vec![0, 1],
+            },
+        ],
+        num_params: 6,
+        num_sum_edges: 2,
+        param_kind: vec![
+            ParamKind::SumEdge,
+            ParamKind::SumEdge,
+            ParamKind::Leaf,
+            ParamKind::Leaf,
+            ParamKind::Leaf,
+            ParamKind::Leaf,
+        ],
+        param_num: vec![4, 5, 7, 8, 9, 10],
+        param_den: vec![6, 6, 0, 1, 2, 3],
+        sum_groups: vec![vec![0, 1]],
+        stats: Stats { sum: 1, product: 2, leaf: 4, params: 2, edges: 6, layers: 2 },
+    };
+    st.validate().expect("mini structure must validate");
+    st
+}
+
+fn mini_shard_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
+    let gt = datasets::ground_truth_params(st, 5);
+    let data = datasets::sample(st, &gt, st.rows, 21);
+    let shards = datasets::partition(&data, n);
+    let counts = shards.iter().map(|s| eval::counts(st, s)).collect();
+    (counts, st.rows as u64)
+}
+
+#[test]
+fn cross_backend_training_byte_identical() {
+    let st = mini_structure();
+    let n = 3;
+    let (counts, rows) = mini_shard_counts(&st, n);
+    let cfg = TrainConfig::default();
+
+    let mut weights = Vec::new();
+    for schedule in [Schedule::PerOp, Schedule::Batched] {
+        let mut ec = EngineConfig::new(n);
+        ec.schedule = schedule;
+        let mut eng = Engine::new(Field::paper(), ec);
+        let (model, report) = train(&mut eng, &st, &counts, rows, &cfg);
+        assert_eq!(report.divisions, 1);
+        weights.push(reveal_weights(&mut eng, &model));
+    }
+    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let (model, report) = train(&mut sess, &st, &counts, rows, &cfg);
+    assert_eq!(report.divisions, 1);
+    weights.push(reveal_weights(&mut sess, &model));
+    sess.shutdown().unwrap();
+
+    assert_eq!(weights[0], weights[1], "PerOp vs Batched weights must be byte-identical");
+    assert_eq!(weights[0], weights[2], "Sim vs TCP weights must be byte-identical");
+    // and sane: d-scaled weights of one sum group sum to ≈ d
+    let tot: i128 = weights[0].iter().sum();
+    assert!((tot - 256).abs() <= 8, "group sums to {tot}");
+}
+
+#[test]
+fn cross_backend_inference_byte_identical() {
+    let st = mini_structure();
+    let n = 3;
+    let (counts, rows) = mini_shard_counts(&st, n);
+    let theta = learn::default_leaf_theta(&st);
+    let queries: Vec<Query> = vec![
+        Query { x: vec![0, 0], marg: vec![true, true] },
+        Query { x: vec![1, 0], marg: vec![false, true] },
+        Query { x: vec![1, 1], marg: vec![false, false] },
+    ];
+
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
+    let sim_roots: Vec<i128> =
+        queries.iter().map(|q| private_eval(&mut eng, &st, &model, q, &theta).0).collect();
+
+    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let (model, _) = train(&mut sess, &st, &counts, rows, &TrainConfig::default());
+    let tcp_roots: Vec<i128> =
+        queries.iter().map(|q| private_eval(&mut sess, &st, &model, q, &theta).0).collect();
+    sess.shutdown().unwrap();
+
+    assert_eq!(sim_roots, tcp_roots, "posteriors must be byte-identical across backends");
+    // S(∅)·d ≈ d on both
+    assert!((sim_roots[0] - 256).abs() <= 32, "S(∅)·d = {}", sim_roots[0]);
+}
+
+#[test]
+fn cross_backend_kmeans_byte_identical() {
+    use spn_mpc::kmeans::{private_kmeans, KmeansConfig, PartyData};
+    use spn_mpc::protocols::division::DivisionConfig;
+    use spn_mpc::rng::{Prng, Rng};
+
+    let n = 3;
+    let mut rng = Prng::seed_from_u64(4);
+    let mut parties = vec![PartyData { points: vec![] }; n];
+    for i in 0..90 {
+        let (cx, cy) = if i % 2 == 0 { (100i64, 120i64) } else { (700, 650) };
+        parties[i % n].points.push(vec![
+            cx + rng.gen_range_u64(40) as i64 - 20,
+            cy + rng.gen_range_u64(40) as i64 - 20,
+        ]);
+    }
+    let init = vec![vec![0, 0], vec![800, 800]];
+    let cfg = KmeansConfig { k: 2, iters: 4, division: DivisionConfig::default() };
+
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let sim = private_kmeans(&mut eng, &parties, &init, &cfg);
+
+    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let tcp = private_kmeans(&mut sess, &parties, &init, &cfg);
+    sess.shutdown().unwrap();
+
+    assert_eq!(sim.centroids, tcp.centroids, "centroids must be byte-identical");
+    assert_eq!(sim.iterations_run, tcp.iterations_run);
+    assert_eq!(sim.assignments_counts, tcp.assignments_counts);
+}
+
+#[test]
+fn perop_and_batched_agree_on_every_primitive() {
+    // mul, divpub and the Newton inverse must produce the same field
+    // elements under both schedules — the schedules change accounting only.
+    fn primitives(eng: &mut Engine) -> Vec<u128> {
+        let xs = eng.input(1, &[4321, 77, 1000]);
+        let ys = eng.input(2, &[789, 3, 12]);
+        let pairs: Vec<_> = xs.iter().copied().zip(ys.iter().copied()).collect();
+        let prods = eng.mul_vec(&pairs);
+        let qs = eng.divpub_vec(&prods, 256);
+        let (inv, _) = newton_inverse(eng, ys[0], 1000, &NewtonConfig::default());
+        let mut ids = prods.clone();
+        ids.extend(qs);
+        ids.push(inv);
+        eng.reveal_vec(&ids)
+    }
+    let mut per_op = Engine::new(Field::paper(), EngineConfig::new(5));
+    let mut batched = Engine::new(Field::paper(), EngineConfig::new(5).batched());
+    let a = primitives(&mut per_op);
+    let b = primitives(&mut batched);
+    assert_eq!(a, b, "PerOp and Batched must agree on mul, divpub and Newton");
+    assert!(
+        batched.net.stats.messages < per_op.net.stats.messages,
+        "Batched must also be cheaper on vector ops"
+    );
 }
 
 #[test]
