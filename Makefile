@@ -51,6 +51,7 @@ bench-json: artifacts
 	cargo bench --bench table2_members13 -- --json BENCH_table2_members13.json
 	cargo bench --bench table3_members5 -- --json BENCH_table3_members5.json
 	cargo bench --bench kmeans_bench -- --json BENCH_kmeans.json
+	cargo bench --bench infer_batch -- --json BENCH_infer_batch.json
 
 doc:
 	cargo doc --no-deps

@@ -1,0 +1,113 @@
+//! Cross-query batched private inference: the amortization curve.
+//!
+//! Runs the compiled-plan evaluator over the in-code mini structure (no
+//! artifacts needed — this bench never skips) and, when artifacts exist,
+//! over the paper's `nltcs` structure, at batch widths B ∈ {1, 8, 32}.
+//! Reports secure rounds and messages *per query* under the `Batched`
+//! schedule: rounds/query should fall ~B× (the per-step round count is
+//! batch-width independent), which is exactly the claim the integration
+//! test `batched_inference_rounds_strictly_sublinear` pins with a 4×
+//! bound. `--json <path>` writes the `{bench, metric, value}` rows that
+//! `make bench-json` commits as BENCH_infer_batch.json.
+
+use spn_mpc::bench::JsonSink;
+use spn_mpc::coordinator::infer::{private_eval_batch, Query};
+use spn_mpc::coordinator::train::{train, SharedModel, TrainConfig};
+use spn_mpc::datasets;
+use spn_mpc::field::Field;
+use spn_mpc::metrics::render_table;
+use spn_mpc::net::NetStats;
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::spn::structure::Structure;
+use spn_mpc::spn::{eval, learn};
+
+const BATCHES: [usize; 3] = [1, 8, 32];
+const MEMBERS: usize = 3;
+
+fn trained(st: &Structure) -> (Engine, SharedModel) {
+    let gt = datasets::ground_truth_params(st, 7);
+    let data = datasets::sample(st, &gt, st.rows.min(2000), 42);
+    let shards = datasets::partition(&data, MEMBERS);
+    let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(st, s)).collect();
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched());
+    let (model, _) = train(&mut eng, st, &counts, data.len() as u64, &TrainConfig::default());
+    (eng, model)
+}
+
+fn queries(st: &Structure, bsz: usize) -> Vec<Query> {
+    (0..bsz)
+        .map(|i| {
+            let mut q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+            let v = i % st.num_vars;
+            q.x[v] = (i / st.num_vars % 2) as u8;
+            q.marg[v] = false;
+            q
+        })
+        .collect()
+}
+
+fn run(name: &str, st: &Structure, json: &mut JsonSink, rows: &mut Vec<Vec<String>>) {
+    let (mut eng, model) = trained(st);
+    let theta = learn::default_leaf_theta(st);
+    let mut per_query_rounds = Vec::new();
+    let mut total = NetStats::default();
+    for &bsz in &BATCHES {
+        let qs = queries(st, bsz);
+        let t0 = std::time::Instant::now();
+        let (roots, stats) = private_eval_batch(&mut eng, st, &model, &qs, &theta);
+        let wall = t0.elapsed().as_secs_f64();
+        total = total + stats;
+        assert_eq!(roots.len(), bsz);
+        let rpq = stats.rounds as f64 / bsz as f64;
+        let mpq = stats.messages as f64 / bsz as f64;
+        per_query_rounds.push(rpq);
+        json.push(&format!("infer_batch_{name}"), &format!("rounds_per_query_b{bsz}"), rpq);
+        json.push(&format!("infer_batch_{name}"), &format!("messages_per_query_b{bsz}"), mpq);
+        json.push(&format!("infer_batch_{name}"), &format!("wall_s_b{bsz}"), wall);
+        rows.push(vec![
+            name.to_string(),
+            bsz.to_string(),
+            stats.rounds.to_string(),
+            format!("{rpq:.1}"),
+            format!("{mpq:.1}"),
+            format!("{:.2}", stats.virtual_time_s / bsz as f64),
+            format!("{:.4}", wall),
+        ]);
+    }
+    // the amortization claim this bench exists to chart: B=32 pays at most
+    // a quarter of 32 sequential evaluations (actually ~1/B)
+    assert!(
+        per_query_rounds[2] * 4.0 <= per_query_rounds[0],
+        "{name}: rounds/query at B=32 ({:.1}) not ≤ 1/4 of B=1 ({:.1})",
+        per_query_rounds[2],
+        per_query_rounds[0]
+    );
+    println!(
+        "[infer_batch] {name}: {} queries total over {} rounds / {} messages",
+        BATCHES.iter().sum::<usize>(),
+        total.rounds,
+        total.messages
+    );
+}
+
+fn main() {
+    let mut json = JsonSink::from_env_args();
+    let mut rows = Vec::new();
+
+    run("mini", &Structure::mini_demo(), &mut json, &mut rows);
+    match spn_mpc::bench::try_load_structure("nltcs") {
+        Some(st) => run("nltcs", &st, &mut json, &mut rows),
+        None => println!("[infer_batch] nltcs artifact absent — mini structure only"),
+    }
+
+    println!(
+        "{}",
+        render_table(
+            "Batched private inference — rounds amortization (Batched schedule)",
+            &["Structure", "B", "rounds", "rounds/q", "msgs/q", "virtual s/q", "wall s"],
+            &rows
+        )
+    );
+    json.finish().expect("write --json output");
+    println!("infer_batch OK");
+}

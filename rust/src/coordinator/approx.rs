@@ -3,6 +3,12 @@
 //! JRSZ zero-share.  The sum of the masked shares is (d times) the average
 //! of local fractions — correct when shards are near-iid, biased otherwise
 //! (the `ablation_approx_vs_exact` bench quantifies the bias vs skew).
+//!
+//! Like the exact path, the protocol is *vectorized across parameters*: the
+//! masks for every parameter travel in one preprocessing round and the
+//! masked reveals in one more, so a whole batch of parameters costs the
+//! same 2 rounds (and 2·N messages) as a single one; only the byte count
+//! scales with the parameter count.
 
 use crate::field::Field;
 use crate::net::{NetConfig, NetStats, SimNet};
@@ -42,29 +48,32 @@ pub fn approx_divide(
     let mut shares = Vec::with_capacity(params.len());
     let mut revealed = Vec::with_capacity(params.len());
 
+    // Preprocessing: JRSZ dealt by the manager (third party) for every
+    // parameter; each member receives all its masks in one message — one
+    // round for the whole batch.
     for locals in params {
-        // Preprocessing: JRSZ dealt by the manager (third party), one share
-        // per member (n messages, 1 round).
         let masks = jrsz(f, n, &mut rng);
-        for i in 0..n {
-            net.send(usize::MAX, i, 1);
-        }
-        net.end_round();
-
         // Local: F^k = round(d * num / den / N), masked.
         let mut sh = Vec::with_capacity(n);
         for (i, loc) in locals.iter().enumerate() {
             let fk = local_scaled_fraction(loc, d, n);
             sh.push(f.add(fk % f.p, masks[i]));
         }
-
-        // Reveal to manager: n messages, 1 round.
-        for i in 0..n {
-            net.send(i, usize::MAX, 1);
-        }
-        net.end_round();
-        revealed.push(f.sum(&sh));
         shares.push(sh);
+    }
+    for i in 0..n {
+        net.send(usize::MAX, i, params.len() as u64);
+    }
+    net.end_round();
+
+    // Reveal to manager: every parameter's masked share in one message per
+    // member — one more round.
+    for i in 0..n {
+        net.send(i, usize::MAX, params.len() as u64);
+    }
+    net.end_round();
+    for sh in &shares {
+        revealed.push(f.sum(sh));
     }
 
     ApproxOutcome { shares, revealed, stats: net.stats }
@@ -159,6 +168,27 @@ mod tests {
         // accounting: 2 rounds, 2n messages
         assert_eq!(out.stats.messages, 6);
         assert_eq!(out.stats.rounds, 2);
+    }
+
+    #[test]
+    fn approx_batches_parameters_into_two_rounds() {
+        // Rounds (and messages) are flat in the parameter count — only the
+        // payload grows: the cross-parameter vectorization of §3.2.
+        let f = Field::new(EXAMPLE_P);
+        let one = vec![vec![
+            LocalFraction { num: 1, den: 4 },
+            LocalFraction { num: 2, den: 4 },
+            LocalFraction { num: 3, den: 4 },
+        ]];
+        let five: Vec<Vec<LocalFraction>> =
+            (0..5).map(|_| one[0].clone()).collect();
+        let a = approx_divide(&f, &one, 1000, NetConfig::default(), 7);
+        let b = approx_divide(&f, &five, 1000, NetConfig::default(), 7);
+        assert_eq!(a.stats.rounds, 2);
+        assert_eq!(b.stats.rounds, 2);
+        assert_eq!(a.stats.messages, b.stats.messages);
+        assert!(b.stats.bytes > a.stats.bytes);
+        assert!(b.revealed.iter().all(|&v| v == b.revealed[0]));
     }
 
     #[test]

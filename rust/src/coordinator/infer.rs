@@ -3,6 +3,17 @@
 //! with secure sums and products; only the root value is revealed (to the
 //! client).
 //!
+//! Since the compiled-plan refactor the layer wiring is derived **once**
+//! per structure ([`EvalPlan::compile`]) instead of per query, and whole
+//! query batches evaluate simultaneously: [`private_eval_batch`] coalesces
+//! the k-th chain link / sum reduction of *every* query into single
+//! `mul_vec`/`divpub_vec`/`lin_vec` calls, so secure rounds per query
+//! shrink ~B× while each query's revealed value stays **bit-identical** to
+//! a sequential [`private_eval`] (the tagged-divpub invariant — see
+//! `spn::plan` and DESIGN.md §Evaluation Plan). For a standing service,
+//! compile the plan once and drive an [`Evaluator`] directly; the free
+//! functions here recompile per call for convenience.
+//!
 //! Fixed-point convention: every node value is an integer ≈ d·(true value)
 //! with d = 256 (§5.3); each secure multiplication of two d-scaled values
 //! is followed by a truncation by d (divpub).  Like the paper's setting,
@@ -11,18 +22,13 @@
 //! intended workload; the `infer` tests quantify accuracy against the
 //! float oracle.
 
-use crate::protocols::engine::DataId;
 use crate::protocols::session::MpcSession;
 use crate::coordinator::train::SharedModel;
 use crate::net::NetStats;
-use crate::spn::structure::{LayerKind, Structure};
+use crate::spn::plan::{EvalPlan, Evaluator};
+use crate::spn::structure::Structure;
 
-/// A client query: assignment + which variables are marginalized.
-#[derive(Clone, Debug)]
-pub struct Query {
-    pub x: Vec<u8>,
-    pub marg: Vec<bool>,
-}
+pub use crate::spn::plan::Query;
 
 /// Evaluate S(query) over shares on any [`MpcSession`] backend; returns
 /// the revealed d-scaled root value and the traffic spent.
@@ -33,88 +39,32 @@ pub fn private_eval<S: MpcSession>(
     q: &Query,
     default_leaf_theta: &[f64],
 ) -> (i128, NetStats) {
-    let before = sess.stats();
-    let d = model.d;
-    let w0 = st.num_leaves();
-
-    // --- client shares its input: one bit per variable --------------------
-    let xvals: Vec<u128> = q.x.iter().map(|&b| b as u128).collect();
-    let x_ids = sess.input_vec(1, &xvals);
-
-    // --- leaf values -------------------------------------------------------
-    // marginalized leaf → public d; else Bernoulli: x·θ + (1-x)·(d-θ)
-    //   = [x]·(2θ - d) + (d - θ), one secure mul per live leaf.
-    let mut leaf_vals: Vec<DataId> = Vec::with_capacity(w0);
-    let const_d = sess.constant(d);
-    for leaf in 0..w0 {
-        let v = st.leaf_var[leaf];
-        if q.marg[v] {
-            leaf_vals.push(const_d);
-            continue;
-        }
-        let theta: DataId = match &model.leaf_theta {
-            Some(t) => t[leaf],
-            None => {
-                // public default θ (paper mode): d-scaled constant
-                let th = (default_leaf_theta[leaf] * d as f64).round() as u128;
-                sess.constant(th.min(d))
-            }
-        };
-        let slope = sess.lin(-(d as i128), &[(2, theta)]); // 2θ - d
-        let prod = sess.mul(x_ids[v], slope);
-        let val = sess.lin(d as i128, &[(1, prod), (-1, theta)]); // d - θ + x(2θ-d)
-        leaf_vals.push(val);
-    }
-
-    // --- layered evaluation -------------------------------------------------
-    let mut prev: Vec<DataId> = Vec::new();
-    for (li, l) in st.layers.iter().enumerate() {
-        let prev_w = if li > 0 { st.layer_widths[li] } else { 0 };
-        let mut children: Vec<Vec<(usize, i64)>> = vec![Vec::new(); l.width];
-        for ((&r, &c), &p) in l.rows.iter().zip(&l.cols).zip(&l.param) {
-            children[r].push((c, p));
-        }
-        let mut out: Vec<DataId> = Vec::with_capacity(l.width);
-        for ch in &children {
-            let get = |c: usize| -> DataId {
-                if c < prev_w {
-                    prev[c]
-                } else {
-                    leaf_vals[c - prev_w]
-                }
-            };
-            match l.kind {
-                LayerKind::Product => {
-                    // sequential secure mult + truncate to stay d-scaled
-                    let mut acc = get(ch[0].0);
-                    for &(c, _) in &ch[1..] {
-                        let m = sess.mul(acc, get(c));
-                        acc = sess.divpub(m, d);
-                    }
-                    out.push(acc);
-                }
-                LayerKind::Sum => {
-                    // Σ_j w_j · v_j / d — pairwise muls then one truncate
-                    let pairs: Vec<(DataId, DataId)> =
-                        ch.iter().map(|&(c, p)| (model.sum_w[p as usize], get(c))).collect();
-                    let prods = sess.mul_vec(&pairs);
-                    let terms: Vec<(i128, DataId)> = prods.iter().map(|&p| (1, p)).collect();
-                    let sum = sess.lin(0, &terms);
-                    out.push(sess.divpub(sum, d));
-                }
-            }
-        }
-        prev = out;
-    }
-
-    // --- reveal root to the client ------------------------------------------
-    let val = sess.reveal_int(prev[0]);
-    let stats = sess.stats().delta_since(&before);
-    (val, stats)
+    let (vals, stats) =
+        private_eval_batch(sess, st, model, std::slice::from_ref(q), default_leaf_theta);
+    (vals[0], stats)
 }
 
-/// Conditional Pr(x | e) = S(x∧e)/S(e) — two private evaluations, client
-/// divides the revealed d-scaled values (§4).
+/// Evaluate a whole batch of queries simultaneously: one compiled plan,
+/// one coalesced secure call per plan step. Returns the revealed d-scaled
+/// root value per query (same order) and the total traffic. Each value is
+/// bit-identical to what the same query would reveal through a sequential
+/// [`private_eval`] at the same position in the session.
+pub fn private_eval_batch<S: MpcSession>(
+    sess: &mut S,
+    st: &Structure,
+    model: &SharedModel,
+    queries: &[Query],
+    default_leaf_theta: &[f64],
+) -> (Vec<i128>, NetStats) {
+    let plan = EvalPlan::compile(st, default_leaf_theta, model.d);
+    let mut ev = Evaluator::new(&plan);
+    ev.eval_batch(sess, queries, &model.sum_w, model.leaf_theta.as_deref())
+}
+
+/// Conditional Pr(x | e) = S(x∧e)/S(e) — the two evaluations run as one
+/// compiled-plan batch (their secure rounds coalesce, and the revealed
+/// values are bit-identical to sequential evaluation); the client divides
+/// the revealed d-scaled values (§4).
 pub fn private_conditional<S: MpcSession>(
     sess: &mut S,
     st: &Structure,
@@ -135,22 +85,11 @@ pub fn private_conditional<S: MpcSession>(
         x[v] = b;
         marg_e[v] = false;
     }
-    let (sxe, st1) = private_eval(
-        sess,
-        st,
-        model,
-        &Query { x: x.clone(), marg: marg_xe },
-        default_leaf_theta,
-    );
-    let (se, st2) = private_eval(sess, st, model, &Query { x, marg: marg_e }, default_leaf_theta);
+    let queries =
+        [Query { x: x.clone(), marg: marg_xe }, Query { x, marg: marg_e }];
+    let (vals, stats) = private_eval_batch(sess, st, model, &queries, default_leaf_theta);
+    let (sxe, se) = (vals[0], vals[1]);
     let p = if se <= 0 { 0.0 } else { (sxe.max(0) as f64) / (se as f64) };
-    let stats = NetStats {
-        messages: st1.messages + st2.messages,
-        bytes: st1.bytes + st2.bytes,
-        rounds: st1.rounds + st2.rounds,
-        exercises: st1.exercises + st2.exercises,
-        virtual_time_s: st1.virtual_time_s + st2.virtual_time_s,
-    };
     (p.min(1.0), stats)
 }
 
@@ -160,7 +99,7 @@ mod tests {
     use crate::coordinator::train::{train, TrainConfig};
     use crate::datasets;
     use crate::field::Field;
-    use crate::protocols::engine::{Engine, EngineConfig};
+    use crate::protocols::engine::{Engine, EngineConfig, Schedule};
     use crate::spn::{eval, learn};
     use crate::spn::structure::Structure;
 
@@ -208,6 +147,53 @@ mod tests {
     }
 
     #[test]
+    fn batch_eval_matches_sequential_bit_exact() {
+        // The acceptance pin of the compiled-plan refactor: a batch reveals
+        // exactly the values B sequential evaluations reveal under the same
+        // seed. Two identically-seeded engines (so tag reservations line
+        // up), identical training, then sequential vs batched inference.
+        let Some((st, mut eng_seq, model_seq, _)) = trained(3) else { return };
+        let Some((_, mut eng_bat, model_bat, _)) = trained(3) else { return };
+        let theta = learn::default_leaf_theta(&st);
+        let mut queries = Vec::new();
+        for v in 0..st.num_vars {
+            for b in [0u8, 1] {
+                let mut q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+                q.x[v] = b;
+                q.marg[v] = false;
+                queries.push(q);
+            }
+        }
+        queries.push(Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] });
+
+        let seq: Vec<i128> = queries
+            .iter()
+            .map(|q| private_eval(&mut eng_seq, &st, &model_seq, q, &theta).0)
+            .collect();
+        let (bat, _) = private_eval_batch(&mut eng_bat, &st, &model_bat, &queries, &theta);
+        assert_eq!(seq, bat, "batched evaluation must be bit-identical to sequential");
+    }
+
+    #[test]
+    fn batch_rounds_sublinear_in_batch_size() {
+        // Rounds per plan step are batch-width-independent under the
+        // Batched schedule, so a B-query batch pays ~1/B the rounds of B
+        // sequential evaluations.
+        let Some((st, mut eng, model, _)) = trained(3) else { return };
+        let theta = learn::default_leaf_theta(&st);
+        let q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+        let (_, one) = private_eval(&mut eng, &st, &model, &q, &theta);
+        let batch: Vec<Query> = (0..16).map(|_| q.clone()).collect();
+        let (_, sixteen) = private_eval_batch(&mut eng, &st, &model, &batch, &theta);
+        assert!(
+            sixteen.rounds < 4 * one.rounds,
+            "16-query batch must cost far less than 16× one query: {} vs 16×{}",
+            sixteen.rounds,
+            one.rounds
+        );
+    }
+
+    #[test]
     fn private_conditional_close_to_oracle() {
         let Some((st, mut eng, model, params)) = trained(3) else { return };
         let theta = learn::default_leaf_theta(&st);
@@ -242,6 +228,10 @@ mod tests {
     fn inference_cost_scales_with_edges() {
         let Some((st, mut eng, model, _)) = trained(3) else { return };
         let theta = learn::default_leaf_theta(&st);
+        // PerOp accounting: one exercise slot per vector *element*, so the
+        // paper-mode cost still scales with the edge count even though the
+        // plan coalesces elements into few vector calls.
+        eng.cfg.schedule = Schedule::PerOp;
         let q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
         let (_, stats) = private_eval(&mut eng, &st, &model, &q, &theta);
         // at least one secure op per edge

@@ -13,11 +13,21 @@
 //!   3. one Newton inversion `[I] ≈ d·E/den` (§3.4);
 //!   4. per edge: secure multiply `[num]·[I]`, then truncate by E.
 //!
+//! The coordinator runs those four stages *vectorized across every sum
+//! node at once*: one SQ2PQ exercise carries all denominators, one all
+//! numerators, and `divide_many` advances every node's Newton inversion in
+//! lockstep ([`crate::protocols::newton::newton_inverse_vec`]), so the
+//! round count of a training run is one Newton schedule deep — not
+//! `#sum-nodes ×` it. Under the paper's `PerOp` accounting the
+//! message/byte totals of Tables 2–3 are unchanged by this batching (a
+//! k-wide exercise costs exactly k scalar exercises there); the win shows
+//! up in rounds and in the `Batched`/TCP deployments.
+//!
 //! The result is *shares* of the d-scaled weights — the paper's training
 //! deliverable. Reveal (for verification/deployment) is a separate step so
 //! Tables 2–3 accounting matches training only.
 
-use crate::protocols::division::{divide_shared_den, DivisionConfig};
+use crate::protocols::division::{divide_many, DivisionConfig};
 use crate::protocols::engine::{DataId, Engine};
 use crate::protocols::session::MpcSession;
 use crate::net::NetStats;
@@ -55,6 +65,48 @@ pub struct TrainReport {
     pub sum_edges: usize,
 }
 
+/// The shared Eq.-(3) pipeline for a batch of denominator groups:
+/// `groups[g]` is `(denominator count index, numerator count indices)`.
+/// One SQ2PQ exercise carries every group's denominator, one lin_vec
+/// applies the +SMOOTH (Laplace) smoothing — guaranteeing the Newton
+/// precondition `b ≥ 1` — one SQ2PQ carries every numerator
+/// (group-major), and [`divide_many`] runs all inversions in lockstep.
+/// Returns one d-scaled weight vector per group, in group order.
+fn batched_count_divide<S: MpcSession>(
+    sess: &mut S,
+    shard_counts: &[Vec<u64>],
+    groups: &[(usize, Vec<usize>)],
+    bmax: u128,
+    cfg: &DivisionConfig,
+) -> Vec<Vec<DataId>> {
+    let n = shard_counts.len();
+    let den_locals: Vec<Vec<u128>> = (0..n)
+        .map(|i| groups.iter().map(|&(di, _)| shard_counts[i][di] as u128).collect())
+        .collect();
+    let dens_raw = sess.sq2pq_vec(&den_locals);
+    let smooth_ops: Vec<(i128, Vec<(i128, DataId)>)> =
+        dens_raw.iter().map(|&id| (SMOOTH as i128, vec![(1, id)])).collect();
+    let dens = sess.lin_vec(&smooth_ops);
+
+    let num_locals: Vec<Vec<u128>> = (0..n)
+        .map(|i| {
+            groups
+                .iter()
+                .flat_map(|(_, nis)| nis.iter().map(move |&ni| shard_counts[i][ni] as u128))
+                .collect()
+        })
+        .collect();
+    let nums = sess.sq2pq_vec(&num_locals);
+
+    let mut div_groups: Vec<(DataId, Vec<DataId>)> = Vec::with_capacity(groups.len());
+    let mut off = 0;
+    for ((_, nis), &den) in groups.iter().zip(&dens) {
+        div_groups.push((den, nums[off..off + nis.len()].to_vec()));
+        off += nis.len();
+    }
+    divide_many(sess, &div_groups, bmax, cfg)
+}
+
 /// Run private training over any [`MpcSession`] backend — the in-process
 /// simulation ([`Engine`]) or real TCP parties. `shard_counts[i]` is party
 /// i's local counts vector (length `st.counts_len()`), `rows_total` the
@@ -75,47 +127,38 @@ pub fn train<S: MpcSession>(
     let bmax = rows_total as u128 + SMOOTH as u128;
 
     // Enter the MPC: parties SQ2PQ their local count contributions for every
-    // count index the protocol touches (den per sum node, num per edge).
+    // count index the protocol touches — *one* vectorized exercise for all
+    // denominators and one for all numerators, then a single divide_many
+    // whose vectorized Newton advances every group's inversion in lockstep
+    // (rounds scale with the iteration count, not the number of sum nodes).
     let mut sum_w: Vec<Option<DataId>> = vec![None; st.num_sum_edges];
-    let mut divisions = 0usize;
 
-    for g in &st.sum_groups {
-        let den_idx = st.param_den[g[0]];
-        let den_locals: Vec<Vec<u128>> =
-            (0..n).map(|i| vec![shard_counts[i][den_idx] as u128]).collect();
-        let den_raw = sess.sq2pq_vec(&den_locals)[0];
-        // +SMOOTH smoothing (public linear op)
-        let den = sess.lin(SMOOTH as i128, &[(1, den_raw)]);
-
-        let num_locals: Vec<Vec<u128>> = (0..n)
-            .map(|i| g.iter().map(|&k| shard_counts[i][st.param_num[k]] as u128).collect())
-            .collect();
-        let nums = sess.sq2pq_vec(&num_locals);
-
-        let ws = divide_shared_den(sess, &nums, den, bmax, &cfg.division);
-        divisions += 1;
+    let sum_groups_idx: Vec<(usize, Vec<usize>)> = st
+        .sum_groups
+        .iter()
+        .map(|g| (st.param_den[g[0]], g.iter().map(|&k| st.param_num[k]).collect()))
+        .collect();
+    let ws_groups = batched_count_divide(sess, shard_counts, &sum_groups_idx, bmax, &cfg.division);
+    let mut divisions = sum_groups_idx.len();
+    for (g, ws) in st.sum_groups.iter().zip(ws_groups) {
         for (&k, w) in g.iter().zip(ws) {
             sum_w[k] = Some(w);
         }
     }
 
     let leaf_theta = if cfg.learn_leaves {
+        // the same batching for the leaf extension: every leaf has its own
+        // denominator, so this is one divide_many over num_leaves groups
         let w0 = st.num_leaves();
-        let mut thetas = Vec::with_capacity(w0);
-        for leaf in 0..w0 {
-            let k = st.num_sum_edges + leaf;
-            let den_locals: Vec<Vec<u128>> =
-                (0..n).map(|i| vec![shard_counts[i][st.param_den[k]] as u128]).collect();
-            let den_raw = sess.sq2pq_vec(&den_locals)[0];
-            let den = sess.lin(SMOOTH as i128, &[(1, den_raw)]);
-            let num_locals: Vec<Vec<u128>> =
-                (0..n).map(|i| vec![shard_counts[i][st.param_num[k]] as u128]).collect();
-            let num = sess.sq2pq_vec(&num_locals)[0];
-            let ws = divide_shared_den(sess, &[num], den, bmax, &cfg.division);
-            divisions += 1;
-            thetas.push(ws[0]);
-        }
-        Some(thetas)
+        let leaf_groups: Vec<(usize, Vec<usize>)> = (0..w0)
+            .map(|leaf| {
+                let k = st.num_sum_edges + leaf;
+                (st.param_den[k], vec![st.param_num[k]])
+            })
+            .collect();
+        let ws = batched_count_divide(sess, shard_counts, &leaf_groups, bmax, &cfg.division);
+        divisions += w0;
+        Some(ws.into_iter().map(|mut v| v.pop().unwrap()).collect())
     } else {
         None
     };

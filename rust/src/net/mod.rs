@@ -62,6 +62,22 @@ pub struct NetStats {
     pub virtual_time_s: f64,
 }
 
+/// Component-wise sum — combine the costs of two protocol runs (e.g. the
+/// two evaluations of a conditional query).
+impl std::ops::Add for NetStats {
+    type Output = NetStats;
+
+    fn add(self, rhs: NetStats) -> NetStats {
+        NetStats {
+            messages: self.messages + rhs.messages,
+            bytes: self.bytes + rhs.bytes,
+            rounds: self.rounds + rhs.rounds,
+            exercises: self.exercises + rhs.exercises,
+            virtual_time_s: self.virtual_time_s + rhs.virtual_time_s,
+        }
+    }
+}
+
 impl NetStats {
     pub fn megabytes(&self) -> f64 {
         self.bytes as f64 / 1_000_000.0
@@ -195,6 +211,18 @@ mod tests {
         assert_eq!(d.rounds, 1);
         assert_eq!(d.bytes, 2 * (24 + 20));
         assert!(d.virtual_time_s > 0.0);
+    }
+
+    #[test]
+    fn add_sums_every_counter() {
+        let a = NetStats { messages: 3, bytes: 100, rounds: 2, exercises: 1, virtual_time_s: 0.5 };
+        let b = NetStats { messages: 7, bytes: 11, rounds: 4, exercises: 2, virtual_time_s: 1.25 };
+        let s = a + b;
+        assert_eq!(s.messages, 10);
+        assert_eq!(s.bytes, 111);
+        assert_eq!(s.rounds, 6);
+        assert_eq!(s.exercises, 3);
+        assert!((s.virtual_time_s - 1.75).abs() < 1e-12);
     }
 
     #[test]

@@ -41,7 +41,7 @@ use anyhow::{anyhow, bail, Result};
 use super::tcp::{read_frame, write_frame, Frame};
 use super::NetStats;
 use crate::field::Field;
-use crate::protocols::divpub::sample_r;
+use crate::protocols::divpub::{sample_r, tagged_r};
 use crate::protocols::engine::DataId;
 use crate::protocols::session::MpcSession;
 use crate::rng::Prng;
@@ -57,6 +57,7 @@ const OP_DIVPUB: u128 = 5;
 const OP_REVEAL: u128 = 6;
 const OP_SQ2PQ: u128 = 7;
 const OP_SHUTDOWN: u128 = 8;
+const OP_DIVPUB_TAGGED: u128 = 9;
 
 /// Session parameters, mirroring the protocol-relevant subset of
 /// `EngineConfig` (no schedule — the wire protocol is always vectorized —
@@ -182,18 +183,24 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                     store.insert(o as u64, acc);
                 }
             }
-            OP_DIVPUB => {
-                // [op, k, d, out₀.., u₀..]; Alice = member 1, Bob = member 2.
+            OP_DIVPUB | OP_DIVPUB_TAGGED => {
+                // [op, k, d, out₀.., u₀.., (tag₀.. when tagged)];
+                // Alice = member 1, Bob = member 2.
                 let k = e[1] as usize;
                 let d = e[2];
                 let outs = &e[3..3 + k];
                 let us = &e[3 + k..3 + 2 * k];
+                let tags = (e[0] == OP_DIVPUB_TAGGED).then(|| &e[3 + 2 * k..3 + 3 * k]);
                 if id == 1 {
                     // Phase 1: Alice deals [r], [q = r mod d] per element —
-                    // same draw order as the engine's divpub_vec.
+                    // same draw order (and same tag derivation) as the
+                    // engine's divpub_vec / divpub_vec_tagged.
                     let mut dealt = Vec::with_capacity(2 * k * n);
-                    for _ in 0..k {
-                        let r = sample_r(&mut rng, cfg.rho_bits);
+                    for ei in 0..k {
+                        let r = match tags {
+                            Some(t) => tagged_r(cfg.seed, t[ei] as u64, cfg.rho_bits),
+                            None => sample_r(&mut rng, cfg.rho_bits),
+                        };
                         let q = r % d;
                         dealt.extend(shamir.share(r, &mut rng));
                         dealt.extend(shamir.share(q, &mut rng));
@@ -286,6 +293,7 @@ pub struct TcpSession {
     conns: Vec<TcpStream>, // index i = member i+1
     next_ex: u64,
     next_id: u64,
+    next_tag: u64,
     stats: NetStats,
     handles: Vec<JoinHandle<Result<()>>>,
 }
@@ -319,6 +327,7 @@ impl TcpSession {
             conns,
             next_ex: 0,
             next_id: 0,
+            next_tag: 0,
             stats: NetStats::default(),
             handles,
         })
@@ -467,7 +476,7 @@ impl TcpSession {
         Ok(ids)
     }
 
-    fn op_divpub(&mut self, us: &[DataId], d: u128) -> Result<Vec<DataId>> {
+    fn op_divpub(&mut self, us: &[DataId], d: u128, tags: Option<&[u64]>) -> Result<Vec<DataId>> {
         if d == 0 {
             bail!("divpub by zero");
         }
@@ -475,9 +484,13 @@ impl TcpSession {
         let n = self.cfg.n;
         let k = us.len();
         let ids = self.alloc_vec(k);
-        let mut msg = vec![OP_DIVPUB, k as u128, d];
+        let op = if tags.is_some() { OP_DIVPUB_TAGGED } else { OP_DIVPUB };
+        let mut msg = vec![op, k as u128, d];
         msg.extend(ids.iter().map(|id| id.0 as u128));
         msg.extend(us.iter().map(|u| u.0 as u128));
+        if let Some(t) = tags {
+            msg.extend(t.iter().map(|&x| x as u128));
+        }
         self.broadcast(&msg)?;
         // Phase 1: Alice's dealt [r]‖[q] per element → (rⱼ, qⱼ) per member.
         let alice = self.rx(0)?;
@@ -579,7 +592,18 @@ impl MpcSession for TcpSession {
     }
 
     fn divpub_vec(&mut self, us: &[DataId], d: u128) -> Vec<DataId> {
-        self.op_divpub(us, d).expect("TcpSession divpub_vec")
+        self.op_divpub(us, d, None).expect("TcpSession divpub_vec")
+    }
+
+    fn divpub_vec_tagged(&mut self, us: &[DataId], d: u128, tags: &[u64]) -> Vec<DataId> {
+        assert_eq!(us.len(), tags.len());
+        self.op_divpub(us, d, Some(tags)).expect("TcpSession divpub_vec_tagged")
+    }
+
+    fn reserve_tags(&mut self, count: u64) -> u64 {
+        let base = self.next_tag;
+        self.next_tag += count;
+        base
     }
 
     fn reveal_vec(&mut self, ids: &[DataId]) -> Vec<u128> {
@@ -611,7 +635,9 @@ mod tests {
         let s = sess.add(lin, c);
         let locals: Vec<Vec<u128>> = (0..sess.n()).map(|i| vec![(i + 1) as u128]).collect();
         let sq = sess.sq2pq_vec(&locals)[0];
-        sess.reveal_vec(&[ab, q, s, sq])
+        let base = sess.reserve_tags(2);
+        let qt = sess.divpub_vec_tagged(&[ab, s], 100, &[base, base + 1]);
+        sess.reveal_vec(&[ab, q, s, sq, qt[0], qt[1]])
     }
 
     #[test]

@@ -5,13 +5,17 @@
 //! (`[num]·[I]`), then a secure truncation (division by the public scale
 //! `E`) — yielding shares of an integer ≈ `d·num/den ∈ [0, d]`.
 //!
-//! The weights of one sum node share a denominator, so the coordinator
-//! calls [`divide_shared_den`] once per sum node with all child numerators —
-//! this is why the paper's Tables 2–3 costs scale with the number of sum
-//! nodes, not the number of parameters.
+//! The weights of one sum node share a denominator, so one Newton
+//! inversion serves all of a node's child numerators — this is why the
+//! paper's Tables 2–3 costs scale with the number of sum nodes, not the
+//! number of parameters. Since the lockstep-Newton refactor the
+//! coordinator goes further and calls [`divide_many`] once per *model*:
+//! every sum node's inversion advances in the same vectorized iteration,
+//! so the round count no longer scales with the sum-node count at all
+//! (PerOp message totals — the Tables 2–3 quantities — are unchanged).
 
 use super::engine::DataId;
-use super::newton::{newton_inverse, NewtonConfig};
+use super::newton::{newton_inverse_vec, NewtonConfig};
 use super::session::MpcSession;
 
 /// End-to-end division parameters (paper §5.3: d=256, n=16, t=5).
@@ -36,7 +40,8 @@ pub fn private_divide<S: MpcSession>(
 }
 
 /// All numerators against one shared denominator: one Newton inversion,
-/// then per-numerator multiply + truncate.
+/// then per-numerator multiply + truncate. The single-group case of
+/// [`divide_many`] (identical call sequence, accounting and RNG draws).
 pub fn divide_shared_den<S: MpcSession>(
     sess: &mut S,
     nums: &[DataId],
@@ -44,10 +49,44 @@ pub fn divide_shared_den<S: MpcSession>(
     bmax: u128,
     cfg: &DivisionConfig,
 ) -> Vec<DataId> {
-    let (inv, pl) = newton_inverse(sess, den, bmax, &cfg.newton);
-    let pairs: Vec<(DataId, DataId)> = nums.iter().map(|&n| (n, inv)).collect();
+    divide_many(sess, &[(den, nums.to_vec())], bmax, cfg).pop().unwrap()
+}
+
+/// Many denominator groups at once: `groups[g]` is `(denominator,
+/// numerators sharing it)`. One *vectorized* Newton inversion covers every
+/// denominator ([`newton_inverse_vec`] — all groups' iterations advance in
+/// lockstep and share communication rounds), then a single multiply +
+/// truncate sweep over every `(numerator, inverse)` pair. Returns one
+/// weight vector per group, in group order.
+///
+/// This is the training hot path: the whole model's divisions cost one
+/// Newton schedule's worth of rounds instead of one per sum node.
+pub fn divide_many<S: MpcSession>(
+    sess: &mut S,
+    groups: &[(DataId, Vec<DataId>)],
+    bmax: u128,
+    cfg: &DivisionConfig,
+) -> Vec<Vec<DataId>> {
+    if groups.is_empty() {
+        return Vec::new();
+    }
+    let dens: Vec<DataId> = groups.iter().map(|g| g.0).collect();
+    let (invs, pl) = newton_inverse_vec(sess, &dens, bmax, &cfg.newton);
+    let mut pairs: Vec<(DataId, DataId)> = Vec::new();
+    for ((_, nums), &inv) in groups.iter().zip(&invs) {
+        for &num in nums {
+            pairs.push((num, inv));
+        }
+    }
     let prods = sess.mul_vec(&pairs);
-    sess.divpub_vec(&prods, pl.final_scale)
+    let qs = sess.divpub_vec(&prods, pl.final_scale);
+    let mut out = Vec::with_capacity(groups.len());
+    let mut off = 0;
+    for (_, nums) in groups {
+        out.push(qs[off..off + nums.len()].to_vec());
+        off += nums.len();
+    }
+    out
 }
 
 #[cfg(test)]
@@ -110,6 +149,52 @@ mod tests {
         let got = run_division(3, &nums, &dens);
         let want = (256.0f64 * 600.0 / 2169.0).floor() as i128; // 70
         assert!((got[0] - want).abs() <= 3, "got {} want {want}", got[0]);
+    }
+
+    #[test]
+    fn divide_many_matches_per_group_division_and_amortizes_rounds() {
+        let groups_in: [(&[u128], u128); 3] =
+            [(&[71, 209, 320], 2169), (&[5, 95], 100), (&[123, 456, 789, 32], 1400)];
+        let cfg = DivisionConfig::default();
+
+        // One divide_many call over all groups.
+        let mut e = Engine::new(Field::paper(), EngineConfig::new(5).batched());
+        let groups: Vec<(DataId, Vec<DataId>)> = groups_in
+            .iter()
+            .map(|&(nums, den)| {
+                let den = e.input(1, &[den])[0];
+                (den, e.input(1, nums))
+            })
+            .collect();
+        let before = e.net.stats;
+        let many = divide_many(&mut e, &groups, 20000, &cfg);
+        let many_rounds = e.net.stats.delta_since(&before).rounds;
+        for ((nums, den), ws) in groups_in.iter().zip(&many) {
+            for (&num, &w) in nums.iter().zip(ws) {
+                let got = e.peek_int(w);
+                let want = (256 * num / den) as i128;
+                assert!((got - want).abs() <= 3, "num={num}/{den}: got {got} want {want}");
+            }
+        }
+
+        // Per-group calls on an identical engine: same quality, ~3× rounds.
+        let mut e2 = Engine::new(Field::paper(), EngineConfig::new(5).batched());
+        let groups2: Vec<(DataId, Vec<DataId>)> = groups_in
+            .iter()
+            .map(|&(nums, den)| {
+                let den = e2.input(1, &[den])[0];
+                (den, e2.input(1, nums))
+            })
+            .collect();
+        let before = e2.net.stats;
+        for (den, nums) in &groups2 {
+            let _ = divide_shared_den(&mut e2, nums, *den, 20000, &cfg);
+        }
+        let seq_rounds = e2.net.stats.delta_since(&before).rounds;
+        assert!(
+            many_rounds * 2 < seq_rounds,
+            "grouped division must amortize rounds: {many_rounds} vs {seq_rounds}"
+        );
     }
 
     #[test]

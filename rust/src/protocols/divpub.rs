@@ -23,12 +23,34 @@
 //! default). There must also be no wraparound mod p: `u + 2^ρ < p` — with
 //! `u ≤ 2^62`, `ρ = 64` and `p ≈ 2^73.7` this always holds.
 
-use crate::rng::Rng;
+use crate::rng::{Prng, Rng};
 
 /// Alice's mask: uniform in `[0, 2^ρ)`.
 pub fn sample_r<R: Rng + ?Sized>(rng: &mut R, rho_bits: u32) -> u128 {
     assert!(rho_bits > 0 && rho_bits < 128);
     rng.next_u128() & ((1u128 << rho_bits) - 1)
+}
+
+/// Tag-derived mask for the *order-invariant* divpub variant
+/// (`MpcSession::divpub_vec_tagged`): `r = PRF(seed, tag)` instead of the
+/// next draw of Alice's running RNG stream.
+///
+/// The ±1 rounding of each divpub output is a function of `r` (the carry
+/// `[u mod d + r mod d ≥ d]`), so drawing `r` from a stream makes revealed
+/// values depend on global evaluation order. Deriving it per tag makes the
+/// same logical element yield the same output under any batching — the
+/// invariance the compiled-plan batch evaluator is built on.
+///
+/// Security is unchanged in kind: `r` is still a fresh pseudo-random mask
+/// per element *as long as tags are never reused* (reuse would hand Bob two
+/// openings `u₁+r, u₂+r` and leak `u₁−u₂`); tag allocation goes through
+/// the session's monotone `reserve_tags`. Like every mask in this crate the
+/// PRF is the statistical xoshiro generator (see `rng` module security
+/// note); a deployment swaps in a keyed CSPRNG behind the same seam.
+pub fn tagged_r(seed: u64, tag: u64, rho_bits: u32) -> u128 {
+    let mut rng =
+        Prng::seed_from_u64(seed ^ 0x5851_F42D_4C95_7F2D ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    sample_r(&mut rng, rho_bits)
 }
 
 /// The plaintext mirror of the whole protocol (integers, no shares): given
@@ -90,6 +112,18 @@ mod tests {
             let r = sample_r(&mut rng, 64);
             // u multiple of d: still ±1 (masking may carry), but centered.
             assert!((divpub_plain(u, d, r) - k as i128).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn tagged_r_is_a_function_of_seed_and_tag_only() {
+        // Same (seed, tag) → same mask regardless of when/where it's drawn;
+        // different tags → (overwhelmingly) different masks.
+        assert_eq!(tagged_r(0xC0FFEE, 42, 64), tagged_r(0xC0FFEE, 42, 64));
+        assert_ne!(tagged_r(0xC0FFEE, 42, 64), tagged_r(0xC0FFEE, 43, 64));
+        assert_ne!(tagged_r(0xC0FFEE, 42, 64), tagged_r(0xC0FFED, 42, 64));
+        for tag in 0..200 {
+            assert!(tagged_r(1, tag, 64) < 1u128 << 64);
         }
     }
 

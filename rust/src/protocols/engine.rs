@@ -134,6 +134,7 @@ pub struct Engine {
     /// The accounted network; read `net.stats` for cost reports.
     pub net: SimNet,
     next_id: u64,
+    next_tag: u64,
     #[allow(dead_code)]
     manager_rng: Prng,
 }
@@ -160,8 +161,17 @@ impl Engine {
             members,
             net: SimNet::new(cfg.net),
             next_id: 0,
+            next_tag: 0,
             manager_rng: Prng::seed_from_u64(cfg.seed ^ 0xABCD),
         }
+    }
+
+    /// Allocate `count` fresh divpub tags (monotone, never reissued); see
+    /// [`Engine::divpub_vec_tagged`].
+    pub fn reserve_tags(&mut self, count: u64) -> u64 {
+        let base = self.next_tag;
+        self.next_tag += count;
+        base
     }
 
     /// Number of computing members.
@@ -405,6 +415,21 @@ impl Engine {
     /// Vectorized [`Engine::divpub`]: Alice/Bob deal for all k values in
     /// one exercise (one message per link per phase under `Batched`).
     pub fn divpub_vec(&mut self, us: &[DataId], d: u128) -> Vec<DataId> {
+        self.divpub_impl(us, d, None)
+    }
+
+    /// Tagged [`Engine::divpub_vec`]: element `e`'s §3.4 mask is derived as
+    /// `PRF(seed, tags[e])` ([`super::divpub::tagged_r`]) instead of the
+    /// next draw of Alice's RNG stream, so the ±1 rounding of each element
+    /// is a function of its tag alone — invariant under any batching or
+    /// evaluation order. Same wire shape and accounting as the untagged
+    /// variant. Tags must be fresh ([`Engine::reserve_tags`]).
+    pub fn divpub_vec_tagged(&mut self, us: &[DataId], d: u128, tags: &[u64]) -> Vec<DataId> {
+        assert_eq!(us.len(), tags.len());
+        self.divpub_impl(us, d, Some(tags))
+    }
+
+    fn divpub_impl(&mut self, us: &[DataId], d: u128, tags: Option<&[u64]>) -> Vec<DataId> {
         assert!(d > 0);
         let k = us.len();
         let ids = self.alloc_vec(k);
@@ -414,20 +439,23 @@ impl Engine {
         let alice = 0usize;
         let bob = if n > 1 { 1 } else { 0 };
         let rho = self.cfg.rho_bits;
+        let seed = self.cfg.seed;
 
         // Phase 1: Alice deals [r], [q = r mod d].
         let mut r_sh: Vec<Vec<u128>> = Vec::with_capacity(k); // [e][party]
         let mut q_sh: Vec<Vec<u128>> = Vec::with_capacity(k);
-        for _ in 0..k {
-            let (r, q, rs, qs) = {
+        for e in 0..k {
+            let (rs, qs) = {
                 let m = &mut self.members[alice];
-                let r = super::divpub::sample_r(&mut m.rng, rho);
+                let r = match tags {
+                    Some(t) => super::divpub::tagged_r(seed, t[e], rho),
+                    None => super::divpub::sample_r(&mut m.rng, rho),
+                };
                 let q = r % d;
                 let rs = self.shamir.share(r, &mut m.rng);
                 let qs = self.shamir.share(q, &mut m.rng);
-                (r, q, rs, qs)
+                (rs, qs)
             };
-            let _ = (r, q);
             r_sh.push(rs);
             q_sh.push(qs);
         }
@@ -612,6 +640,48 @@ mod tests {
             let want = (u / d) as i128;
             assert!((got - want).abs() <= 1, "u={u} d={d}: got {got} want {want}");
         }
+    }
+
+    #[test]
+    fn tagged_divpub_is_order_invariant() {
+        // The same logical (u, d, tag) element reveals the same value no
+        // matter how the calls around it are batched or ordered — the
+        // invariance the compiled-plan batch evaluator builds on. The
+        // untagged variant has no such guarantee (its ±1 rounding follows
+        // Alice's RNG stream position).
+        let us = [100_000u128, 77_777, 54_321];
+        let tags = [10u64, 11, 12];
+
+        // Engine A: one batched tagged call.
+        let mut a = engine(5);
+        let ids_a = a.input(1, &us);
+        let outs_a = a.divpub_vec_tagged(&ids_a, 256, &tags);
+        let got_a: Vec<i128> = outs_a.iter().map(|&id| a.peek_int(id)).collect();
+
+        // Engine B: scalar tagged calls in reverse order, with an unrelated
+        // untagged divpub interleaved to shift every RNG stream.
+        let mut b = engine(5);
+        let ids_b = b.input(1, &us);
+        let noise = b.input(2, &[999_999])[0];
+        let mut got_b = vec![0i128; 3];
+        for e in (0..3).rev() {
+            let _ = b.divpub(noise, 17);
+            let out = b.divpub_vec_tagged(&ids_b[e..e + 1], 256, &tags[e..e + 1])[0];
+            got_b[e] = b.peek_int(out);
+        }
+        assert_eq!(got_a, got_b, "tagged divpub must not depend on call order");
+        for (e, &u) in us.iter().enumerate() {
+            assert!((got_a[e] - (u / 256) as i128).abs() <= 1, "element {e} out of ±1");
+        }
+    }
+
+    #[test]
+    fn reserve_tags_is_monotone_and_disjoint() {
+        let mut e = engine(3);
+        let a = e.reserve_tags(5);
+        let b = e.reserve_tags(3);
+        let c = e.reserve_tags(1);
+        assert_eq!((a, b, c), (0, 5, 8));
     }
 
     #[test]

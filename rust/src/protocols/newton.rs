@@ -124,23 +124,58 @@ pub fn newton_plain<R: Rng + ?Sized>(
 /// value that multiplies to 0 weights downstream).
 pub fn newton_inverse<S: MpcSession>(sess: &mut S, b: DataId, bmax: u128, cfg: &NewtonConfig)
     -> (DataId, NewtonPlan) {
+    let (us, pl) = newton_inverse_vec(sess, &[b], bmax, cfg);
+    (us[0], pl)
+}
+
+/// Vectorized [`newton_inverse`]: invert many shared denominators at once.
+///
+/// All of them share one public schedule (same `bmax` ⇒ same warm-up and
+/// refinement counts), so the k inversions advance in lockstep: each
+/// iteration issues *one* `mul_vec`/`lin_vec`/`divpub_vec` sweep over every
+/// denominator instead of k separate sweeps. Under the `Batched` schedule
+/// (and over real TCP) the iteration's communication rounds are therefore
+/// paid once for the whole vector — the rounds-amortization that makes
+/// training cost scale with the iteration count, not `k ×` it. For `k = 1`
+/// the call sequence (and with it accounting *and* RNG draw order) is
+/// identical to the scalar [`newton_inverse`].
+pub fn newton_inverse_vec<S: MpcSession>(
+    sess: &mut S,
+    bs: &[DataId],
+    bmax: u128,
+    cfg: &NewtonConfig,
+) -> (Vec<DataId>, NewtonPlan) {
     let pl = plan(cfg, bmax);
+    let k = bs.len();
+    if k == 0 {
+        return (Vec::new(), pl);
+    }
     let g = 1i128 << cfg.guard_bits;
-    let mut u = sess.constant(1);
+    let one = sess.constant(1);
+    let mut us = vec![one; k];
     let mut dscale = pl.d0;
     for it in 0..(pl.warmup + pl.refine) {
         if it >= pl.warmup {
             dscale *= 2;
-            u = sess.lin(0, &[(2, u)]);
+            let ops: Vec<(i128, Vec<(i128, DataId)>)> =
+                us.iter().map(|&u| (0, vec![(2, u)])).collect();
+            us = sess.lin_vec(&ops);
         }
-        let t = sess.mul(u, b);
-        let tg = sess.lin(0, &[(g, t)]);
-        let s = sess.divpub(tg, dscale);
-        let corr = sess.lin(2 * g, &[(-1, s)]);
-        let v = sess.mul(u, corr);
-        u = sess.divpub(v, g as u128);
+        let pairs: Vec<(DataId, DataId)> = us.iter().copied().zip(bs.iter().copied()).collect();
+        let ts = sess.mul_vec(&pairs);
+        let tg_ops: Vec<(i128, Vec<(i128, DataId)>)> =
+            ts.iter().map(|&t| (0, vec![(g, t)])).collect();
+        let tgs = sess.lin_vec(&tg_ops);
+        let ss = sess.divpub_vec(&tgs, dscale);
+        let corr_ops: Vec<(i128, Vec<(i128, DataId)>)> =
+            ss.iter().map(|&s| (2 * g, vec![(-1, s)])).collect();
+        let corrs = sess.lin_vec(&corr_ops);
+        let v_pairs: Vec<(DataId, DataId)> =
+            us.iter().copied().zip(corrs.iter().copied()).collect();
+        let vs = sess.mul_vec(&v_pairs);
+        us = sess.divpub_vec(&vs, g as u128);
     }
-    (u, pl)
+    (us, pl)
 }
 
 #[cfg(test)]
@@ -204,6 +239,50 @@ mod tests {
                 assert!(close(u, b, &pl, cfg.d), "n={n} b={b}: u={u}");
             }
         }
+    }
+
+    #[test]
+    fn vectorized_inverse_accurate_and_round_amortized() {
+        let cfg = NewtonConfig::default();
+        let bmax = 2000u128;
+        let bs = [3u128, 77, 500, 1999];
+
+        // Vectorized: all four inversions in lockstep.
+        let mut vec_eng = Engine::new(Field::paper(), EngineConfig::new(5).batched());
+        let ids = vec_eng.input(1, &bs);
+        let before = vec_eng.net.stats;
+        let (invs, pl) = newton_inverse_vec(&mut vec_eng, &ids, bmax, &cfg);
+        let vec_rounds = vec_eng.net.stats.delta_since(&before).rounds;
+        for (&b, &id) in bs.iter().zip(&invs) {
+            let u = vec_eng.peek_int(id);
+            assert!(close(u, b, &pl, cfg.d), "vec b={b}: u={u}");
+        }
+
+        // Sequential: four scalar inversions on an identical engine.
+        let mut seq_eng = Engine::new(Field::paper(), EngineConfig::new(5).batched());
+        let ids = seq_eng.input(1, &bs);
+        let before = seq_eng.net.stats;
+        for &id in &ids {
+            let _ = newton_inverse(&mut seq_eng, id, bmax, &cfg);
+        }
+        let seq_rounds = seq_eng.net.stats.delta_since(&before).rounds;
+        assert!(
+            vec_rounds * 3 < seq_rounds,
+            "lockstep iterations must amortize rounds: vec {vec_rounds} vs seq {seq_rounds}"
+        );
+    }
+
+    #[test]
+    fn vectorized_with_one_denominator_equals_scalar() {
+        let cfg = NewtonConfig::default();
+        let mut a = Engine::new(Field::paper(), EngineConfig::new(3));
+        let ba = a.input(1, &[77])[0];
+        let (ua, _) = newton_inverse(&mut a, ba, 1000, &cfg);
+        let mut b = Engine::new(Field::paper(), EngineConfig::new(3));
+        let bb = b.input(1, &[77])[0];
+        let (ub, _) = newton_inverse_vec(&mut b, &[bb], 1000, &cfg);
+        assert_eq!(a.peek_int(ua), b.peek_int(ub[0]), "k=1 must be the scalar protocol");
+        assert_eq!(a.net.stats, b.net.stats, "k=1 must also account identically");
     }
 
     #[test]

@@ -3,9 +3,11 @@
 //! Every protocol in this crate — training (Eq. (3)/§3.4), inference (§4),
 //! k-means (§6), the Newton inverse — is written against [`MpcSession`],
 //! the vectorized primitive vocabulary the coordinators actually use:
-//! `input_vec`, local affine ops (`lin_vec`), `mul_vec`, `divpub_vec`,
-//! `reveal_vec`, `sq2pq_vec`, plus [`MpcSession::stats`] for cost
-//! accounting. Two first-class implementations exist:
+//! `input_vec`, local affine ops (`lin_vec`), `mul_vec`, `divpub_vec` (and
+//! its order-invariant `divpub_vec_tagged` + `reserve_tags` pair, used by
+//! the compiled-plan batch evaluator), `reveal_vec`, `sq2pq_vec`, plus
+//! [`MpcSession::stats`] for cost accounting. Two first-class
+//! implementations exist:
 //!
 //! * [`SimSession`] (= [`Engine`]) — the in-process Manager/Member
 //!   simulation with the paper-exact message/byte/round accounting of
@@ -63,6 +65,24 @@ pub trait MpcSession {
 
     /// Division by a public `d` (§3.4) for all values.
     fn divpub_vec(&mut self, us: &[DataId], d: u128) -> Vec<DataId>;
+
+    /// Order-invariant [`MpcSession::divpub_vec`]: element `e`'s mask is
+    /// derived as `PRF(session seed, tags[e])`
+    /// ([`crate::protocols::divpub::tagged_r`]) instead of the next draw of
+    /// Alice's RNG stream. Same wire shape and accounting; the revealed ±1
+    /// rounding of each element becomes a function of its *tag* rather than
+    /// of global evaluation order — which is what lets the compiled-plan
+    /// batch evaluator coalesce many queries' divisions into one call while
+    /// staying bit-identical to sequential evaluation (DESIGN.md
+    /// §Evaluation Plan). Tags must never be reused for different inputs
+    /// (mask reuse would let Bob difference two openings); allocate them
+    /// via [`MpcSession::reserve_tags`].
+    fn divpub_vec_tagged(&mut self, us: &[DataId], d: u128, tags: &[u64]) -> Vec<DataId>;
+
+    /// Allocate `count` fresh divpub tags and return the first: a monotone
+    /// per-session counter, so every reservation is disjoint from every
+    /// earlier one. Local bookkeeping — no traffic.
+    fn reserve_tags(&mut self, count: u64) -> u64;
 
     /// Reveal to the manager; returns the reconstructions.
     fn reveal_vec(&mut self, ids: &[DataId]) -> Vec<u128>;
@@ -144,6 +164,14 @@ impl MpcSession for Engine {
 
     fn divpub_vec(&mut self, us: &[DataId], d: u128) -> Vec<DataId> {
         Engine::divpub_vec(self, us, d)
+    }
+
+    fn divpub_vec_tagged(&mut self, us: &[DataId], d: u128, tags: &[u64]) -> Vec<DataId> {
+        Engine::divpub_vec_tagged(self, us, d, tags)
+    }
+
+    fn reserve_tags(&mut self, count: u64) -> u64 {
+        Engine::reserve_tags(self, count)
     }
 
     fn reveal_vec(&mut self, ids: &[DataId]) -> Vec<u128> {

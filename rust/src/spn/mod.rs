@@ -10,10 +10,15 @@
 //!   AOT'd counts artifact) and log-domain evaluation.
 //! * [`learn`]     — the closed-form ML weights of Eq. (2) from counts,
 //!   plus dataset log-likelihood.
+//! * [`plan`]      — compiled evaluation plans: the structure lowered once
+//!   into vectorized secure steps, executed for whole query batches by the
+//!   private-inference coordinator (DESIGN.md §Evaluation Plan).
 
 pub mod eval;
 pub mod graph;
 pub mod learn;
+pub mod plan;
 pub mod structure;
 
+pub use plan::{EvalPlan, Evaluator, PlanStep, Query, Src};
 pub use structure::{Layer, LayerKind, ParamKind, Structure};

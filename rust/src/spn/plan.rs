@@ -1,0 +1,445 @@
+//! Compiled SPN evaluation plans — the private-inference IR.
+//!
+//! [`EvalPlan::compile`] turns a [`Structure`] into a flat sequence of
+//! vectorized steps *once*; [`Evaluator::eval_batch`] then runs any number
+//! of queries over it without ever re-deriving the layer wiring. The IR is
+//! built around what actually costs money on a real transport — secure
+//! rounds, not bytes:
+//!
+//! * **Leaf step** — one `mul_vec` + `lin_vec` over every *live* (query,
+//!   leaf) pair: the Bernoulli affine `x·(2θ−d) + (d−θ)`. Marginalized
+//!   leaves read the cached public constant `d`.
+//! * **Product step** — chains evaluated breadth-first: depth-k links of
+//!   *every* node (and every query in the batch) coalesce into one
+//!   `mul_vec` + `divpub_vec` round, so a product layer costs
+//!   `max chain length − 1` round-trips, not `Σ (chain length − 1)`.
+//! * **Sum step** — one `mul_vec` over all (weight, child) edges, a
+//!   `lin_vec` of per-node sums, one `divpub_vec` over the nodes.
+//!
+//! **Batching invariant.** `eval_batch` over B queries reveals *exactly*
+//! the values B sequential single-query evaluations reveal. Every secure
+//! primitive except divpub is value-exact (share randomness cancels on
+//! reconstruction); divpub's ±1 rounding depends on Alice's mask `r`, so
+//! the executor routes every truncation through
+//! [`MpcSession::divpub_vec_tagged`] with the tag the *sequential*
+//! evaluation would have used: tags are allocated per query via
+//! [`MpcSession::reserve_tags`] in blocks of [`EvalPlan::divpubs_per_query`]
+//! and addressed by the element's plan-order offset, which is identical
+//! under any batching. The cross-backend integration tests pin this
+//! bit-identity (Sim = TCP, batch = sequential).
+//!
+//! One [`Evaluator`] is bound to one session and one model: it caches the
+//! session-level constants (public `d`, per-leaf θ and the query-independent
+//! slope `2θ−d`) on first use — [`DataId`]s from another session would be
+//! meaningless.
+
+use crate::net::NetStats;
+use crate::protocols::engine::DataId;
+use crate::protocols::session::MpcSession;
+use crate::spn::structure::{LayerKind, Structure};
+
+/// A client query: assignment + which variables are marginalized.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub x: Vec<u8>,
+    pub marg: Vec<bool>,
+}
+
+/// Where a step input comes from: the previous layer's outputs or a leaf.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    Prev(usize),
+    Leaf(usize),
+}
+
+/// One vectorized step of a compiled plan.
+#[derive(Clone, Debug)]
+pub enum PlanStep {
+    /// A product layer. `first[i]` seeds node i's accumulator; `rounds[k]`
+    /// holds the (node, child) links multiplied in at chain depth k+1 —
+    /// one `mul_vec` + `divpub_vec` pair per round, across all nodes (and
+    /// all queries in a batch).
+    Product { width: usize, first: Vec<Src>, rounds: Vec<Vec<(usize, Src)>> },
+    /// A sum layer. `node_edges[i]` lists node i's (sum-weight param id,
+    /// child) edges: one `mul_vec` over every edge, per-node `lin_vec`
+    /// sums, one `divpub_vec` over the nodes.
+    Sum { width: usize, node_edges: Vec<Vec<(usize, Src)>> },
+}
+
+/// A [`Structure`] compiled for repeated private evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalPlan {
+    /// Source structure name (diagnostics).
+    pub name: String,
+    /// Fixed-point scale (d = 256 in the paper's setting).
+    pub d: u128,
+    pub num_vars: usize,
+    pub num_leaves: usize,
+    /// Variable tested by each leaf.
+    pub leaf_var: Vec<usize>,
+    /// d-scaled public default θ per leaf (paper mode: leaves are public).
+    pub leaf_theta_fixed: Vec<u128>,
+    /// Bottom-up layer steps; the last step has width 1 (the root).
+    pub steps: Vec<PlanStep>,
+    /// Divpub elements one query consumes — the tag stride that keeps
+    /// batched and sequential evaluation bit-identical.
+    pub divpubs_per_query: u64,
+}
+
+impl EvalPlan {
+    /// Compile `st` once for scale `d`, quantizing the public per-leaf
+    /// default θ exactly as the per-query path used to. A short (even
+    /// empty) `default_leaf_theta` is accepted here — the defaults are
+    /// only consulted when a model has no learned leaf shares, and the
+    /// length is checked at that point.
+    pub fn compile(st: &Structure, default_leaf_theta: &[f64], d: u128) -> EvalPlan {
+        let w0 = st.num_leaves();
+        let leaf_theta_fixed: Vec<u128> = default_leaf_theta
+            .iter()
+            .map(|&t| ((t * d as f64).round() as u128).min(d))
+            .collect();
+
+        let mut steps = Vec::with_capacity(st.layers.len());
+        let mut divpubs = 0u64;
+        for (li, l) in st.layers.iter().enumerate() {
+            let prev_w = if li > 0 { st.layer_widths[li] } else { 0 };
+            let src =
+                |c: usize| if c < prev_w { Src::Prev(c) } else { Src::Leaf(c - prev_w) };
+            // children per node, in COO (edge) order
+            let mut children: Vec<Vec<(Src, i64)>> = vec![Vec::new(); l.width];
+            for ((&r, &c), &p) in l.rows.iter().zip(&l.cols).zip(&l.param) {
+                children[r].push((src(c), p));
+            }
+            match l.kind {
+                LayerKind::Product => {
+                    let first: Vec<Src> = children.iter().map(|ch| ch[0].0).collect();
+                    let maxlen = children.iter().map(|ch| ch.len()).max().unwrap_or(1);
+                    let mut rounds = Vec::with_capacity(maxlen.saturating_sub(1));
+                    for k in 1..maxlen {
+                        let round: Vec<(usize, Src)> = children
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, ch)| ch.len() > k)
+                            .map(|(i, ch)| (i, ch[k].0))
+                            .collect();
+                        divpubs += round.len() as u64;
+                        rounds.push(round);
+                    }
+                    steps.push(PlanStep::Product { width: l.width, first, rounds });
+                }
+                LayerKind::Sum => {
+                    let node_edges: Vec<Vec<(usize, Src)>> = children
+                        .iter()
+                        .map(|ch| ch.iter().map(|&(s, p)| (p as usize, s)).collect())
+                        .collect();
+                    divpubs += l.width as u64;
+                    steps.push(PlanStep::Sum { width: l.width, node_edges });
+                }
+            }
+        }
+        EvalPlan {
+            name: st.name.clone(),
+            d,
+            num_vars: st.num_vars,
+            num_leaves: w0,
+            leaf_var: st.leaf_var.clone(),
+            leaf_theta_fixed,
+            steps,
+            divpubs_per_query: divpubs,
+        }
+    }
+
+    /// Number of secure round-trip *steps* a single evaluation pays:
+    /// the per-query round count is independent of the batch width B, so
+    /// rounds per query shrink ~B× under batching.
+    pub fn chain_rounds(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                PlanStep::Product { rounds, .. } => rounds.len(),
+                PlanStep::Sum { .. } => 1,
+            })
+            .sum()
+    }
+}
+
+/// Session-bound constants compiled plans reuse across every query: the
+/// public `d`, one θ handle per leaf (learned shares or cached public
+/// constants) and the query-independent slope `2θ − d`.
+struct PlanCache {
+    const_d: DataId,
+    theta: Vec<DataId>,
+    slope: Vec<DataId>,
+    /// The learned-θ handles this cache was built from (`None` = public
+    /// θ constants, which are model-independent). Later calls must pass
+    /// the same handles — a re-trained model needs a fresh [`Evaluator`].
+    learned_src: Option<Vec<DataId>>,
+}
+
+/// Executes a compiled [`EvalPlan`] over one session + one model, caching
+/// the per-leaf constants on first use (satisfying the one-time-cost
+/// contract: B queries pay for the constants once, not B times).
+pub struct Evaluator<'p> {
+    pub plan: &'p EvalPlan,
+    cache: Option<PlanCache>,
+}
+
+fn resolve(s: Src, b: usize, prev: &[DataId], leaf_vals: &[DataId], bsz: usize) -> DataId {
+    match s {
+        Src::Prev(i) => prev[i * bsz + b],
+        Src::Leaf(l) => leaf_vals[l * bsz + b],
+    }
+}
+
+impl<'p> Evaluator<'p> {
+    pub fn new(plan: &'p EvalPlan) -> Self {
+        Evaluator { plan, cache: None }
+    }
+
+    fn ensure_cache<S: MpcSession>(
+        &mut self,
+        sess: &mut S,
+        learned_theta: Option<&[DataId]>,
+    ) -> &PlanCache {
+        if let Some(c) = &self.cache {
+            // The cached θ/slope handles embed the model they were built
+            // from; silently mixing them with a different model's sum
+            // weights would produce wrong posteriors with no error.
+            assert_eq!(
+                c.learned_src.as_deref(),
+                learned_theta,
+                "Evaluator is bound to one model; build a new Evaluator for a new model"
+            );
+        } else {
+            let d = self.plan.d;
+            let const_d = sess.constant(d);
+            let theta: Vec<DataId> = match learned_theta {
+                Some(t) => {
+                    assert_eq!(t.len(), self.plan.num_leaves, "one learned θ per leaf");
+                    t.to_vec()
+                }
+                None => {
+                    assert_eq!(
+                        self.plan.leaf_theta_fixed.len(),
+                        self.plan.num_leaves,
+                        "the plan was compiled without one default θ per leaf, \
+                         and this model has no learned leaf shares"
+                    );
+                    self.plan.leaf_theta_fixed.iter().map(|&th| sess.constant(th)).collect()
+                }
+            };
+            let slope_ops: Vec<(i128, Vec<(i128, DataId)>)> =
+                theta.iter().map(|&th| (-(d as i128), vec![(2, th)])).collect();
+            let slope = sess.lin_vec(&slope_ops); // 2θ − d, query-independent
+            let learned_src = learned_theta.map(|t| t.to_vec());
+            self.cache = Some(PlanCache { const_d, theta, slope, learned_src });
+        }
+        self.cache.as_ref().unwrap()
+    }
+
+    /// Evaluate all `queries` simultaneously; returns the revealed d-scaled
+    /// root value per query (same order) and the traffic spent. Bit-
+    /// identical to evaluating them one `eval_batch(&[q])` at a time on the
+    /// same evaluator/session state (see the module docs for why).
+    pub fn eval_batch<S: MpcSession>(
+        &mut self,
+        sess: &mut S,
+        queries: &[Query],
+        sum_w: &[DataId],
+        learned_theta: Option<&[DataId]>,
+    ) -> (Vec<i128>, NetStats) {
+        let before = sess.stats();
+        let bsz = queries.len();
+        if bsz == 0 {
+            return (Vec::new(), sess.stats().delta_since(&before));
+        }
+        let p = self.plan;
+        for q in queries {
+            assert_eq!(q.x.len(), p.num_vars, "query width");
+            assert_eq!(q.marg.len(), p.num_vars, "marginal mask width");
+        }
+        let m = p.divpubs_per_query;
+        // One tag block per query: query b's divpub at plan-order offset o
+        // gets tag0 + b·m + o — exactly what b prior single-query calls
+        // would have reserved, hence the bit-identity.
+        let tag0 = sess.reserve_tags(m * bsz as u64);
+        let cache = self.ensure_cache(sess, learned_theta);
+
+        // --- client input: every query's assignment, query-major ----------
+        let xvals: Vec<u128> =
+            queries.iter().flat_map(|q| q.x.iter().map(|&b| b as u128)).collect();
+        let x_ids = sess.input_vec(1, &xvals);
+
+        // --- leaf values over the live (leaf, query) pairs -----------------
+        let mut leaf_vals: Vec<DataId> = vec![cache.const_d; p.num_leaves * bsz];
+        let mut live: Vec<(usize, usize)> = Vec::new(); // (leaf, query)
+        for leaf in 0..p.num_leaves {
+            let v = p.leaf_var[leaf];
+            for (b, q) in queries.iter().enumerate() {
+                if !q.marg[v] {
+                    live.push((leaf, b));
+                }
+            }
+        }
+        if !live.is_empty() {
+            let pairs: Vec<(DataId, DataId)> = live
+                .iter()
+                .map(|&(leaf, b)| (x_ids[b * p.num_vars + p.leaf_var[leaf]], cache.slope[leaf]))
+                .collect();
+            let prods = sess.mul_vec(&pairs);
+            let val_ops: Vec<(i128, Vec<(i128, DataId)>)> = live
+                .iter()
+                .zip(&prods)
+                .map(|(&(leaf, _), &pr)| {
+                    (p.d as i128, vec![(1, pr), (-1, cache.theta[leaf])])
+                })
+                .collect();
+            let vals = sess.lin_vec(&val_ops);
+            for (&(leaf, b), &val) in live.iter().zip(&vals) {
+                leaf_vals[leaf * bsz + b] = val;
+            }
+        }
+
+        // --- layered steps (node-major × query-inner layout) ---------------
+        let mut prev: Vec<DataId> = Vec::new();
+        let mut qoff = 0u64; // per-query divpub offset consumed so far
+        for step in &p.steps {
+            match step {
+                PlanStep::Product { width, first, rounds } => {
+                    let w = *width;
+                    let mut acc: Vec<DataId> = Vec::with_capacity(w * bsz);
+                    for &f in first {
+                        for b in 0..bsz {
+                            acc.push(resolve(f, b, &prev, &leaf_vals, bsz));
+                        }
+                    }
+                    for round in rounds {
+                        let mut pairs = Vec::with_capacity(round.len() * bsz);
+                        let mut tags = Vec::with_capacity(round.len() * bsz);
+                        for (j, &(node, child)) in round.iter().enumerate() {
+                            for b in 0..bsz {
+                                pairs.push((
+                                    acc[node * bsz + b],
+                                    resolve(child, b, &prev, &leaf_vals, bsz),
+                                ));
+                                tags.push(tag0 + b as u64 * m + qoff + j as u64);
+                            }
+                        }
+                        let prods = sess.mul_vec(&pairs);
+                        let outs = sess.divpub_vec_tagged(&prods, p.d, &tags);
+                        for (j, &(node, _)) in round.iter().enumerate() {
+                            for b in 0..bsz {
+                                acc[node * bsz + b] = outs[j * bsz + b];
+                            }
+                        }
+                        qoff += round.len() as u64;
+                    }
+                    prev = acc;
+                }
+                PlanStep::Sum { width, node_edges } => {
+                    let w = *width;
+                    let mut pairs = Vec::new();
+                    for edges in node_edges {
+                        for &(pidx, child) in edges {
+                            for b in 0..bsz {
+                                pairs.push((
+                                    sum_w[pidx],
+                                    resolve(child, b, &prev, &leaf_vals, bsz),
+                                ));
+                            }
+                        }
+                    }
+                    let prods = sess.mul_vec(&pairs);
+                    let mut ops: Vec<(i128, Vec<(i128, DataId)>)> =
+                        Vec::with_capacity(w * bsz);
+                    let mut tags = Vec::with_capacity(w * bsz);
+                    let mut off = 0usize;
+                    for (i, edges) in node_edges.iter().enumerate() {
+                        for b in 0..bsz {
+                            let terms: Vec<(i128, DataId)> =
+                                (0..edges.len()).map(|e| (1, prods[off + e * bsz + b])).collect();
+                            ops.push((0, terms));
+                            tags.push(tag0 + b as u64 * m + qoff + i as u64);
+                        }
+                        off += edges.len() * bsz;
+                    }
+                    let sums = sess.lin_vec(&ops);
+                    prev = sess.divpub_vec_tagged(&sums, p.d, &tags);
+                    qoff += w as u64;
+                }
+            }
+        }
+        debug_assert_eq!(qoff, m, "plan divpub count must match execution");
+
+        // --- reveal every root to the client -------------------------------
+        let roots: Vec<DataId> = prev[..bsz].to_vec(); // root layer width 1
+        let vals = sess.reveal_vec(&roots);
+        let f = sess.field();
+        let out: Vec<i128> = vals.into_iter().map(|v| f.to_i128(v)).collect();
+        (out, sess.stats().delta_since(&before))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spn::structure::Structure;
+
+    fn toy() -> Option<Structure> {
+        let p = format!("{}/artifacts/toy.structure.json", env!("CARGO_MANIFEST_DIR"));
+        std::fs::read_to_string(p).ok().map(|s| Structure::from_json_str(&s).unwrap())
+    }
+
+    #[test]
+    fn compile_mini_demo_shapes() {
+        let st = Structure::mini_demo();
+        let theta = vec![0.5; st.num_leaves()];
+        let plan = EvalPlan::compile(&st, &theta, 256);
+        assert_eq!(plan.num_vars, 2);
+        assert_eq!(plan.num_leaves, 4);
+        assert_eq!(plan.steps.len(), 2);
+        // product layer: chains of length 2 → one chain round of 2 links
+        match &plan.steps[0] {
+            PlanStep::Product { width, first, rounds } => {
+                assert_eq!(*width, 2);
+                assert_eq!(first, &[Src::Leaf(0), Src::Leaf(2)]);
+                assert_eq!(rounds.len(), 1);
+                assert_eq!(rounds[0], vec![(0, Src::Leaf(1)), (1, Src::Leaf(3))]);
+            }
+            s => panic!("expected product step, got {s:?}"),
+        }
+        match &plan.steps[1] {
+            PlanStep::Sum { width, node_edges } => {
+                assert_eq!(*width, 1);
+                assert_eq!(node_edges[0], vec![(0, Src::Prev(0)), (1, Src::Prev(1))]);
+            }
+            s => panic!("expected sum step, got {s:?}"),
+        }
+        // 2 chain-link divpubs + 1 sum divpub per query
+        assert_eq!(plan.divpubs_per_query, 3);
+        assert_eq!(plan.chain_rounds(), 2);
+    }
+
+    #[test]
+    fn compile_counts_divpubs_on_toy() {
+        let Some(st) = toy() else { return };
+        let theta = crate::spn::learn::default_leaf_theta(&st);
+        let plan = EvalPlan::compile(&st, &theta, 256);
+        // every non-first product link and every sum node truncates once
+        let mut want = 0u64;
+        for l in &st.layers {
+            match l.kind {
+                LayerKind::Product => {
+                    let mut deg = vec![0u64; l.width];
+                    for &r in &l.rows {
+                        deg[r] += 1;
+                    }
+                    want += deg.iter().map(|&d| d - 1).sum::<u64>();
+                }
+                LayerKind::Sum => want += l.width as u64,
+            }
+        }
+        assert_eq!(plan.divpubs_per_query, want);
+        assert!(plan.leaf_theta_fixed.iter().all(|&t| t <= 256));
+    }
+}

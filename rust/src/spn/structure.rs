@@ -145,6 +145,60 @@ impl Structure {
         self.layer_widths[0]
     }
 
+    /// A miniature selective SPN built directly in code — no artifacts
+    /// needed: 2 variables, 4 gate leaves, one product layer, one sum root,
+    /// i.e. `w₀·[x₀=1 ∧ x₁=1] + w₁·[x₀=0 ∧ x₁=0]`. Small enough that the
+    /// TCP backend trains it in well under a second, rich enough to
+    /// exercise SQ2PQ, Newton, divpub and the layered inference ladder.
+    /// Used by the artifact-free `cross_backend_*` integration tests and
+    /// the `infer_batch` bench.
+    pub fn mini_demo() -> Structure {
+        let st = Structure {
+            name: "mini".into(),
+            num_vars: 2,
+            rows: 240,
+            leaf_var: vec![0, 1, 0, 1],
+            leaf_claim: vec![1, 1, 0, 0],
+            layer_widths: vec![4, 2, 1],
+            layer_offset: vec![0, 4, 6],
+            total_nodes: 7,
+            layers: vec![
+                Layer {
+                    kind: LayerKind::Product,
+                    width: 2,
+                    in_width: 4,
+                    rows: vec![0, 0, 1, 1],
+                    cols: vec![0, 1, 2, 3],
+                    param: vec![-1, -1, -1, -1],
+                },
+                Layer {
+                    kind: LayerKind::Sum,
+                    width: 1,
+                    in_width: 6,
+                    rows: vec![0, 0],
+                    cols: vec![0, 1],
+                    param: vec![0, 1],
+                },
+            ],
+            num_params: 6,
+            num_sum_edges: 2,
+            param_kind: vec![
+                ParamKind::SumEdge,
+                ParamKind::SumEdge,
+                ParamKind::Leaf,
+                ParamKind::Leaf,
+                ParamKind::Leaf,
+                ParamKind::Leaf,
+            ],
+            param_num: vec![4, 5, 7, 8, 9, 10],
+            param_den: vec![6, 6, 0, 1, 2, 3],
+            sum_groups: vec![vec![0, 1]],
+            stats: Stats { sum: 1, product: 2, leaf: 4, params: 2, edges: 6, layers: 2 },
+        };
+        st.validate().expect("mini structure must validate");
+        st
+    }
+
     /// Length of the counts vector the artifact emits.
     pub fn counts_len(&self) -> usize {
         self.total_nodes + self.num_leaves()
@@ -278,6 +332,15 @@ mod tests {
             let Some(st) = artifact(name) else { continue };
             assert_eq!(st.stats, want, "{name}");
         }
+    }
+
+    #[test]
+    fn mini_demo_validates_and_has_expected_shape() {
+        let st = Structure::mini_demo();
+        assert_eq!(st.num_vars, 2);
+        assert_eq!(st.num_leaves(), 4);
+        assert_eq!(st.layers.last().unwrap().width, 1);
+        assert_eq!(st.sum_groups, vec![vec![0, 1]]);
     }
 
     #[test]

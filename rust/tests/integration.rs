@@ -10,7 +10,7 @@
 //! `SimSession` (PerOp and Batched) and `TcpSession` produces
 //! byte-identical weights, posteriors and centroids under the same seed.
 
-use spn_mpc::coordinator::infer::{private_eval, Query};
+use spn_mpc::coordinator::infer::{private_eval, private_eval_batch, Query};
 use spn_mpc::coordinator::train::{peek_weights, reveal_weights, train, TrainConfig};
 use spn_mpc::datasets;
 use spn_mpc::field::Field;
@@ -18,7 +18,7 @@ use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
 use spn_mpc::protocols::engine::{Engine, EngineConfig, Schedule};
 use spn_mpc::protocols::newton::{newton_inverse, NewtonConfig};
 use spn_mpc::runtime;
-use spn_mpc::spn::structure::{Layer, LayerKind, ParamKind, Stats, Structure};
+use spn_mpc::spn::structure::Structure;
 use spn_mpc::spn::{eval, learn};
 
 fn artifacts() -> Option<std::path::PathBuf> {
@@ -140,56 +140,11 @@ fn member_count_does_not_change_result() {
     }
 }
 
-/// A miniature selective SPN built directly in code (no artifacts needed):
-/// 2 variables, 4 gate leaves, one product layer, one sum root —
-/// `w₀·[x₀=1 ∧ x₁=1] + w₁·[x₀=0 ∧ x₁=0]`. Small enough that the TCP
-/// backend trains in well under a second, rich enough to exercise SQ2PQ,
-/// Newton, divpub and the layered inference ladder.
+/// The miniature selective SPN now lives in the library
+/// ([`Structure::mini_demo`]) so the `infer_batch` bench and these tests
+/// share one definition.
 fn mini_structure() -> Structure {
-    let st = Structure {
-        name: "mini".into(),
-        num_vars: 2,
-        rows: 240,
-        leaf_var: vec![0, 1, 0, 1],
-        leaf_claim: vec![1, 1, 0, 0],
-        layer_widths: vec![4, 2, 1],
-        layer_offset: vec![0, 4, 6],
-        total_nodes: 7,
-        layers: vec![
-            Layer {
-                kind: LayerKind::Product,
-                width: 2,
-                in_width: 4,
-                rows: vec![0, 0, 1, 1],
-                cols: vec![0, 1, 2, 3],
-                param: vec![-1, -1, -1, -1],
-            },
-            Layer {
-                kind: LayerKind::Sum,
-                width: 1,
-                in_width: 6,
-                rows: vec![0, 0],
-                cols: vec![0, 1],
-                param: vec![0, 1],
-            },
-        ],
-        num_params: 6,
-        num_sum_edges: 2,
-        param_kind: vec![
-            ParamKind::SumEdge,
-            ParamKind::SumEdge,
-            ParamKind::Leaf,
-            ParamKind::Leaf,
-            ParamKind::Leaf,
-            ParamKind::Leaf,
-        ],
-        param_num: vec![4, 5, 7, 8, 9, 10],
-        param_den: vec![6, 6, 0, 1, 2, 3],
-        sum_groups: vec![vec![0, 1]],
-        stats: Stats { sum: 1, product: 2, leaf: 4, params: 2, edges: 6, layers: 2 },
-    };
-    st.validate().expect("mini structure must validate");
-    st
+    Structure::mini_demo()
 }
 
 fn mini_shard_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
@@ -255,6 +210,76 @@ fn cross_backend_inference_byte_identical() {
     assert_eq!(sim_roots, tcp_roots, "posteriors must be byte-identical across backends");
     // S(∅)·d ≈ d on both
     assert!((sim_roots[0] - 256).abs() <= 32, "S(∅)·d = {}", sim_roots[0]);
+}
+
+#[test]
+fn cross_backend_batched_inference_byte_identical() {
+    // The compiled-plan batch path over real TCP must reveal exactly what
+    // the simulation reveals — and both must equal sequential evaluation
+    // (the tagged-divpub invariant), pinning the refactor's two contracts
+    // at once.
+    let st = mini_structure();
+    let n = 3;
+    let (counts, rows) = mini_shard_counts(&st, n);
+    let theta = learn::default_leaf_theta(&st);
+    let queries: Vec<Query> = vec![
+        Query { x: vec![0, 0], marg: vec![true, true] },
+        Query { x: vec![1, 0], marg: vec![false, true] },
+        Query { x: vec![0, 1], marg: vec![true, false] },
+        Query { x: vec![1, 1], marg: vec![false, false] },
+        Query { x: vec![0, 0], marg: vec![false, false] },
+    ];
+
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
+    let (sim_roots, _) = private_eval_batch(&mut eng, &st, &model, &queries, &theta);
+
+    // sequential on a fresh identically-seeded engine: bit-identical
+    let mut eng2 = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model2, _) = train(&mut eng2, &st, &counts, rows, &TrainConfig::default());
+    let seq_roots: Vec<i128> =
+        queries.iter().map(|q| private_eval(&mut eng2, &st, &model2, q, &theta).0).collect();
+    assert_eq!(sim_roots, seq_roots, "batch must equal sequential bit-for-bit");
+
+    // and over real TCP members: byte-identical to the simulation
+    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let (model_tcp, _) = train(&mut sess, &st, &counts, rows, &TrainConfig::default());
+    let (tcp_roots, _) = private_eval_batch(&mut sess, &st, &model_tcp, &queries, &theta);
+    sess.shutdown().unwrap();
+    assert_eq!(sim_roots, tcp_roots, "batched posteriors must match across backends");
+
+    // sanity: S(∅)·d ≈ d
+    assert!((sim_roots[0] - 256).abs() <= 32, "S(∅)·d = {}", sim_roots[0]);
+}
+
+#[test]
+fn batched_inference_rounds_strictly_sublinear() {
+    // NetStats::delta_since over one eval vs a B-eval batch: total rounds
+    // for B = 32 must be far below 32× a single evaluation (the acceptance
+    // bound is ≤ 1/4; the plan actually delivers ~1/B).
+    let st = mini_structure();
+    let n = 3;
+    let (counts, rows) = mini_shard_counts(&st, n);
+    let theta = learn::default_leaf_theta(&st);
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
+
+    let q = Query { x: vec![1, 0], marg: vec![false, true] };
+    let (_, one) = private_eval(&mut eng, &st, &model, &q, &theta);
+
+    for bsz in [8usize, 32] {
+        let batch: Vec<Query> = (0..bsz)
+            .map(|i| Query { x: vec![(i % 2) as u8, 0], marg: vec![false, i % 3 == 0] })
+            .collect();
+        let (_, stats) = private_eval_batch(&mut eng, &st, &model, &batch, &theta);
+        assert!(
+            stats.rounds * 4 <= one.rounds * bsz as u64,
+            "B={bsz}: {} rounds vs {}×{} sequential — not sublinear",
+            stats.rounds,
+            bsz,
+            one.rounds
+        );
+    }
 }
 
 #[test]
