@@ -1,0 +1,167 @@
+//! MPC data-plane throughput — the §Perf iteration-3 instrument
+//! (EXPERIMENTS.md).
+//!
+//! Measures elements/sec for the vectorized session primitives over both
+//! backends at k ∈ {1, 64, 4096} and n ∈ {3, 5, 13}:
+//!
+//! * `share_batch` — raw flat-buffer dealing ([`ShamirCtx::share_batch_into`]),
+//!   no session around it: the data-plane kernel in isolation;
+//! * `mul_vec` / `divpub_vec` — the full secure primitives through the
+//!   `Batched` simulated engine (`sim`) and through real loopback TCP
+//!   member threads (`tcp`).
+//!
+//! Never skips (no artifacts needed). `--json <path>` writes the
+//! `{bench, metric, value}` rows `make bench-json` commits as
+//! BENCH_mpc_throughput.json — the data-plane perf trajectory baseline.
+//! `--smoke` shrinks to k ∈ {1, 8}, n = 3 with 3 iterations: CI runs this
+//! mode so the bench binary and its JSON schema cannot rot.
+
+use spn_mpc::bench::{throughput, time_it, JsonSink};
+use spn_mpc::field::Field;
+use spn_mpc::metrics::render_table;
+use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
+use spn_mpc::protocols::engine::{DataId, Engine, EngineConfig};
+use spn_mpc::protocols::session::MpcSession;
+use spn_mpc::rng::Prng;
+use spn_mpc::sharing::shamir::ShamirCtx;
+
+/// (warmup, measured) iteration counts, scaled down as k grows so the
+/// whole sweep stays in bench-budget territory.
+fn iters_for(k: usize, smoke: bool) -> (u32, u32) {
+    if smoke {
+        (1, 3)
+    } else if k >= 4096 {
+        (2, 10)
+    } else if k >= 64 {
+        (2, 50)
+    } else {
+        (3, 200)
+    }
+}
+
+fn fmt_eps(eps: f64) -> String {
+    if eps >= 1e6 {
+        format!("{:.2} M elems/s", eps / 1e6)
+    } else if eps >= 1e3 {
+        format!("{:.1} k elems/s", eps / 1e3)
+    } else {
+        format!("{eps:.0} elems/s")
+    }
+}
+
+/// Time `mul_vec` and `divpub_vec` at width k on one session backend.
+fn bench_session<S: MpcSession>(
+    backend: &str,
+    sess: &mut S,
+    n: usize,
+    k: usize,
+    smoke: bool,
+    json: &mut JsonSink,
+    rows: &mut Vec<Vec<String>>,
+) {
+    let avals: Vec<u128> = (0..k as u128).map(|i| i * 7 + 3).collect();
+    let bvals: Vec<u128> = (0..k as u128).map(|i| i * 11 + 1).collect();
+    let a = sess.input_vec(1, &avals);
+    let b = sess.input_vec(2, &bvals);
+    let pairs: Vec<(DataId, DataId)> =
+        a.iter().copied().zip(b.iter().copied()).collect();
+    let (wu, it) = iters_for(k, smoke);
+
+    let s = time_it(wu, it, || sess.mul_vec(&pairs));
+    let eps = throughput(&s, k as u64);
+    json.push("mpc_throughput", &format!("mul_vec_{backend}_n{n}_k{k}_elems_per_s"), eps);
+    rows.push(vec![
+        format!("mul_vec (n={n})"),
+        backend.to_string(),
+        k.to_string(),
+        fmt_eps(eps),
+        s.per_iter_str(),
+    ]);
+
+    let s = time_it(wu, it, || sess.divpub_vec(&a, 256));
+    let eps = throughput(&s, k as u64);
+    json.push("mpc_throughput", &format!("divpub_vec_{backend}_n{n}_k{k}_elems_per_s"), eps);
+    rows.push(vec![
+        format!("divpub_vec (n={n})"),
+        backend.to_string(),
+        k.to_string(),
+        fmt_eps(eps),
+        s.per_iter_str(),
+    ]);
+
+    // Correctness anchor: the path we just timed must still reveal the
+    // right values (mul is exact; divpub is ±1 around avals[0]·bvals[0]/d).
+    let prod = sess.mul_vec(&pairs[..1])[0];
+    assert_eq!(sess.reveal_vec(&[prod]), vec![avals[0] * bvals[0]], "{backend} n={n} k={k}");
+    let q = sess.divpub(prod, 256);
+    let got = sess.reveal_int(q);
+    let want = (avals[0] * bvals[0] / 256) as i128;
+    assert!((got - want).abs() <= 1, "{backend} n={n} k={k}: divpub {got} vs {want}");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let mut json = JsonSink::from_env_args();
+    let ks: Vec<usize> = if smoke { vec![1, 8] } else { vec![1, 64, 4096] };
+    let ns: Vec<usize> = if smoke { vec![3] } else { vec![3, 5, 13] };
+    let f = Field::paper();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    // --- raw flat-buffer dealing, no session ------------------------------
+    for &n in &ns {
+        let ctx = ShamirCtx::new(f, n);
+        for &k in &ks {
+            let mut rng = Prng::seed_from_u64(7);
+            let secrets: Vec<u128> = (0..k as u128).map(|i| i * 97 + 5).collect();
+            let mut out = vec![0u128; n * k];
+            let (wu, it) = iters_for(k, smoke);
+            let s = time_it(wu, it, || {
+                ctx.share_batch_into(&secrets, ctx.t, &mut rng, &mut out);
+                out[0]
+            });
+            let eps = throughput(&s, k as u64);
+            json.push(
+                "mpc_throughput",
+                &format!("share_batch_local_n{n}_k{k}_elems_per_s"),
+                eps,
+            );
+            json.push(
+                "mpc_throughput",
+                &format!("share_batch_local_n{n}_k{k}_ns_per_dealt_share"),
+                s.mean_s * 1e9 / (n * k) as f64,
+            );
+            rows.push(vec![
+                format!("share_batch (n={n})"),
+                "local".to_string(),
+                k.to_string(),
+                fmt_eps(eps),
+                s.per_iter_str(),
+            ]);
+        }
+    }
+
+    // --- full secure primitives, both backends ----------------------------
+    for &n in &ns {
+        for &k in &ks {
+            let mut eng = Engine::new(f, EngineConfig::new(n).batched());
+            bench_session("sim", &mut eng, n, k, smoke, &mut json, &mut rows);
+
+            let mut tcp =
+                TcpSession::spawn_local(f, TcpSessionConfig::new(n)).expect("spawn tcp session");
+            bench_session("tcp", &mut tcp, n, k, smoke, &mut json, &mut rows);
+            tcp.shutdown().expect("tcp shutdown");
+        }
+    }
+
+    println!(
+        "{}",
+        render_table(
+            "MPC data-plane throughput (flat-buffer dealing, dense stores, buffered TCP)",
+            &["primitive", "backend", "k", "throughput", "latency/call"],
+            &rows
+        )
+    );
+    json.finish().expect("write --json output");
+    println!("mpc_throughput OK");
+}

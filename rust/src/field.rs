@@ -187,14 +187,14 @@ impl Field {
         r
     }
 
-    /// Multiply where both operands already fit 64 bits.
-    #[inline]
-    #[allow(dead_code)]
-    fn mul_small(&self, a: u128, b: u128) -> u128 {
-        debug_assert!(a < (1 << 64) && b < (1 << 64));
-        // a*b < 2^128: reduce directly.
-        (a.wrapping_mul(b)) % self.p
-    }
+    // A `mul_small` fast path (direct `a·b % p` when both operands fit
+    // 64 bits) used to sit here behind #[allow(dead_code)]. Removed: no
+    // caller ever materialized — shares in the EXAMPLE_P walkthrough still
+    // route through the generic `mul`, whose limb fold costs the same one
+    // `u128 %` for small operands (the high limbs are zero and the cross
+    // terms fold to `ll`), so a width dispatch would add a branch to the
+    // hot path for nothing. `prop_mul_matches_native_on_small_prime`
+    // pins the equivalence the fast path would have exploited.
 
     /// `base^exp (mod p)` by square-and-multiply.
     pub fn pow(&self, mut base: u128, mut exp: u128) -> u128 {
@@ -379,7 +379,7 @@ mod tests {
     }
 
     #[test]
-    fn prop_mul_small_consistent() {
+    fn prop_mul_matches_native_on_small_prime() {
         let f = Field::new(EXAMPLE_P);
         crate::rng::property(256, |rng| {
             let a = f.rand(rng);

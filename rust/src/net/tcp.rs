@@ -7,15 +7,30 @@
 //! 24-byte-header + 10-byte-element model is the paper-calibrated wire
 //! estimate; see DESIGN.md §4).
 //!
+//! Framing is generic over `Read`/`Write` so sessions can run it over
+//! `BufReader`/`BufWriter` (the [`super::tcp_session`] data plane does —
+//! one flush per frame, `TCP_NODELAY` on every socket), and
+//! [`read_frame_into`] reuses the caller's element buffer so a lockstep
+//! event loop performs no per-frame heap allocation (DESIGN.md §Data
+//! plane). [`write_frame`] writes header then elements directly: callers
+//! on a raw socket should wrap it in a `BufWriter` to avoid per-element
+//! syscalls.
+//!
 //! The vendored crate set has no async runtime, so this uses blocking
 //! sockets and `std::thread` — entirely adequate for the N ≤ 13 member
 //! sessions. [`super::tcp_session::TcpSession`] drives the full
 //! transport-agnostic session vocabulary over these frames.
 
-use std::io::{Read, Write};
+use std::io::{BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+/// Upper bound on elements in one frame (256 MiB of payload — far above
+/// any real exercise). A corrupt or desynced stream whose next 16 bytes
+/// decode to an absurd length then fails as a diagnosable frame error
+/// instead of a multi-GiB `Vec` allocation abort.
+pub const MAX_FRAME_ELEMS: usize = 1 << 24;
 
 /// A framed protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -26,37 +41,84 @@ pub struct Frame {
 }
 
 impl Frame {
+    /// An empty frame to [`read_frame_into`]; its element buffer grows on
+    /// first use and is reused thereafter.
+    pub fn empty() -> Frame {
+        Frame { exercise_id: 0, from: 0, elems: Vec::new() }
+    }
+
     /// Bytes on the wire for this frame.
     pub fn wire_bytes(&self) -> usize {
-        16 + self.elems.len() * 16
+        wire_bytes_for(self.elems.len())
     }
 }
 
-pub fn write_frame(s: &mut TcpStream, f: &Frame) -> Result<()> {
-    let mut buf = Vec::with_capacity(f.wire_bytes());
-    buf.extend_from_slice(&f.exercise_id.to_le_bytes());
-    buf.extend_from_slice(&f.from.to_le_bytes());
-    buf.extend_from_slice(&(f.elems.len() as u32).to_le_bytes());
-    for e in &f.elems {
-        buf.extend_from_slice(&e.to_le_bytes());
+/// Bytes on the wire for a frame of `n_elems` elements.
+pub fn wire_bytes_for(n_elems: usize) -> usize {
+    16 + n_elems * 16
+}
+
+/// Write one frame from its parts — the allocation-free path: sessions
+/// pass their reusable scratch slice directly instead of moving it into a
+/// [`Frame`].
+pub fn write_frame_parts<W: Write>(
+    s: &mut W,
+    exercise_id: u64,
+    from: u32,
+    elems: &[u128],
+) -> Result<()> {
+    if elems.len() > MAX_FRAME_ELEMS {
+        bail!("refusing to write a {}-element frame (max {MAX_FRAME_ELEMS})", elems.len());
     }
-    s.write_all(&buf)?;
+    let mut hdr = [0u8; 16];
+    hdr[0..8].copy_from_slice(&exercise_id.to_le_bytes());
+    hdr[8..12].copy_from_slice(&from.to_le_bytes());
+    hdr[12..16].copy_from_slice(&(elems.len() as u32).to_le_bytes());
+    s.write_all(&hdr)?;
+    for e in elems {
+        s.write_all(&e.to_le_bytes())?;
+    }
     Ok(())
 }
 
-pub fn read_frame(s: &mut TcpStream) -> Result<Frame> {
+pub fn write_frame<W: Write>(s: &mut W, f: &Frame) -> Result<()> {
+    write_frame_parts(s, f.exercise_id, f.from, &f.elems)
+}
+
+/// Read one frame into `fr`, reusing its element buffer (no allocation
+/// once the buffer has grown to the session's steady-state frame width).
+/// The body is read through a stack chunk buffer, one `read_exact` per
+/// 256 elements — not per element — so the call count (and, on raw
+/// streams, the syscall count) stays low for wide vectorized frames.
+pub fn read_frame_into<R: Read>(s: &mut R, fr: &mut Frame) -> Result<()> {
     let mut hdr = [0u8; 16];
     s.read_exact(&mut hdr)?;
-    let exercise_id = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
-    let from = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+    fr.exercise_id = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+    fr.from = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
     let n = u32::from_le_bytes(hdr[12..16].try_into().unwrap()) as usize;
-    let mut body = vec![0u8; n * 16];
-    s.read_exact(&mut body)?;
-    let elems = body
-        .chunks_exact(16)
-        .map(|c| u128::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    Ok(Frame { exercise_id, from, elems })
+    if n > MAX_FRAME_ELEMS {
+        bail!("frame header claims {n} elements (max {MAX_FRAME_ELEMS}): corrupt or desynced stream");
+    }
+    fr.elems.clear();
+    fr.elems.reserve(n);
+    let mut buf = [0u8; 256 * 16];
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = remaining.min(256);
+        let bytes = &mut buf[..take * 16];
+        s.read_exact(bytes)?;
+        for c in bytes.chunks_exact(16) {
+            fr.elems.push(u128::from_le_bytes(c.try_into().unwrap()));
+        }
+        remaining -= take;
+    }
+    Ok(())
+}
+
+pub fn read_frame<R: Read>(s: &mut R) -> Result<Frame> {
+    let mut fr = Frame::empty();
+    read_frame_into(s, &mut fr)?;
+    Ok(fr)
 }
 
 /// "Reveal to manager" over real sockets: accept `n` member connections,
@@ -66,26 +128,34 @@ pub fn reveal_server_on(listener: TcpListener, n: usize, p: u128) -> Result<u128
     let mut conns = Vec::new();
     for _ in 0..n {
         let (mut s, _) = listener.accept()?;
+        s.set_nodelay(true)?;
         let f = read_frame(&mut s)?;
         acc = (acc + f.elems[0] % p) % p;
         conns.push(s);
     }
     for s in conns.iter_mut() {
-        write_frame(s, &Frame { exercise_id: 0, from: u32::MAX, elems: vec![acc] })?;
+        let mut w = BufWriter::new(s);
+        write_frame(&mut w, &Frame { exercise_id: 0, from: u32::MAX, elems: vec![acc] })?;
+        w.flush()?;
     }
     Ok(acc)
 }
 
 /// Member half of the smoke test: connect, send one share, read the sum.
 pub fn reveal_client(addr: &str, from: u32, share: u128) -> Result<u128> {
-    let mut s = TcpStream::connect(addr)?;
-    write_frame(&mut s, &Frame { exercise_id: 0, from, elems: vec![share] })?;
+    let s = TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    let mut w = BufWriter::new(s.try_clone()?);
+    write_frame(&mut w, &Frame { exercise_id: 0, from, elems: vec![share] })?;
+    w.flush()?;
+    let mut s = s;
     Ok(read_frame(&mut s)?.elems[0])
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Cursor;
     use std::thread;
 
     #[test]
@@ -116,6 +186,36 @@ mod tests {
         let mut c = TcpStream::connect(addr).unwrap();
         write_frame(&mut c, &w2).unwrap();
         assert_eq!(srv.join().unwrap(), want);
+    }
+
+    #[test]
+    fn read_frame_into_reuses_the_body_buffer() {
+        // Serialize two frames back-to-back, read both into ONE Frame: the
+        // second read must reuse the capacity the first one grew.
+        let a = Frame { exercise_id: 1, from: 2, elems: (0..64u128).collect() };
+        let b = Frame { exercise_id: 9, from: 5, elems: vec![7, 8] };
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, &a).unwrap();
+        write_frame(&mut bytes, &b).unwrap();
+        assert_eq!(bytes.len(), a.wire_bytes() + b.wire_bytes());
+
+        let mut cur = Cursor::new(bytes);
+        let mut fr = Frame::empty();
+        read_frame_into(&mut cur, &mut fr).unwrap();
+        assert_eq!(fr, a);
+        let cap = fr.elems.capacity();
+        read_frame_into(&mut cur, &mut fr).unwrap();
+        assert_eq!(fr, b);
+        assert_eq!(fr.elems.capacity(), cap, "shrinking frames must not reallocate");
+    }
+
+    #[test]
+    fn wire_bytes_matches_parts_writer() {
+        let f = Frame { exercise_id: 3, from: 1, elems: vec![10, 20, 30] };
+        let mut bytes = Vec::new();
+        write_frame_parts(&mut bytes, f.exercise_id, f.from, &f.elems).unwrap();
+        assert_eq!(bytes.len(), f.wire_bytes());
+        assert_eq!(wire_bytes_for(3), 16 + 48);
     }
 
     #[test]

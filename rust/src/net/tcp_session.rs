@@ -20,6 +20,20 @@
 //! provisioning (a production deployment loads them party-locally instead
 //! — the wire vocabulary is unchanged either way).
 //!
+//! Data plane (DESIGN.md §Data plane): every socket runs `TCP_NODELAY`
+//! with `BufReader`/`BufWriter` framing (one flush per frame, so a frame
+//! is one syscall instead of one per element); the member loop keeps a
+//! dense `ShareStore` slab plus reusable frame/scratch buffers
+//! ([`read_frame_into`]) and deals through
+//! [`ShamirCtx::share_batch_into`], so steady-state exercises perform no
+//! per-element heap allocation. Dealer→manager frames for `input`/`mul`/
+//! `sq2pq` are **party-major** (`dealt[(j−1)·k + e]` = member j's
+//! sub-share of element e) to match the flat batch-dealing layout;
+//! divpub's Alice/Bob frames stay element-major because §3.4 interleaves
+//! two deals per element (the draw-order contract). Manager→member frames
+//! are element-major with dealer-inner stride, unchanged from the seed
+//! protocol.
+//!
 //! Error handling: the session trait mirrors the engine's infallible
 //! signatures, so transport failures abort via panic with the failing
 //! operation named. The fallible building blocks ([`TcpSession::spawn_local`],
@@ -32,17 +46,20 @@
 //! deployment as wired.
 
 use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Error, Result};
 
-use super::tcp::{read_frame, write_frame, Frame};
+use super::tcp::{
+    read_frame, read_frame_into, wire_bytes_for, write_frame_parts, Frame,
+};
 use super::NetStats;
 use crate::field::Field;
 use crate::protocols::divpub::{sample_r, tagged_r};
-use crate::protocols::engine::DataId;
+use crate::protocols::engine::{reset_scratch, DataId, ShareStore};
 use crate::protocols::session::MpcSession;
 use crate::rng::Prng;
 use crate::sharing::shamir::ShamirCtx;
@@ -58,6 +75,10 @@ const OP_REVEAL: u128 = 6;
 const OP_SQ2PQ: u128 = 7;
 const OP_SHUTDOWN: u128 = 8;
 const OP_DIVPUB_TAGGED: u128 = 9;
+
+/// Buffered-framing capacity on both sides of every socket: large enough
+/// that a typical vectorized exercise frame flushes in one write.
+const FRAME_BUF: usize = 1 << 16;
 
 /// Session parameters, mirroring the protocol-relevant subset of
 /// `EngineConfig` (no schedule — the wire protocol is always vectorized —
@@ -94,49 +115,61 @@ fn shamir_for(field: Field, cfg: &TcpSessionConfig) -> ShamirCtx {
 /// One member's event loop: connect, say hello, then serve exercises until
 /// shutdown. Owns the member's private share store and RNG — the exact
 /// counterpart of the engine's `Member`, with the same per-exercise
-/// randomness order.
+/// randomness order — plus the reusable frame/scratch buffers and the
+/// memoized `d⁻¹` table of the flat-buffer data plane.
 fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> Result<()> {
     let shamir = shamir_for(field, &cfg);
+    let deg = shamir.t;
     let mut rng = Prng::seed_from_u64(cfg.seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15));
     let n = cfg.n;
     let f = field;
-    let mut store: HashMap<u64, u128> = HashMap::new();
-    let mut s = TcpStream::connect(&addr)?;
-    write_frame(&mut s, &Frame { exercise_id: 0, from: id as u32, elems: vec![] })?;
+    let mut store = ShareStore::new();
+    let mut dinv_cache: HashMap<u128, u128> = HashMap::new();
+    let stream = TcpStream::connect(&addr)?;
+    stream.set_nodelay(true)?;
+    let mut w = BufWriter::with_capacity(FRAME_BUF, stream.try_clone()?);
+    let mut r = BufReader::with_capacity(FRAME_BUF, stream);
+    write_frame_parts(&mut w, 0, id as u32, &[])?;
+    w.flush()?;
 
-    let get = |store: &HashMap<u64, u128>, a: u128| -> Result<u128> {
-        store.get(&(a as u64)).copied().ok_or_else(|| anyhow!("member {id} missing id {a}"))
+    // Reusable buffers: the event loop performs no per-frame heap
+    // allocation once these reach their steady-state sizes.
+    let mut ex = Frame::empty(); // current exercise broadcast
+    let mut body = Frame::empty(); // first relayed read of a phase
+    let mut body2 = Frame::empty(); // second relayed read (divpub z'/w)
+    let mut dealt: Vec<u128> = Vec::new(); // outbound sub-share scratch
+    let mut vals: Vec<u128> = Vec::new(); // local products / z' shares
+
+    let get = |store: &ShareStore, a: u128| -> Result<u128> {
+        store.get(a as u64).ok_or_else(|| anyhow!("member {id} missing id {a}"))
     };
 
     loop {
-        let ex = read_frame(&mut s)?;
+        read_frame_into(&mut r, &mut ex)?;
         let e = &ex.elems;
         match e[0] {
             OP_SHUTDOWN => return Ok(()),
             OP_INPUT => {
-                // [op, owner, k, out₀..] — owner deals its provisioned values.
+                // [op, owner, k, out₀..] — owner deals its provisioned
+                // values, party-major on the wire.
                 let owner = e[1] as usize;
                 let k = e[2] as usize;
                 let outs = &e[3..3 + k];
                 if owner == id {
-                    let vals = read_frame(&mut s)?.elems;
-                    let mut dealt = Vec::with_capacity(k * n);
-                    for &v in vals.iter() {
-                        dealt.extend(shamir.share(v % f.p, &mut rng));
-                    }
-                    write_frame(
-                        &mut s,
-                        &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: dealt },
-                    )?;
+                    read_frame_into(&mut r, &mut body)?;
+                    reset_scratch(&mut dealt, k * n);
+                    shamir.share_batch_into(&body.elems, deg, &mut rng, &mut dealt);
+                    write_frame_parts(&mut w, ex.exercise_id, id as u32, &dealt)?;
+                    w.flush()?;
                 }
-                let mine = read_frame(&mut s)?.elems; // my k shares
+                read_frame_into(&mut r, &mut body)?; // my k shares
                 for (i, &o) in outs.iter().enumerate() {
-                    store.insert(o as u64, mine[i]);
+                    store.put(o as u64, body.elems[i]);
                 }
             }
             OP_CONST => {
                 // [op, out, c] — constant polynomial share. Local.
-                store.insert(e[1] as u64, e[2] % f.p);
+                store.put(e[1] as u64, e[2] % f.p);
             }
             OP_LIN => {
                 // [op, k, (out, c0, t, (c, a)×t)×k] — coefficients arrive
@@ -154,33 +187,34 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                         acc = f.add(acc, f.mul(c, a));
                         i += 2;
                     }
-                    store.insert(out, acc);
+                    store.put(out, acc);
                 }
             }
             OP_MUL => {
-                // [op, k, out₀.., a₀.., b₀..]: local product → deal → combine.
+                // [op, k, out₀.., a₀.., b₀..]: local products → one flat
+                // batch deal (party-major) → combine.
                 let k = e[1] as usize;
                 let outs = &e[2..2 + k];
                 let avs = &e[2 + k..2 + 2 * k];
                 let bvs = &e[2 + 2 * k..2 + 3 * k];
-                let mut dealt = Vec::with_capacity(k * n);
+                vals.clear();
                 for ei in 0..k {
-                    let z = f.mul(get(&store, avs[ei])?, get(&store, bvs[ei])?);
-                    dealt.extend(shamir.share(z, &mut rng));
+                    vals.push(f.mul(get(&store, avs[ei])?, get(&store, bvs[ei])?));
                 }
-                write_frame(
-                    &mut s,
-                    &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: dealt },
-                )?;
+                reset_scratch(&mut dealt, k * n);
+                shamir.share_batch_into(&vals, deg, &mut rng, &mut dealt);
+                write_frame_parts(&mut w, ex.exercise_id, id as u32, &dealt)?;
+                w.flush()?;
                 // relay returns, per element, the n sub-shares destined to me
-                let sub = read_frame(&mut s)?.elems;
+                read_frame_into(&mut r, &mut body)?;
+                let sub = &body.elems;
                 let lambda = shamir.lambda();
                 for (ei, &o) in outs.iter().enumerate() {
                     let mut acc = 0u128;
                     for (i, &l) in lambda.iter().enumerate() {
                         acc = f.add(acc, f.mul(l, sub[ei * n + i]));
                     }
-                    store.insert(o as u64, acc);
+                    store.put(o as u64, acc);
                 }
             }
             OP_DIVPUB | OP_DIVPUB_TAGGED => {
@@ -192,96 +226,108 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                 let us = &e[3 + k..3 + 2 * k];
                 let tags = (e[0] == OP_DIVPUB_TAGGED).then(|| &e[3 + 2 * k..3 + 3 * k]);
                 if id == 1 {
-                    // Phase 1: Alice deals [r], [q = r mod d] per element —
-                    // same draw order (and same tag derivation) as the
-                    // engine's divpub_vec / divpub_vec_tagged.
-                    let mut dealt = Vec::with_capacity(2 * k * n);
+                    // Phase 1: Alice deals [r], [q = r mod d] per element,
+                    // element-major on the wire ([e][r×n][q×n]) — the §3.4
+                    // draw order (r, r's coefficients, q's coefficients)
+                    // interleaves two deals per element and must match the
+                    // engine's divpub_vec / divpub_vec_tagged draw-for-draw.
+                    reset_scratch(&mut dealt, 2 * k * n);
                     for ei in 0..k {
-                        let r = match tags {
+                        let rm = match tags {
                             Some(t) => tagged_r(cfg.seed, t[ei] as u64, cfg.rho_bits),
                             None => sample_r(&mut rng, cfg.rho_bits),
                         };
-                        let q = r % d;
-                        dealt.extend(shamir.share(r, &mut rng));
-                        dealt.extend(shamir.share(q, &mut rng));
+                        let q = rm % d;
+                        shamir.share_into(
+                            rm,
+                            deg,
+                            &mut rng,
+                            &mut dealt[ei * 2 * n..ei * 2 * n + n],
+                        );
+                        shamir.share_into(
+                            q,
+                            deg,
+                            &mut rng,
+                            &mut dealt[ei * 2 * n + n..(ei + 1) * 2 * n],
+                        );
                     }
-                    write_frame(
-                        &mut s,
-                        &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: dealt },
-                    )?;
+                    write_frame_parts(&mut w, ex.exercise_id, id as u32, &dealt)?;
+                    w.flush()?;
                 }
-                let rq = read_frame(&mut s)?.elems; // per element: (rᵢ, qᵢ)
+                read_frame_into(&mut r, &mut body)?; // per element: (rᵢ, qᵢ)
                 // Phase 2: [z'] = [u] + [r], opened to Bob via the relay.
-                let mut zs = Vec::with_capacity(k);
+                vals.clear();
                 for ei in 0..k {
-                    zs.push(f.add(get(&store, us[ei])?, rq[2 * ei]));
+                    vals.push(f.add(get(&store, us[ei])?, body.elems[2 * ei]));
                 }
-                write_frame(
-                    &mut s,
-                    &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: zs },
-                )?;
+                write_frame_parts(&mut w, ex.exercise_id, id as u32, &vals)?;
+                w.flush()?;
                 if id == 2 {
-                    // Phase 3: Bob reconstructs z', deals [w = z' mod d].
-                    let zall = read_frame(&mut s)?.elems;
-                    let mut dealt = Vec::with_capacity(k * n);
+                    // Phase 3: Bob reconstructs z', deals [w = z' mod d]
+                    // (element-major, as the manager's scatter expects).
+                    read_frame_into(&mut r, &mut body2)?;
+                    reset_scratch(&mut dealt, k * n);
                     for ei in 0..k {
-                        let z = shamir.reconstruct(&zall[ei * n..(ei + 1) * n]);
-                        let w = z % d;
-                        dealt.extend(shamir.share(w, &mut rng));
+                        let z = shamir.reconstruct(&body2.elems[ei * n..(ei + 1) * n]);
+                        let wv = z % d;
+                        shamir.share_into(wv, deg, &mut rng, &mut dealt[ei * n..(ei + 1) * n]);
                     }
-                    write_frame(
-                        &mut s,
-                        &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: dealt },
-                    )?;
+                    write_frame_parts(&mut w, ex.exercise_id, id as u32, &dealt)?;
+                    w.flush()?;
                 }
-                let ws = read_frame(&mut s)?.elems; // my k [w] shares
+                read_frame_into(&mut r, &mut body2)?; // my k [w] shares
                 // Phase 4 (local, corrected sign — DESIGN.md §4 erratum):
-                // [v] = ([u] + [q] − [w]) · d⁻¹.
-                let dinv = f.inv(d % f.p);
+                // [v] = ([u] + [q] − [w]) · d⁻¹, with d⁻¹ memoized per
+                // divisor (Fermat inversion is ~74 squarings).
+                let dinv = *dinv_cache.entry(d).or_insert_with(|| f.inv(d % f.p));
                 for (ei, &o) in outs.iter().enumerate() {
                     let u_sh = get(&store, us[ei])?;
-                    let v = f.mul(f.sub(f.add(u_sh, rq[2 * ei + 1]), ws[ei]), dinv);
-                    store.insert(o as u64, v);
+                    let v =
+                        f.mul(f.sub(f.add(u_sh, body.elems[2 * ei + 1]), body2.elems[ei]), dinv);
+                    store.put(o as u64, v);
                 }
             }
             OP_REVEAL => {
                 // [op, k, a₀..]: send my shares to the manager.
                 let k = e[1] as usize;
-                let mut mine = Vec::with_capacity(k);
+                vals.clear();
                 for &a in &e[2..2 + k] {
-                    mine.push(get(&store, a)?);
+                    vals.push(get(&store, a)?);
                 }
-                write_frame(
-                    &mut s,
-                    &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: mine },
-                )?;
+                write_frame_parts(&mut w, ex.exercise_id, id as u32, &vals)?;
+                w.flush()?;
             }
             OP_SQ2PQ => {
                 // [op, k, out₀..]: deal my provisioned additive
-                // contributions, then sum everyone's sub-shares (no λ).
+                // contributions (party-major), then sum everyone's
+                // sub-shares (no λ).
                 let k = e[1] as usize;
                 let outs = &e[2..2 + k];
-                let locals = read_frame(&mut s)?.elems;
-                let mut dealt = Vec::with_capacity(k * n);
-                for &v in locals.iter() {
-                    dealt.extend(shamir.share(v % f.p, &mut rng));
-                }
-                write_frame(
-                    &mut s,
-                    &Frame { exercise_id: ex.exercise_id, from: id as u32, elems: dealt },
-                )?;
-                let sub = read_frame(&mut s)?.elems;
+                read_frame_into(&mut r, &mut body)?;
+                reset_scratch(&mut dealt, k * n);
+                shamir.share_batch_into(&body.elems, deg, &mut rng, &mut dealt);
+                write_frame_parts(&mut w, ex.exercise_id, id as u32, &dealt)?;
+                w.flush()?;
+                read_frame_into(&mut r, &mut body)?;
+                let sub = &body.elems;
                 for (ei, &o) in outs.iter().enumerate() {
                     let mut acc = 0u128;
                     for i in 0..n {
                         acc = f.add(acc, sub[ei * n + i]);
                     }
-                    store.insert(o as u64, acc);
+                    store.put(o as u64, acc);
                 }
             }
             op => bail!("member {id}: unknown opcode {op}"),
         }
     }
+}
+
+/// One manager↔member connection: buffered reader/writer halves of the
+/// same `TCP_NODELAY` stream.
+struct Conn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
 }
 
 /// The Manager end of a TCP session: owns the member connections,
@@ -290,7 +336,7 @@ pub struct TcpSession {
     cfg: TcpSessionConfig,
     field: Field,
     shamir: ShamirCtx,
-    conns: Vec<TcpStream>, // index i = member i+1
+    conns: Vec<Conn>, // index i = member i+1
     next_ex: u64,
     next_id: u64,
     next_tag: u64,
@@ -313,13 +359,16 @@ impl TcpSession {
             let a = addr.clone();
             handles.push(std::thread::spawn(move || member_loop(a, id, field, cfg)));
         }
-        let mut conns_by_id: Vec<Option<TcpStream>> = (0..cfg.n).map(|_| None).collect();
+        let mut conns_by_id: Vec<Option<Conn>> = (0..cfg.n).map(|_| None).collect();
         for _ in 0..cfg.n {
-            let (mut s, _) = listener.accept()?;
-            let hello = read_frame(&mut s)?;
-            conns_by_id[hello.from as usize - 1] = Some(s);
+            let (s, _) = listener.accept()?;
+            s.set_nodelay(true)?;
+            let mut r = BufReader::with_capacity(FRAME_BUF, s.try_clone()?);
+            let hello = read_frame(&mut r)?;
+            let w = BufWriter::with_capacity(FRAME_BUF, s);
+            conns_by_id[hello.from as usize - 1] = Some(Conn { r, w });
         }
-        let conns: Vec<TcpStream> = conns_by_id.into_iter().map(|c| c.unwrap()).collect();
+        let conns: Vec<Conn> = conns_by_id.into_iter().map(|c| c.unwrap()).collect();
         Ok(TcpSession {
             cfg,
             field,
@@ -353,16 +402,20 @@ impl TcpSession {
             .collect()
     }
 
-    fn tx(&mut self, j: usize, elems: Vec<u128>) -> Result<()> {
-        let fr = Frame { exercise_id: self.next_ex, from: u32::MAX, elems };
+    /// Send one frame to member j+1 (write + flush: with `TCP_NODELAY` the
+    /// frame leaves as one segment train immediately).
+    fn tx(&mut self, j: usize, elems: &[u128]) -> Result<()> {
         self.stats.messages += 1;
-        self.stats.bytes += fr.wire_bytes() as u64;
-        write_frame(&mut self.conns[j], &fr)
+        self.stats.bytes += wire_bytes_for(elems.len()) as u64;
+        let ex = self.next_ex;
+        let c = &mut self.conns[j];
+        write_frame_parts(&mut c.w, ex, u32::MAX, elems)
+            .and_then(|()| c.w.flush().map_err(Error::from))
             .map_err(|e| e.context(format!("send to member {}", j + 1)))
     }
 
     fn rx(&mut self, j: usize) -> Result<Vec<u128>> {
-        let fr = read_frame(&mut self.conns[j])
+        let fr = read_frame(&mut self.conns[j].r)
             .map_err(|e| e.context(format!("recv from member {}", j + 1)))?;
         self.stats.messages += 1;
         self.stats.bytes += fr.wire_bytes() as u64;
@@ -377,7 +430,7 @@ impl TcpSession {
         self.next_ex += 1;
         self.stats.exercises += 1;
         for j in 0..self.cfg.n {
-            self.tx(j, elems.to_vec())?;
+            self.tx(j, elems)?;
         }
         self.round();
         Ok(())
@@ -394,17 +447,21 @@ impl TcpSession {
     }
 
     /// Redistribute dealt sub-shares: member j receives, per element, the
-    /// sub-shares from every dealer i (`out[e·n + i] = dealt[i][e·n + j]`).
+    /// sub-shares from every dealer i. Dealer frames are party-major
+    /// (`dealt[i][j·k + e]`, the flat batch-deal layout); the outgoing
+    /// frames keep the seed protocol's element-major, dealer-inner order
+    /// (`out[e·n + i]`).
     fn scatter_transposed(&mut self, dealt: &[Vec<u128>], k: usize) -> Result<()> {
         let n = self.cfg.n;
+        let mut mine = Vec::with_capacity(k * n);
         for j in 0..n {
-            let mut mine = Vec::with_capacity(k * n);
+            mine.clear();
             for e in 0..k {
                 for di in dealt.iter() {
-                    mine.push(di[e * n + j]);
+                    mine.push(di[j * k + e]);
                 }
             }
-            self.tx(j, mine)?;
+            self.tx(j, &mine)?;
         }
         self.round();
         Ok(())
@@ -421,13 +478,12 @@ impl TcpSession {
         msg.extend(ids.iter().map(|id| id.0 as u128));
         self.broadcast(&msg)?;
         // provisioning: the owner's values travel only on its own link
-        self.tx(owner - 1, values.to_vec())?;
+        self.tx(owner - 1, values)?;
         self.round();
-        let dealt = self.rx(owner - 1)?; // k·n, element-major
+        let dealt = self.rx(owner - 1)?; // k·n, party-major
         self.round();
         for j in 0..n {
-            let mine: Vec<u128> = (0..k).map(|e| dealt[e * n + j]).collect();
-            self.tx(j, mine)?;
+            self.tx(j, &dealt[j * k..(j + 1) * k])?;
         }
         self.round();
         self.stats.virtual_time_s += t0.elapsed().as_secs_f64();
@@ -495,13 +551,14 @@ impl TcpSession {
         // Phase 1: Alice's dealt [r]‖[q] per element → (rⱼ, qⱼ) per member.
         let alice = self.rx(0)?;
         self.round();
+        let mut mine = Vec::with_capacity(2 * k);
         for j in 0..n {
-            let mut mine = Vec::with_capacity(2 * k);
+            mine.clear();
             for e in 0..k {
                 mine.push(alice[e * 2 * n + j]);
                 mine.push(alice[e * 2 * n + n + j]);
             }
-            self.tx(j, mine)?;
+            self.tx(j, &mine)?;
         }
         self.round();
         // Phase 2: everyone's z' shares → Bob (element-major, party-inner).
@@ -512,14 +569,17 @@ impl TcpSession {
                 to_bob.push(zi[e]);
             }
         }
-        self.tx(1, to_bob)?;
+        self.tx(1, &to_bob)?;
         self.round();
         // Phase 3: Bob's dealt [w] per element → wⱼ per member.
         let bob = self.rx(1)?;
         self.round();
         for j in 0..n {
-            let mine: Vec<u128> = (0..k).map(|e| bob[e * n + j]).collect();
-            self.tx(j, mine)?;
+            mine.clear();
+            for e in 0..k {
+                mine.push(bob[e * n + j]);
+            }
+            self.tx(j, &mine)?;
         }
         self.round();
         self.stats.virtual_time_s += t0.elapsed().as_secs_f64();
@@ -550,13 +610,19 @@ impl TcpSession {
             bail!("sq2pq needs one contribution vector per member");
         }
         let k = local_values[0].len();
+        // Same guard as the engine: with party-major stride-k dealer
+        // frames, a ragged vector would silently address the wrong
+        // party's region instead of erroring.
+        if local_values.iter().any(|v| v.len() != k) {
+            bail!("sq2pq contribution vectors must all have length {k}");
+        }
         let ids = self.alloc_vec(k);
         let mut msg = vec![OP_SQ2PQ, k as u128];
         msg.extend(ids.iter().map(|id| id.0 as u128));
         self.broadcast(&msg)?;
         // provisioning: each member's contributions on its own link only
         for (i, vals) in local_values.iter().enumerate() {
-            self.tx(i, vals.clone())?;
+            self.tx(i, vals)?;
         }
         self.round();
         let dealt = self.gather()?;
@@ -675,5 +741,36 @@ mod tests {
         tcp.shutdown().unwrap();
         assert!(after.messages > 0 && after.bytes > 0 && after.rounds > 0);
         assert_eq!(after.exercises, 2);
+    }
+
+    #[test]
+    fn wide_vector_ops_over_tcp_match_sim() {
+        // A k ≫ 1 exercise stresses the flat party-major dealer frames and
+        // the buffered framing path end to end, on both backends.
+        let k = 257usize; // non-power-of-two, larger than any internal chunk
+        let avals: Vec<u128> = (0..k as u128).map(|i| i * 3 + 1).collect();
+        let bvals: Vec<u128> = (0..k as u128).map(|i| i * 5 + 2).collect();
+
+        fn wide<S: MpcSession>(sess: &mut S, avals: &[u128], bvals: &[u128]) -> Vec<u128> {
+            let a = sess.input_vec(1, avals);
+            let b = sess.input_vec(2, bvals);
+            let pairs: Vec<_> = a.iter().copied().zip(b.iter().copied()).collect();
+            let prods = sess.mul_vec(&pairs);
+            let qs = sess.divpub_vec(&prods, 256);
+            let mut ids = prods;
+            ids.extend(qs);
+            sess.reveal_vec(&ids)
+        }
+
+        let field = Field::paper();
+        let mut sim = Engine::new(field, EngineConfig::new(3));
+        let want = wide(&mut sim, &avals, &bvals);
+        let mut tcp = TcpSession::spawn_local(field, TcpSessionConfig::new(3)).unwrap();
+        let got = wide(&mut tcp, &avals, &bvals);
+        tcp.shutdown().unwrap();
+        assert_eq!(got, want, "wide mul/divpub must be byte-identical across backends");
+        for i in 0..k {
+            assert_eq!(want[i], avals[i] * bvals[i]);
+        }
     }
 }

@@ -92,11 +92,61 @@ impl EngineConfig {
     }
 }
 
+/// Dense per-member share store. [`DataId`]s are allocated monotonically
+/// from 1 by every session backend, so a slab indexed by the id replaces
+/// the seed's `HashMap<u64, u128>`: O(1) access with no hashing and no
+/// per-entry heap boxes — the data-plane store of DESIGN.md §Data plane.
+/// Shares are field elements `< p < 2^74`, so `u128::MAX` marks a vacant
+/// slot (an id that was allocated but whose exercise never wrote here).
+pub(crate) struct ShareStore {
+    slots: Vec<u128>,
+}
+
+/// Sentinel for a slot no exercise has written. Never a valid share.
+const VACANT: u128 = u128::MAX;
+
+/// Size a reusable scratch vector to exactly `len` elements, skipping the
+/// zero-fill memset when it already has that length. Callers guarantee
+/// every slot is written before it is read (the dealing loops cover the
+/// whole buffer), so stale contents are harmless — at n = 13, k = 4096 the
+/// avoided fill is an ~11 MB memset per vector op.
+pub(crate) fn reset_scratch(buf: &mut Vec<u128>, len: usize) {
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0);
+    }
+}
+
+impl ShareStore {
+    pub(crate) fn new() -> Self {
+        ShareStore { slots: Vec::new() }
+    }
+
+    /// The stored share, or `None` if `id` was never written here.
+    #[inline]
+    pub(crate) fn get(&self, id: u64) -> Option<u128> {
+        match self.slots.get(id as usize) {
+            Some(&v) if v != VACANT => Some(v),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub(crate) fn put(&mut self, id: u64, v: u128) {
+        debug_assert_ne!(v, VACANT, "share collides with the vacancy sentinel");
+        let idx = id as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize(idx + 1, VACANT);
+        }
+        self.slots[idx] = v;
+    }
+}
+
 /// One computing party. `store` maps DataId → this member's share.
 pub struct Member {
     /// Member id in `1..=n` (also the Shamir evaluation point).
     pub id: usize,
-    store: HashMap<u64, u128>,
+    store: ShareStore,
     rng: Prng,
 }
 
@@ -113,10 +163,10 @@ impl Member {
     }
 
     fn get(&self, a: DataId) -> u128 {
-        *self.store.get(&a.0).unwrap_or_else(|| panic!("member {} missing {:?}", self.id, a))
+        self.store.get(a.0).unwrap_or_else(|| panic!("member {} missing {:?}", self.id, a))
     }
     fn put(&mut self, a: DataId, v: u128) {
-        self.store.insert(a.0, v);
+        self.store.put(a.0, v);
     }
 }
 
@@ -137,6 +187,19 @@ pub struct Engine {
     next_tag: u64,
     #[allow(dead_code)]
     manager_rng: Prng,
+    /// Flat reusable sub-share scratch for the dealing exercises
+    /// (`mul_vec`/`sq2pq_inputs`/`divpub_impl`): sized on first use, its
+    /// capacity persists across calls so steady-state dealing performs no
+    /// per-element (or even per-call) heap allocation. See DESIGN.md
+    /// §Data plane for the layouts.
+    scratch_dealt: Vec<u128>,
+    /// Companion scratch (local products for `mul_vec`, `z'` openings for
+    /// `divpub_impl`).
+    scratch_vals: Vec<u128>,
+    /// Memoized `d⁻¹ mod p` per public divisor: `Field::inv` is a full
+    /// Fermat pow (~74 squarings), and training/inference divide by the
+    /// same scale `d` thousands of times per session.
+    dinv_cache: HashMap<u128, u128>,
 }
 
 impl Engine {
@@ -150,7 +213,7 @@ impl Engine {
         let members = (1..=cfg.n)
             .map(|id| Member {
                 id,
-                store: HashMap::new(),
+                store: ShareStore::new(),
                 rng: Prng::seed_from_u64(cfg.seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             })
             .collect();
@@ -163,6 +226,9 @@ impl Engine {
             next_id: 0,
             next_tag: 0,
             manager_rng: Prng::seed_from_u64(cfg.seed ^ 0xABCD),
+            scratch_dealt: Vec::new(),
+            scratch_vals: Vec::new(),
+            dinv_cache: HashMap::new(),
         }
     }
 
@@ -277,21 +343,26 @@ impl Engine {
 
     /// `input`: party `owner` (1-based) Shamir-deals its private values.
     pub fn input(&mut self, owner: usize, values: &[u128]) -> Vec<DataId> {
-        let ids = self.alloc_vec(values.len());
-        self.begin_exercise(values.len());
-        for (v, &id) in values.iter().zip(&ids) {
-            let o = owner - 1;
-            let shares = {
-                let m = &mut self.members[o];
-                let v = *v % self.field.p;
-                self.shamir.share(v, &mut m.rng)
-            };
-            for (j, &s) in shares.iter().enumerate() {
-                self.members[j].put(id, s);
+        let k = values.len();
+        let ids = self.alloc_vec(k);
+        self.begin_exercise(k);
+        let n = self.cfg.n;
+        let mut dealt = std::mem::take(&mut self.scratch_dealt);
+        reset_scratch(&mut dealt, n * k);
+        {
+            let Engine { shamir, members, .. } = self;
+            let deg = shamir.t;
+            let m = &mut members[owner - 1];
+            shamir.share_batch_into(values, deg, &mut m.rng, &mut dealt);
+        }
+        for (j, m) in self.members.iter_mut().enumerate() {
+            for (e, &id) in ids.iter().enumerate() {
+                m.put(id, dealt[j * k + e]);
             }
         }
-        self.star_exchange(true, values.len()); // owner → others
-        self.finish_exercise(values.len());
+        self.scratch_dealt = dealt;
+        self.star_exchange(true, k); // owner → others
+        self.finish_exercise(k);
         ids
     }
 
@@ -346,40 +417,53 @@ impl Engine {
     }
 
     /// Vectorized [`Engine::mul`]: one mesh exchange for all pairs under
-    /// the `Batched` schedule.
+    /// the `Batched` schedule. Dealing runs through the flat-buffer data
+    /// plane: each member's local products land in a reusable scratch
+    /// vector and are dealt with one [`ShamirCtx::share_batch_into`] call —
+    /// zero per-element heap allocation (DESIGN.md §Data plane).
     pub fn mul_vec(&mut self, pairs: &[(DataId, DataId)]) -> Vec<DataId> {
         let k = pairs.len();
         let ids = self.alloc_vec(k);
         self.begin_exercise(k);
         let n = self.cfg.n;
         let f = self.field;
-        // dealt[i][j][e]: sub-share of element e from member i to member j
-        let mut dealt: Vec<Vec<Vec<u128>>> = vec![vec![Vec::with_capacity(k); n]; n];
-        for i in 0..n {
-            for &(a, b) in pairs {
-                let (z, shares) = {
-                    let m = &mut self.members[i];
-                    let z = f.mul(m.get(a), m.get(b));
-                    let sh = self.shamir.share(z, &mut m.rng);
-                    (z, sh)
-                };
-                let _ = z;
-                for (j, &s) in shares.iter().enumerate() {
-                    dealt[i][j].push(s);
+        // dealt[i·n·k + j·k + e]: sub-share of element e from dealer i to
+        // member j (party-major slab per dealer).
+        let mut dealt = std::mem::take(&mut self.scratch_dealt);
+        let mut vals = std::mem::take(&mut self.scratch_vals);
+        reset_scratch(&mut dealt, n * n * k);
+        {
+            let Engine { shamir, members, .. } = self;
+            let deg = shamir.t;
+            for (i, m) in members.iter_mut().enumerate() {
+                vals.clear();
+                for &(a, b) in pairs {
+                    vals.push(f.mul(m.get(a), m.get(b)));
                 }
+                shamir.share_batch_into(
+                    &vals,
+                    deg,
+                    &mut m.rng,
+                    &mut dealt[i * n * k..(i + 1) * n * k],
+                );
             }
         }
         self.mesh_exchange(k);
-        let lambda = self.shamir.lambda().to_vec();
-        for j in 0..n {
-            for (e, &id) in ids.iter().enumerate() {
-                let mut acc = 0u128;
-                for i in 0..n {
-                    acc = f.add(acc, f.mul(lambda[i], dealt[i][j][e]));
+        {
+            let Engine { shamir, members, .. } = self;
+            let lambda = shamir.lambda();
+            for (j, m) in members.iter_mut().enumerate() {
+                for (e, &id) in ids.iter().enumerate() {
+                    let mut acc = 0u128;
+                    for (i, &l) in lambda.iter().enumerate() {
+                        acc = f.add(acc, f.mul(l, dealt[i * n * k + j * k + e]));
+                    }
+                    m.put(id, acc);
                 }
-                self.members[j].put(id, acc);
             }
         }
+        self.scratch_dealt = dealt;
+        self.scratch_vals = vals;
         self.finish_exercise(k);
         ids
     }
@@ -440,24 +524,31 @@ impl Engine {
         let bob = if n > 1 { 1 } else { 0 };
         let rho = self.cfg.rho_bits;
         let seed = self.cfg.seed;
+        let dinv = *self.dinv_cache.entry(d).or_insert_with(|| f.inv(d % f.p));
+
+        // Flat reusable scratch, element-major (e·n + j) segments for the
+        // three dealt streams. Element-major keeps Alice's per-element draw
+        // order (r, then r's coefficients, then q's) byte-identical to the
+        // scalar protocol — see DESIGN.md §Data plane.
+        let mut scratch = std::mem::take(&mut self.scratch_dealt);
+        reset_scratch(&mut scratch, 3 * k * n);
+        let (r_sh, rest) = scratch.split_at_mut(k * n);
+        let (q_sh, w_sh) = rest.split_at_mut(k * n);
 
         // Phase 1: Alice deals [r], [q = r mod d].
-        let mut r_sh: Vec<Vec<u128>> = Vec::with_capacity(k); // [e][party]
-        let mut q_sh: Vec<Vec<u128>> = Vec::with_capacity(k);
-        for e in 0..k {
-            let (rs, qs) = {
-                let m = &mut self.members[alice];
+        {
+            let Engine { shamir, members, .. } = self;
+            let deg = shamir.t;
+            let m = &mut members[alice];
+            for e in 0..k {
                 let r = match tags {
                     Some(t) => super::divpub::tagged_r(seed, t[e], rho),
                     None => super::divpub::sample_r(&mut m.rng, rho),
                 };
                 let q = r % d;
-                let rs = self.shamir.share(r, &mut m.rng);
-                let qs = self.shamir.share(q, &mut m.rng);
-                (rs, qs)
-            };
-            r_sh.push(rs);
-            q_sh.push(qs);
+                shamir.share_into(r, deg, &mut m.rng, &mut r_sh[e * n..(e + 1) * n]);
+                shamir.share_into(q, deg, &mut m.rng, &mut q_sh[e * n..(e + 1) * n]);
+            }
         }
         // Alice → everyone else: 2 elements per value per link.
         match self.cfg.schedule {
@@ -482,28 +573,26 @@ impl Engine {
         }
 
         // Phase 2: everyone computes [z'] = [u] + [r] and sends to Bob.
-        let mut z_shares: Vec<Vec<u128>> = vec![vec![0; n]; k]; // [e][party]
-        for j in 0..n {
+        let mut z_shares = std::mem::take(&mut self.scratch_vals); // [e·n + j]
+        reset_scratch(&mut z_shares, k * n);
+        for (j, m) in self.members.iter().enumerate() {
             for (e, &u_id) in us.iter().enumerate() {
-                let zu = f.add(self.members[j].get(u_id), r_sh[e][j]);
-                z_shares[e][j] = zu;
+                z_shares[e * n + j] = f.add(m.get(u_id), r_sh[e * n + j]);
             }
         }
         self.star_exchange(false, k); // members → Bob
 
         // Phase 3: Bob reconstructs z' = u + r (an integer < 2^(ρ+1) « p),
         // computes w = z' mod d, and deals [w].
-        let mut w_sh: Vec<Vec<u128>> = Vec::with_capacity(k);
-        for e in 0..k {
-            let z = self.shamir.reconstruct(&z_shares[e]);
-            let (w, ws) = {
-                let m = &mut self.members[bob];
+        {
+            let Engine { shamir, members, .. } = self;
+            let deg = shamir.t;
+            let m = &mut members[bob];
+            for e in 0..k {
+                let z = shamir.reconstruct(&z_shares[e * n..(e + 1) * n]);
                 let w = z % d;
-                let ws = self.shamir.share(w, &mut m.rng);
-                (w, ws)
-            };
-            let _ = w;
-            w_sh.push(ws);
+                shamir.share_into(w, deg, &mut m.rng, &mut w_sh[e * n..(e + 1) * n]);
+            }
         }
         self.star_exchange(true, k); // Bob → others
 
@@ -511,16 +600,17 @@ impl Engine {
         // NOTE the paper prints [u] - [q] + [w]; that has residue 2(u mod d)
         // mod d — the sign must be flipped for z ≡ 0 (mod d). See DESIGN.md
         // §4 "erratum" and divpub::tests::paper_identity.
-        let dinv = f.inv(d % f.p);
-        for j in 0..n {
+        for (j, m) in self.members.iter_mut().enumerate() {
             for (e, &u_id) in us.iter().enumerate() {
                 let v = f.mul(
-                    f.sub(f.add(self.members[j].get(u_id), q_sh[e][j]), w_sh[e][j]),
+                    f.sub(f.add(m.get(u_id), q_sh[e * n + j]), w_sh[e * n + j]),
                     dinv,
                 );
-                self.members[j].put(id_at(&ids, e), v);
+                m.put(ids[e], v);
             }
         }
+        self.scratch_dealt = scratch;
+        self.scratch_vals = z_shares;
         self.finish_exercise(k);
         ids
     }
@@ -533,31 +623,36 @@ impl Engine {
         let n = self.cfg.n;
         assert_eq!(local_values.len(), n);
         let k = local_values[0].len();
+        assert!(local_values.iter().all(|v| v.len() == k), "ragged contribution vectors");
         let ids = self.alloc_vec(k);
         self.begin_exercise(k);
         let f = self.field;
-        let mut dealt: Vec<Vec<Vec<u128>>> = vec![vec![Vec::with_capacity(k); n]; n];
-        for i in 0..n {
-            for e in 0..k {
-                let shares = {
-                    let m = &mut self.members[i];
-                    self.shamir.share(local_values[i][e] % f.p, &mut m.rng)
-                };
-                for (j, &s) in shares.iter().enumerate() {
-                    dealt[i][j].push(s);
-                }
+        // Same flat party-major-per-dealer slab as mul_vec.
+        let mut dealt = std::mem::take(&mut self.scratch_dealt);
+        reset_scratch(&mut dealt, n * n * k);
+        {
+            let Engine { shamir, members, .. } = self;
+            let deg = shamir.t;
+            for (i, m) in members.iter_mut().enumerate() {
+                shamir.share_batch_into(
+                    &local_values[i],
+                    deg,
+                    &mut m.rng,
+                    &mut dealt[i * n * k..(i + 1) * n * k],
+                );
             }
         }
         self.mesh_exchange(k);
-        for j in 0..n {
+        for (j, m) in self.members.iter_mut().enumerate() {
             for (e, &id) in ids.iter().enumerate() {
                 let mut acc = 0u128;
                 for i in 0..n {
-                    acc = f.add(acc, dealt[i][j][e]);
+                    acc = f.add(acc, dealt[i * n * k + j * k + e]);
                 }
-                self.members[j].put(id, acc);
+                m.put(id, acc);
             }
         }
+        self.scratch_dealt = dealt;
         self.finish_exercise(k);
         ids
     }
@@ -574,10 +669,6 @@ impl Engine {
     }
 }
 
-fn id_at(ids: &[DataId], e: usize) -> DataId {
-    ids[e]
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -585,6 +676,19 @@ mod tests {
 
     fn engine(n: usize) -> Engine {
         Engine::new(Field::paper(), EngineConfig::new(n))
+    }
+
+    #[test]
+    fn share_store_slab_semantics() {
+        let mut s = ShareStore::new();
+        assert_eq!(s.get(5), None);
+        s.put(5, 42);
+        assert_eq!(s.get(5), Some(42));
+        assert_eq!(s.get(4), None, "allocated-but-unwritten slot must read vacant");
+        assert_eq!(s.get(1_000_000), None, "reads past the slab are vacant, not panics");
+        s.put(2, 7);
+        s.put(5, 43);
+        assert_eq!((s.get(2), s.get(5)), (Some(7), Some(43)));
     }
 
     #[test]

@@ -25,6 +25,12 @@ pub struct ShamirCtx {
     /// Lagrange coefficients at 0 for interpolating from all n points
     /// (valid for any polynomial of degree ≤ n-1, in particular degree 2t).
     lagrange0: Vec<u128>,
+    /// Row-major n×n Vandermonde power table: `vander[(i-1)·n + j] = iʲ mod
+    /// p` for party `i ∈ 1..=n`, exponent `j ∈ 0..n`. Precomputed once so a
+    /// deal is a coefficient/power dot product instead of a per-party Horner
+    /// chain — the flat-buffer data plane's kernel (DESIGN.md §Data plane).
+    /// Covers every legal polynomial degree (`deg ≤ 2t < n`).
+    vander: Vec<u128>,
 }
 
 impl ShamirCtx {
@@ -39,7 +45,15 @@ impl ShamirCtx {
         assert!(n >= 1 && (n as u128) < f.p, "party ids must be distinct mod p");
         assert!(2 * t < n, "secure multiplication needs 2t+1 <= n (got n={n}, t={t})");
         let lagrange0 = Self::lagrange_at_zero(&f, &(1..=n as u128).collect::<Vec<_>>());
-        ShamirCtx { f, n, t, lagrange0 }
+        let mut vander = Vec::with_capacity(n * n);
+        for x in 1..=n as u128 {
+            let mut pw = 1u128;
+            for _ in 0..n {
+                vander.push(pw);
+                pw = f.mul(pw, x);
+            }
+        }
+        ShamirCtx { f, n, t, lagrange0, vander }
     }
 
     /// λ_j such that g(0) = Σ λ_j·g(x_j) for any g with deg g < |xs|.
@@ -69,18 +83,65 @@ impl ShamirCtx {
     /// Share with an explicit polynomial degree (used by tests to build
     /// degree-2t sharings directly).
     pub fn share_deg<R: Rng + ?Sized>(&self, secret: u128, deg: usize, rng: &mut R) -> Vec<u128> {
+        let mut out = vec![0u128; self.n];
+        self.share_batch_into(&[secret], deg, rng, &mut out);
+        out
+    }
+
+    /// Deal `k = secrets.len()` secrets with fresh degree-`deg` polynomials
+    /// into the flat **party-major** buffer `out`: `out[(i-1)·k + e]` is
+    /// party i's share of secret `e`. `out.len()` must be exactly `n·k`.
+    ///
+    /// Coefficients are drawn from `rng` in *exactly* the order a loop of
+    /// scalar [`ShamirCtx::share_deg`] calls draws them — secret 0's `deg`
+    /// random coefficients first, then secret 1's, and so on — so a batched
+    /// deal is draw-for-draw (and therefore share-for-share) identical to
+    /// the scalar path. The cross-backend byte-identity contract of
+    /// [`MpcSession`](crate::protocols::session::MpcSession) rests on this
+    /// order; `tests::batch_share_matches_scalar_draw_for_draw` pins it
+    /// against an independent Horner reference.
+    ///
+    /// Polynomial evaluation reads the precomputed Vandermonde power table,
+    /// so dealing performs **zero heap allocation per element** (one
+    /// reusable coefficient buffer per call) — the §Perf iteration-3 hot
+    /// path (EXPERIMENTS.md).
+    pub fn share_batch_into<R: Rng + ?Sized>(
+        &self,
+        secrets: &[u128],
+        deg: usize,
+        rng: &mut R,
+        out: &mut [u128],
+    ) {
         let f = &self.f;
-        let mut coeffs = Vec::with_capacity(deg + 1);
-        coeffs.push(secret % f.p);
-        for _ in 0..deg {
-            coeffs.push(f.rand(rng));
+        let n = self.n;
+        let k = secrets.len();
+        assert_eq!(out.len(), n * k, "out must hold n·k = {}·{} shares", n, k);
+        assert!(deg < n, "power table covers degrees < n (got deg={deg}, n={n})");
+        let mut coeffs: Vec<u128> = Vec::with_capacity(deg + 1);
+        for (e, &secret) in secrets.iter().enumerate() {
+            coeffs.clear();
+            coeffs.push(secret % f.p);
+            for _ in 0..deg {
+                coeffs.push(f.rand(rng));
+            }
+            for i in 0..n {
+                out[i * k + e] = f.dot(&coeffs, &self.vander[i * n..i * n + deg + 1]);
+            }
         }
-        (1..=self.n as u128)
-            .map(|x| {
-                // Horner
-                coeffs.iter().rev().fold(0u128, |acc, &c| f.add(f.mul(acc, x), c))
-            })
-            .collect()
+    }
+
+    /// Deal one secret into `out` (`out[i-1]` = party i's share): the k = 1
+    /// case of [`ShamirCtx::share_batch_into`], for protocol phases whose
+    /// draw order interleaves several logical values per element (§3.4's
+    /// r/q pairs) and therefore cannot batch across elements.
+    pub fn share_into<R: Rng + ?Sized>(
+        &self,
+        secret: u128,
+        deg: usize,
+        rng: &mut R,
+        out: &mut [u128],
+    ) {
+        self.share_batch_into(&[secret], deg, rng, out);
     }
 
     /// Reconstruct from all `n` shares (degree up to n-1, so also 2t).
@@ -202,6 +263,79 @@ mod tests {
     #[should_panic]
     fn rejects_threshold_too_high_for_mult() {
         ShamirCtx::with_threshold(Field::paper(), 4, 2); // 2t = 4 >= n
+    }
+
+    /// The seed implementation of `share_deg` (per-secret coefficient Vec +
+    /// per-party Horner chain), kept verbatim as the reference the batched
+    /// Vandermonde path must match draw-for-draw and share-for-share.
+    fn share_deg_reference(
+        c: &ShamirCtx,
+        secret: u128,
+        deg: usize,
+        rng: &mut Prng,
+    ) -> Vec<u128> {
+        let f = &c.f;
+        let mut coeffs = Vec::with_capacity(deg + 1);
+        coeffs.push(secret % f.p);
+        for _ in 0..deg {
+            coeffs.push(f.rand(rng));
+        }
+        (1..=c.n as u128)
+            .map(|x| coeffs.iter().rev().fold(0u128, |acc, &cf| f.add(f.mul(acc, x), cf)))
+            .collect()
+    }
+
+    #[test]
+    fn batch_share_matches_scalar_draw_for_draw() {
+        // share_batch_into ≡ a loop of scalar share calls: same Prng seed →
+        // identical flat buffer AND identical post-call RNG position (so a
+        // protocol step after a batched deal sees the same stream a scalar
+        // deal would leave). Checked against the legacy Horner reference,
+        // not against share_deg (which now delegates to the batch path).
+        crate::rng::property(64, |rng| {
+            let n = 1 + rng.gen_range_u64(13) as usize;
+            let c = ctx(n);
+            let k = rng.gen_range_u64(9) as usize;
+            let deg = if rng.gen_bool(0.5) { c.t } else { 2 * c.t };
+            let secrets: Vec<u128> = (0..k).map(|_| c.f.rand(rng)).collect();
+
+            let mut r_batch = Prng::seed_from_u64(0xBA7C4 + n as u64);
+            let mut r_scalar = r_batch.clone();
+            let mut flat = vec![0u128; n * k];
+            c.share_batch_into(&secrets, deg, &mut r_batch, &mut flat);
+            for (e, &s) in secrets.iter().enumerate() {
+                let want = share_deg_reference(&c, s, deg, &mut r_scalar);
+                for i in 0..n {
+                    assert_eq!(flat[i * k + e], want[i], "n={n} k={k} deg={deg} e={e} i={i}");
+                }
+                assert_eq!(c.reconstruct(&want), s % c.f.p);
+            }
+            assert_eq!(
+                r_batch.next_u64(),
+                r_scalar.next_u64(),
+                "batch and scalar dealing must consume the same number of draws"
+            );
+        });
+    }
+
+    #[test]
+    fn share_into_is_the_k1_batch() {
+        let c = ctx(5);
+        let mut r1 = Prng::seed_from_u64(42);
+        let mut r2 = Prng::seed_from_u64(42);
+        let mut out = vec![0u128; 5];
+        c.share_into(9999, c.t, &mut r1, &mut out);
+        assert_eq!(out, c.share_deg(9999, c.t, &mut r2));
+        assert_eq!(c.reconstruct(&out), 9999);
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_share_rejects_wrong_buffer_size() {
+        let c = ctx(5);
+        let mut rng = Prng::seed_from_u64(7);
+        let mut out = vec![0u128; 9]; // needs 5·2 = 10
+        c.share_batch_into(&[1, 2], c.t, &mut rng, &mut out);
     }
 
     #[test]
