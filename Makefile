@@ -53,9 +53,10 @@ bench-json: artifacts
 	cargo bench --bench kmeans_bench -- --json BENCH_kmeans.json
 	cargo bench --bench infer_batch -- --json BENCH_infer_batch.json
 	cargo bench --bench mpc_throughput -- --json BENCH_mpc_throughput.json
-	@echo "NOTE: if BENCH_mpc_throughput.json replaced the projected baseline"
-	@echo "      (provenance_projected_not_measured row gone), refresh the"
-	@echo "      EXPERIMENTS.md §Perf iteration-3 table to match."
+	cargo bench --bench serve_throughput -- --json BENCH_serve_throughput.json
+	@echo "NOTE: if BENCH_mpc_throughput.json or BENCH_serve_throughput.json"
+	@echo "      replaced a projected baseline (provenance_projected_not_measured"
+	@echo "      row gone), refresh the matching EXPERIMENTS.md §Perf table."
 
 doc:
 	cargo doc --no-deps

@@ -1,0 +1,142 @@
+//! Persistent-server throughput: load against the micro-batching
+//! scheduler of `net::serve` at rising client concurrency.
+//!
+//! Spins up the full serve stack (Sim backend, mini structure, 3 members)
+//! and drives it with C ∈ {1, 8, 32} concurrent connections, each issuing
+//! a fixed number of closed-loop queries — so the system-wide offered
+//! concurrency is C and the scheduler can coalesce up to C queries per
+//! tick. Reports queries/s, secure **rounds per query** (from the
+//! server's summed tick deltas), and client-observed p50/p99 latency.
+//!
+//! The acceptance claim this bench charts: rounds/query **strictly
+//! decreases** as concurrency rises 1 → 32 — micro-batching amortizes
+//! MPC round-trips across concurrent users exactly like the offline
+//! `infer_batch` amortization curve, but on live traffic. `--json <path>`
+//! writes the `{bench, metric, value}` rows `make bench-json` commits as
+//! BENCH_serve_throughput.json. Never skips (no artifacts needed).
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use spn_mpc::bench::JsonSink;
+use spn_mpc::coordinator::serve::train_and_serve;
+use spn_mpc::coordinator::train::TrainConfig;
+use spn_mpc::datasets;
+use spn_mpc::field::Field;
+use spn_mpc::metrics::render_table;
+use spn_mpc::net::serve::{ServeClient, ServeConfig, ServeReport};
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::spn::plan::Query;
+use spn_mpc::spn::structure::Structure;
+use spn_mpc::spn::learn;
+
+const CONCURRENCY: [usize; 3] = [1, 8, 32];
+const QUERIES_PER_CONN: usize = 24;
+const MEMBERS: usize = 3;
+
+/// One load run: serve on a background thread (auto-shutdown after the
+/// exact query count), C closed-loop client threads, per-query latencies.
+fn run_load(st: &Structure, conc: usize) -> (ServeReport, Vec<f64>, f64) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let total = (conc * QUERIES_PER_CONN) as u64;
+    let cfg = ServeConfig {
+        max_batch: 32,
+        max_wait: Duration::from_millis(3),
+        max_queries: Some(total),
+    };
+    let st2 = st.clone();
+    let server = thread::spawn(move || {
+        // seeds 5/21: the same training as the serve/integration tests
+        let counts = datasets::synth_shard_counts(&st2, MEMBERS, st2.rows, 5, 21);
+        let rows = st2.rows as u64;
+        let theta = learn::default_leaf_theta(&st2);
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched());
+        let (report, _) = train_and_serve(
+            &mut eng,
+            &st2,
+            &counts,
+            rows,
+            &TrainConfig::default(),
+            &theta,
+            listener,
+            &cfg,
+        )
+        .unwrap();
+        report
+    });
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..conc {
+        let a = addr.clone();
+        let nv = st.num_vars;
+        handles.push(thread::spawn(move || {
+            let mut c = ServeClient::connect(&a).unwrap();
+            let mut lats = Vec::with_capacity(QUERIES_PER_CONN);
+            for i in 0..QUERIES_PER_CONN {
+                let mut q = Query { x: vec![0; nv], marg: vec![true; nv] };
+                let v = (t + i) % nv;
+                q.x[v] = (i % 2) as u8;
+                q.marg[v] = false;
+                let tq = Instant::now();
+                let r = c.query(&q).unwrap();
+                assert!(r.batch >= 1);
+                lats.push(tq.elapsed().as_secs_f64());
+            }
+            lats
+        }));
+    }
+    let mut lats: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let report = server.join().unwrap();
+    lats.sort_by(f64::total_cmp);
+    (report, lats, wall)
+}
+
+fn main() {
+    let mut json = JsonSink::from_env_args();
+    let st = Structure::mini_demo();
+    let mut rows = Vec::new();
+    let mut rpq_curve = Vec::new();
+    for &c in &CONCURRENCY {
+        let (report, lats, wall) = run_load(&st, c);
+        assert_eq!(report.queries, (c * QUERIES_PER_CONN) as u64, "every query answered");
+        let total = report.queries as f64;
+        let qps = total / wall;
+        let rpq = report.stats.rounds as f64 / total;
+        let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize] * 1e3;
+        let (p50, p99) = (pct(0.50), pct(0.99));
+        rpq_curve.push(rpq);
+        json.push("serve_throughput", &format!("queries_per_s_c{c}"), qps);
+        json.push("serve_throughput", &format!("rounds_per_query_c{c}"), rpq);
+        json.push("serve_throughput", &format!("p50_ms_c{c}"), p50);
+        json.push("serve_throughput", &format!("p99_ms_c{c}"), p99);
+        json.push("serve_throughput", &format!("max_tick_c{c}"), report.max_tick as f64);
+        rows.push(vec![
+            c.to_string(),
+            report.queries.to_string(),
+            report.batches.to_string(),
+            report.max_tick.to_string(),
+            format!("{qps:.0}"),
+            format!("{rpq:.1}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+        ]);
+    }
+    assert!(
+        rpq_curve[0] > rpq_curve[1] && rpq_curve[1] > rpq_curve[2],
+        "rounds/query must strictly decrease as concurrency rises: {rpq_curve:?}"
+    );
+    println!(
+        "{}",
+        render_table(
+            "Persistent server — micro-batched private inference (mini, sim backend, 3 members)",
+            &["conc", "queries", "ticks", "max tick", "q/s", "rounds/q", "p50 ms", "p99 ms"],
+            &rows
+        )
+    );
+    json.finish().expect("write --json output");
+    println!("serve_throughput OK");
+}

@@ -11,8 +11,10 @@
 //! shrink ~B× while each query's revealed value stays **bit-identical** to
 //! a sequential [`private_eval`] (the tagged-divpub invariant — see
 //! `spn::plan` and DESIGN.md §Evaluation Plan). For a standing service,
-//! compile the plan once and drive an [`Evaluator`] directly; the free
-//! functions here recompile per call for convenience.
+//! use [`crate::coordinator::serve`] (the `spn-mpc serve` subcommand),
+//! which compiles once and drives one persistent [`Evaluator`] behind a
+//! micro-batching scheduler; the free functions here recompile per call
+//! for convenience.
 //!
 //! Fixed-point convention: every node value is an integer ≈ d·(true value)
 //! with d = 256 (§5.3); each secure multiplication of two d-scaled values
@@ -57,7 +59,7 @@ pub fn private_eval_batch<S: MpcSession>(
     default_leaf_theta: &[f64],
 ) -> (Vec<i128>, NetStats) {
     let plan = EvalPlan::compile(st, default_leaf_theta, model.d);
-    let mut ev = Evaluator::new(&plan);
+    let mut ev = Evaluator::new(plan);
     ev.eval_batch(sess, queries, &model.sum_w, model.leaf_theta.as_deref())
 }
 

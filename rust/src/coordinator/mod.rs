@@ -9,9 +9,12 @@
 //! * [`train`]  — the §3.4 exact path: per-party counts → SQ2PQ → one
 //!   Newton inversion per sum node → per-edge multiply + truncate.
 //! * [`infer`]  — §4 private marginal inference over the learned shares.
+//! * [`serve`]  — the standing service: train, then hand the session to
+//!   the micro-batching scheduler of `net::serve` (`spn-mpc serve`).
 
 pub mod approx;
 pub mod infer;
+pub mod serve;
 pub mod train;
 
 pub use train::{train, SharedModel, TrainConfig, TrainReport};

@@ -1,0 +1,55 @@
+//! The standing-service coordinator: train once, then hand the live MPC
+//! session to the micro-batching scheduler of [`crate::net::serve`]
+//! (DESIGN.md §Serving layer).
+//!
+//! This is the `spn-mpc serve` entrypoint's core: the same generic
+//! [`MpcSession`] drives training and then serving, so the weight shares
+//! never leave the members — the scheduler evaluates client queries over
+//! exactly the `DataId` handles training produced. The plan is compiled
+//! once ([`EvalPlan::compile`]) and one persistent [`Evaluator`] answers
+//! every scheduler tick; per-client [`crate::net::NetStats`] deltas ride
+//! back in each response.
+
+use std::net::TcpListener;
+
+use anyhow::Result;
+
+use crate::coordinator::train::{train, SharedModel, TrainConfig, TrainReport};
+use crate::net::serve::{serve, ServeConfig, ServeReport};
+use crate::protocols::session::MpcSession;
+use crate::spn::plan::{EvalPlan, Evaluator};
+use crate::spn::structure::Structure;
+
+/// Serve an already-trained model: compile its plan, build the persistent
+/// [`Evaluator`], and run the scheduler until shutdown. The session stays
+/// usable afterwards (TCP callers still own its `shutdown()`).
+pub fn serve_model<S: MpcSession>(
+    sess: &mut S,
+    st: &Structure,
+    model: &SharedModel,
+    default_leaf_theta: &[f64],
+    listener: TcpListener,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let plan = EvalPlan::compile(st, default_leaf_theta, model.d);
+    let mut ev = Evaluator::new(plan);
+    serve(sess, &mut ev, &model.sum_w, model.leaf_theta.as_deref(), listener, cfg)
+}
+
+/// Train on the parties' local counts, then serve the learned shares over
+/// the same session — the full `spn-mpc serve` pipeline.
+#[allow(clippy::too_many_arguments)]
+pub fn train_and_serve<S: MpcSession>(
+    sess: &mut S,
+    st: &Structure,
+    shard_counts: &[Vec<u64>],
+    rows_total: u64,
+    tcfg: &TrainConfig,
+    default_leaf_theta: &[f64],
+    listener: TcpListener,
+    cfg: &ServeConfig,
+) -> Result<(ServeReport, TrainReport)> {
+    let (model, treport) = train(sess, st, shard_counts, rows_total, tcfg);
+    let report = serve_model(sess, st, &model, default_leaf_theta, listener, cfg)?;
+    Ok((report, treport))
+}

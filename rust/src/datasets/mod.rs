@@ -112,6 +112,26 @@ pub fn sample(st: &Structure, params: &[f64], n: usize, seed: u64) -> Vec<Vec<u8
 
 /// Horizontal partition of a dataset into `n` near-equal shards — the
 /// paper's data distribution model (§1: each party owns a subset of rows).
+/// Deterministic synthetic per-party training shards in one step:
+/// ground-truth params from `gt_seed`, `rows` rows sampled with
+/// `sample_seed`, an `n`-way partition, native counts per shard. This is
+/// the single definition behind every oracle-vs-served byte-identity
+/// comparison (serve tests, cross-backend tests, the `serve_throughput`
+/// bench, the CLI) — divergent copies would silently train different
+/// models and break those comparisons.
+pub fn synth_shard_counts(
+    st: &Structure,
+    n: usize,
+    rows: usize,
+    gt_seed: u64,
+    sample_seed: u64,
+) -> Vec<Vec<u64>> {
+    let gt = ground_truth_params(st, gt_seed);
+    let data = sample(st, &gt, rows, sample_seed);
+    let shards = partition(&data, n);
+    shards.iter().map(|s| crate::spn::eval::counts(st, s)).collect()
+}
+
 pub fn partition(data: &[Vec<u8>], n: usize) -> Vec<Vec<Vec<u8>>> {
     let mut shards: Vec<Vec<Vec<u8>>> = vec![Vec::new(); n];
     for (i, row) in data.iter().enumerate() {

@@ -8,6 +8,13 @@
 //!           [--target v=b,...] [--batch queries.jsonl] [--backend sim|tcp]
 //!           — private inference (one query, or a whole batch through the
 //!           compiled evaluation plan)
+//!   serve   [--dataset <name>] [--members N] [--backend sim|tcp] [--port P]
+//!           [--max-batch B] [--max-wait-ms T] [--max-queries Q]
+//!           — train, then run the persistent private-inference service:
+//!           concurrent TCP clients, micro-batched over one MPC session
+//!   client  --addr host:port [--queries FILE.jsonl | --evidence v=b,...]
+//!           [--repeat R] [--concurrency C] [--shutdown]
+//!           — drive (or stop) a running serve instance
 //!   kmeans  [--members N] [--k K] [--points P] [--backend sim|tcp]
 //!           — private clustering demo
 //!   tables  [--members N] — reproduce the paper's Tables 1–3 rows
@@ -16,11 +23,16 @@
 //! (The vendored crate set has no clap; flags are parsed by hand.)
 
 use std::collections::HashMap;
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use spn_mpc::coordinator::infer::{private_conditional, private_eval_batch, Query};
+use spn_mpc::coordinator::serve::train_and_serve;
 use spn_mpc::json::Json;
+use spn_mpc::net::serve::{query_from_json, Response, ServeClient, ServeConfig};
 use spn_mpc::coordinator::train::{peek_weights, reveal_weights, train, TrainConfig};
 use spn_mpc::datasets;
 use spn_mpc::field::Field;
@@ -120,6 +132,12 @@ fn backend(args: &Args) -> Result<&str> {
 }
 
 fn load_structure(name: &str) -> Result<Structure> {
+    if name == "mini" {
+        // The in-code demo structure shared with tests and benches:
+        // artifact-free, so serve/infer smoke runs work on a fresh
+        // checkout with no python toolchain.
+        return Ok(Structure::mini_demo());
+    }
     let dir = runtime::default_artifacts_dir();
     Structure::load(dir.join(format!("{name}.structure.json")))
         .map_err(|e| e.context(format!("structure for {name} — run `make artifacts`")))
@@ -222,7 +240,8 @@ fn parse_assign(s: &str) -> Result<Vec<(usize, u8)>> {
 
 /// Parse a JSONL batch-query file: one object per line with `"x"` (0/1
 /// assignment) and `"marg"` (true = marginalized) arrays of `num_vars`
-/// entries each. Blank lines and `#` comments are skipped.
+/// entries each — the same object schema the serve wire protocol speaks
+/// ([`query_from_json`]). Blank lines and `#` comments are skipped.
 fn parse_batch_queries(path: &str, num_vars: usize) -> Result<Vec<Query>> {
     let txt = std::fs::read_to_string(path)
         .map_err(|e| anyhow!("reading batch file {path}: {e}"))?;
@@ -233,30 +252,9 @@ fn parse_batch_queries(path: &str, num_vars: usize) -> Result<Vec<Query>> {
             continue;
         }
         let j = Json::parse(line).map_err(|e| anyhow!("{path}:{}: {e}", ln + 1))?;
-        let (Some(xj), Some(mj)) = (j.opt("x"), j.opt("marg")) else {
-            bail!("{path}:{}: each line needs \"x\" and \"marg\" arrays", ln + 1);
-        };
-        let (Json::Arr(xs), Json::Arr(ms)) = (xj, mj) else {
-            bail!("{path}:{}: \"x\" and \"marg\" must be arrays", ln + 1);
-        };
-        let mut x = Vec::with_capacity(xs.len());
-        for v in xs {
-            match v {
-                Json::Num(n) if *n == 0.0 || *n == 1.0 => x.push(*n as u8),
-                _ => bail!("{path}:{}: \"x\" entries must be 0 or 1", ln + 1),
-            }
-        }
-        let mut marg = Vec::with_capacity(ms.len());
-        for v in ms {
-            match v {
-                Json::Bool(b) => marg.push(*b),
-                _ => bail!("{path}:{}: \"marg\" entries must be booleans", ln + 1),
-            }
-        }
-        if x.len() != num_vars || marg.len() != num_vars {
-            bail!("{path}:{}: x/marg must each have {num_vars} entries", ln + 1);
-        }
-        out.push(Query { x, marg });
+        let q = query_from_json(&j, num_vars)
+            .map_err(|e| e.context(format!("{path}:{}", ln + 1)))?;
+        out.push(q);
     }
     if out.is_empty() {
         bail!("{path}: no queries");
@@ -333,10 +331,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let rows = args.usize_or("rows", 2000.min(st.rows));
 
     // train first (quick, batched) to get weight shares
-    let gt = datasets::ground_truth_params(&st, 7);
-    let data = datasets::sample(&st, &gt, rows, 42);
-    let shards = datasets::partition(&data, n);
-    let counts: Vec<Vec<u64>> = shards.iter().map(|s| eval::counts(&st, s)).collect();
+    let counts = synth_shard_counts(&st, n, rows);
 
     let theta = learn::default_leaf_theta(&st);
     if let Some(path) = args.get("batch") {
@@ -392,6 +387,180 @@ fn cmd_infer(args: &Args) -> Result<()> {
         group_thousands(stats.messages),
         stats.megabytes(),
         stats.virtual_time_s
+    );
+    Ok(())
+}
+
+/// The deterministic synthetic training shards `infer` and `serve` share
+/// (ground truth seed 7, sample seed 42) — one definition, because the
+/// served-vs-direct byte-identity story depends on every command training
+/// the same way.
+fn synth_shard_counts(st: &Structure, n: usize, rows: usize) -> Vec<Vec<u64>> {
+    datasets::synth_shard_counts(st, n, rows, 7, 42)
+}
+
+/// `serve`: train, then run the persistent private-inference service —
+/// one long-lived MPC session, many concurrent TCP clients, a
+/// micro-batching scheduler coalescing their queries per tick.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("mini");
+    let n = args.usize_or("members", 3);
+    let st = load_structure(name)?;
+    let rows = args.usize_or("rows", 2000.min(st.rows));
+    let port = args.usize_or("port", 0);
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range (max 65535)");
+    }
+    let port = port as u16;
+    let cfg = ServeConfig {
+        max_batch: args.usize_or("max-batch", 16).max(1),
+        max_wait: Duration::from_millis(args.usize_or("max-wait-ms", 5) as u64),
+        max_queries: args.get("max-queries").map(|s| s.parse().expect("bad --max-queries")),
+    };
+
+    let counts = synth_shard_counts(&st, n, rows);
+    let theta = learn::default_leaf_theta(&st);
+    let tcfg = TrainConfig::default();
+
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+    let addr = listener.local_addr()?;
+    let b = backend(args)?;
+    // One parseable line for drivers (tests, CI, scripts) — flushed
+    // explicitly because stdout is block-buffered when piped.
+    println!(
+        "SERVE listening on {addr} dataset={name} num_vars={} members={n} backend={b} \
+         max_batch={} max_wait_ms={}",
+        st.num_vars,
+        cfg.max_batch,
+        cfg.max_wait.as_millis()
+    );
+    std::io::stdout().flush()?;
+
+    let report = match b {
+        "tcp" => {
+            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let (report, _) =
+                train_and_serve(&mut sess, &st, &counts, rows as u64, &tcfg, &theta, listener, &cfg)?;
+            sess.shutdown()?;
+            println!("[backend] tcp: {n} member threads joined");
+            report
+        }
+        _ => {
+            let mut ec = engine_config(args, n);
+            ec.schedule = Schedule::Batched; // a standing service amortizes
+            let mut eng = Engine::new(Field::paper(), ec);
+            let (report, _) =
+                train_and_serve(&mut eng, &st, &counts, rows as u64, &tcfg, &theta, listener, &cfg)?;
+            report
+        }
+    };
+    println!(
+        "serve: clean shutdown — {} queries from {} client(s) in {} batches (max tick {}), \
+         {} messages / {} rounds total",
+        report.queries,
+        report.clients,
+        report.batches,
+        report.max_tick,
+        group_thousands(report.stats.messages),
+        report.stats.rounds
+    );
+    Ok(())
+}
+
+/// `client`: drive a running `serve` instance — single queries from
+/// `--evidence`, whole JSONL files, repeated and spread over concurrent
+/// connections, or `--shutdown` to stop the server.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr =
+        args.get("addr").ok_or_else(|| anyhow!("client needs --addr host:port"))?.to_string();
+    if args.has("shutdown") {
+        ServeClient::connect(&addr)?.shutdown_server()?;
+        println!("client: server acknowledged shutdown");
+        return Ok(());
+    }
+    let probe = ServeClient::connect(&addr)?;
+    let num_vars = probe.hello.num_vars;
+    println!(
+        "client: connected to {addr} (model {}, {} vars, d={}, server max_batch {})",
+        probe.hello.name, num_vars, probe.hello.d, probe.hello.max_batch
+    );
+
+    let base: Vec<Query> = if let Some(path) = args.get("queries") {
+        parse_batch_queries(path, num_vars)?
+    } else {
+        let evidence = parse_assign(args.get("evidence").unwrap_or("0=1"))?;
+        let mut x = vec![0u8; num_vars];
+        let mut marg = vec![true; num_vars];
+        for &(v, bit) in &evidence {
+            if v >= num_vars {
+                bail!("--evidence variable {v} out of range (model has {num_vars} vars)");
+            }
+            x[v] = bit;
+            marg[v] = false;
+        }
+        vec![Query { x, marg }]
+    };
+    let repeat = args.usize_or("repeat", 1).max(1);
+    let queries: Vec<Query> = (0..repeat).flat_map(|_| base.iter().cloned()).collect();
+    let conc = args.usize_or("concurrency", 1).clamp(1, queries.len());
+
+    let t0 = Instant::now();
+    let mut results: Vec<(usize, Response, f64)> = Vec::with_capacity(queries.len());
+    if conc == 1 {
+        let mut c = probe;
+        for (i, q) in queries.iter().enumerate() {
+            let tq = Instant::now();
+            let resp = c.query(q)?;
+            results.push((i, resp, tq.elapsed().as_secs_f64()));
+        }
+    } else {
+        drop(probe); // each worker owns its own connection
+        let queries = Arc::new(queries);
+        let mut handles = Vec::new();
+        for t in 0..conc {
+            let addr = addr.clone();
+            let queries = queries.clone();
+            handles.push(std::thread::spawn(move || -> Result<Vec<(usize, Response, f64)>> {
+                let mut c = ServeClient::connect(&addr)?;
+                let mut out = Vec::new();
+                let mut i = t;
+                while i < queries.len() {
+                    let tq = Instant::now();
+                    let resp = c.query(&queries[i])?;
+                    out.push((i, resp, tq.elapsed().as_secs_f64()));
+                    i += conc;
+                }
+                Ok(out)
+            }));
+        }
+        for h in handles {
+            results.extend(h.join().map_err(|_| anyhow!("client thread panicked"))??);
+        }
+        results.sort_by_key(|r| r.0);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    for (i, r, lat) in &results {
+        println!(
+            "q{i:04} p={:.6} root={} batch={} seq={} latency_ms={:.2}",
+            r.p,
+            r.root,
+            r.batch,
+            r.seq,
+            lat * 1e3
+        );
+    }
+    let mut lats: Vec<f64> = results.iter().map(|r| r.2).collect();
+    lats.sort_by(f64::total_cmp);
+    let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize] * 1e3;
+    let max_tick = results.iter().map(|r| r.1.batch).max().unwrap_or(0);
+    println!(
+        "client: {} queries over {conc} connection(s) in {:.3} s ({:.1} q/s), \
+         p50 {:.2} ms, p99 {:.2} ms, max served batch {max_tick}",
+        results.len(),
+        wall,
+        results.len() as f64 / wall,
+        pct(0.50),
+        pct(0.99)
     );
     Ok(())
 }
@@ -532,22 +701,31 @@ fn main() -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "kmeans" => cmd_kmeans(&args),
         "tables" => cmd_tables(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             println!(
                 "spn-mpc — private SPN parameter learning & inference (paper reproduction)\n\
-                 usage: spn-mpc <train|infer|kmeans|tables|info> [flags]\n\
-                 common flags: --dataset <toy|nltcs|jester|baudio|bnetflix> --members N\n\
+                 usage: spn-mpc <train|infer|serve|client|kmeans|tables|info> [flags]\n\
+                 common flags: --dataset <mini|toy|nltcs|jester|baudio|bnetflix> --members N\n\
                  \t--latency MS --batched --learn-leaves --native-counts --rows N\n\
-                 \t--backend sim|tcp (train/infer/kmeans; default sim = accounted\n\
+                 \t--backend sim|tcp (train/infer/serve/kmeans; default sim = accounted\n\
                  \t    simulation, tcp = real member threads over loopback sockets\n\
                  \t    running the same protocol byte-identically)\n\
+                 \t(--dataset mini is the in-code demo structure: no artifacts needed)\n\
                  infer flags: --target v=b,... --evidence v=b,...\n\
                  \t--batch FILE.jsonl (one {{\"x\": [...], \"marg\": [...]}} per line:\n\
                  \t    all queries evaluate in ONE compiled-plan batch — rounds per\n\
                  \t    query shrink ~B×, results identical to sequential evaluation)\n\
+                 serve flags: --port P (0 = ephemeral, printed) --max-batch B\n\
+                 \t--max-wait-ms T --max-queries Q (trains, then serves concurrent\n\
+                 \t    clients from one persistent MPC session: queued queries\n\
+                 \t    coalesce into one compiled-plan batch per scheduler tick)\n\
+                 client flags: --addr host:port [--queries FILE.jsonl | --evidence v=b,...]\n\
+                 \t--repeat R --concurrency C --shutdown (stop the server)\n\
                  kmeans flags: --k K --points P"
             );
             Ok(())

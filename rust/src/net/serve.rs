@@ -1,0 +1,757 @@
+//! The persistent private-inference server (DESIGN.md §Serving layer):
+//! a multi-client TCP front-end plus a **micro-batching scheduler** over
+//! one long-lived MPC session.
+//!
+//! CryptoSPN frames privacy-preserving SPN inference as a client/server
+//! service; this module is that service for the secret-sharing protocol.
+//! The Manager holds one standing session (Sim or TCP backend) with a
+//! trained model's weight shares and a persistent compiled-plan
+//! [`Evaluator`]; any number of clients connect over TCP and speak a small
+//! length-prefixed JSON protocol. Queued queries from *all* clients
+//! coalesce into one [`Evaluator::eval_batch`] call per scheduler tick —
+//! the cross-query amortization of the compiled-plan refactor applied to
+//! live traffic: secure rounds per query shrink ~(tick width)×.
+//!
+//! ## Wire protocol
+//!
+//! Every message is one frame: `len: u32 LE | body: len bytes of UTF-8
+//! JSON` (one object per frame; [`MAX_JSON_MSG`] caps the length so a
+//! desynced stream fails as a frame error, mirroring `net::tcp`).
+//!
+//! * server → client on connect: `{"proto":1,"name":..,"num_vars":..,
+//!   "d":..,"max_batch":..}` — the client needs `num_vars` to build
+//!   queries and `d` to interpret roots.
+//! * client → server: `{"x":[0,1,..],"marg":[true,false,..]}` — exactly
+//!   the JSONL object schema of `infer --batch` ([`query_from_json`]);
+//!   or the control message `{"cmd":"shutdown"}`.
+//! * server → client per query: `{"seq":..,"root":..,"p":..,"d":..,
+//!   "batch":..,"stats":{..},"total":{..}}` where `seq` is the
+//!   per-connection request number, `root` the revealed d-scaled root
+//!   (byte-identical to a direct `private_eval_batch` at the same arrival
+//!   position), `batch` the width of the tick that served it, `stats` the
+//!   tick's [`NetStats`] delta and `total` this client's accumulated
+//!   stats ([`NetStats::delta_since`] per tick, summed with `Add`).
+//!   Malformed queries get `{"error":"..","seq":..}` and the connection
+//!   stays up; error replies are written by the reader immediately, so
+//!   on a pipelined connection they can overtake earlier queries'
+//!   responses — attribute replies by `seq`, not position, when
+//!   pipelining frames that might be rejected. A client that stops
+//!   *reading* is killed after a bounded write stall
+//!   ([`WRITE_STALL_TIMEOUT`]) instead of freezing the scheduler, and
+//!   disconnected clients are pruned from the registry as their readers
+//!   exit.
+//!
+//! ## Scheduler flush rules
+//!
+//! The scheduler owns the session on the calling thread (sessions are not
+//! shared across threads — readers only enqueue). A tick flushes when the
+//! queue reaches [`ServeConfig::max_batch`] **or** the oldest queued query
+//! has waited [`ServeConfig::max_wait`], whichever comes first; queries
+//! are drained strictly in arrival order (FIFO across all clients).
+//! Because the evaluator reserves a fresh tag block per tick and tags are
+//! striped per query (`spn::plan`), the revealed answers are invariant to
+//! how arrivals are sliced into ticks: overall query j always lands on
+//! tag block j·m. The serve integration tests pin both properties.
+//!
+//! ## Shutdown
+//!
+//! `{"cmd":"shutdown"}` (or [`ServeConfig::max_queries`]) marks the
+//! session draining: queued queries are still answered, then the accept
+//! loop is woken, every live connection is closed and every serve thread
+//! joined — [`serve`] returns only when nothing it spawned is left
+//! running. The MPC session itself outlives [`serve`]: the caller decides
+//! whether to reuse it or `TcpSession::shutdown` it.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use super::NetStats;
+use crate::json::Json;
+use crate::protocols::engine::DataId;
+use crate::protocols::session::MpcSession;
+use crate::spn::plan::{Evaluator, Query};
+
+/// Upper bound on one JSON message body (1 MiB — far above any real
+/// query). A corrupt length prefix then fails as a diagnosable frame
+/// error instead of a huge allocation.
+pub const MAX_JSON_MSG: usize = 1 << 20;
+
+/// Scheduler parameters of a serving session.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Flush a tick as soon as this many queries are queued (B).
+    pub max_batch: usize,
+    /// Flush a tick once the oldest queued query has waited this long (T).
+    pub max_wait: Duration,
+    /// Stop serving (graceful drain) after this many queries — `None`
+    /// serves until a client sends `{"cmd":"shutdown"}`.
+    pub max_queries: Option<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 16, max_wait: Duration::from_millis(5), max_queries: None }
+    }
+}
+
+/// What a serving session did, returned by [`serve`] after the drain.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeReport {
+    /// Queries answered.
+    pub queries: u64,
+    /// Scheduler ticks (= [`Evaluator::eval_batch`] calls).
+    pub batches: u64,
+    /// Client connections accepted over the session's lifetime.
+    pub clients: u64,
+    /// Σ of the per-tick [`NetStats`] deltas.
+    pub stats: NetStats,
+    /// Widest tick served (the realized micro-batch size).
+    pub max_tick: usize,
+}
+
+// --- wire helpers ---------------------------------------------------------
+
+/// Write one `len | body` frame and flush it.
+pub fn write_json_msg<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    if b.len() > MAX_JSON_MSG {
+        bail!("refusing to write a {}-byte message (max {MAX_JSON_MSG})", b.len());
+    }
+    w.write_all(&(b.len() as u32).to_le_bytes())?;
+    w.write_all(b)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one `len | body` frame into a string.
+pub fn read_json_msg<R: Read>(r: &mut R) -> Result<String> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let n = u32::from_le_bytes(hdr) as usize;
+    if n > MAX_JSON_MSG {
+        bail!("message header claims {n} bytes (max {MAX_JSON_MSG}): corrupt or desynced stream");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Build a [`Query`] from one `{"x":[...],"marg":[...]}` object — the
+/// shared semantics of the `infer --batch` JSONL lines and the serve wire
+/// protocol: `x` entries must be 0/1 numbers, `marg` entries booleans,
+/// both exactly `num_vars` long.
+pub fn query_from_json(j: &Json, num_vars: usize) -> Result<Query> {
+    let (Some(xj), Some(mj)) = (j.opt("x"), j.opt("marg")) else {
+        bail!("each query needs \"x\" and \"marg\" arrays");
+    };
+    let (Json::Arr(xs), Json::Arr(ms)) = (xj, mj) else {
+        bail!("\"x\" and \"marg\" must be arrays");
+    };
+    let mut x = Vec::with_capacity(xs.len());
+    for v in xs {
+        match v {
+            Json::Num(n) if *n == 0.0 || *n == 1.0 => x.push(*n as u8),
+            _ => bail!("\"x\" entries must be 0 or 1"),
+        }
+    }
+    let mut marg = Vec::with_capacity(ms.len());
+    for v in ms {
+        match v {
+            Json::Bool(b) => marg.push(*b),
+            _ => bail!("\"marg\" entries must be booleans"),
+        }
+    }
+    if x.len() != num_vars || marg.len() != num_vars {
+        bail!("x/marg must each have {num_vars} entries");
+    }
+    Ok(Query { x, marg })
+}
+
+/// Serialize a [`Query`] as the wire's `{"x":[...],"marg":[...]}` object.
+pub fn render_query_json(q: &Query) -> String {
+    let xs: Vec<String> = q.x.iter().map(|b| b.to_string()).collect();
+    let ms: Vec<String> = q.marg.iter().map(|b| b.to_string()).collect();
+    format!("{{\"x\":[{}],\"marg\":[{}]}}", xs.join(","), ms.join(","))
+}
+
+/// Serialize a [`NetStats`] as a JSON object (rust's `Display` for finite
+/// `f64` never emits exponent notation, so the value is valid JSON).
+pub fn stats_json(s: &NetStats) -> String {
+    format!(
+        "{{\"messages\":{},\"bytes\":{},\"rounds\":{},\"exercises\":{},\"virtual_time_s\":{}}}",
+        s.messages, s.bytes, s.rounds, s.exercises, s.virtual_time_s
+    )
+}
+
+/// Fallible numeric field access — unlike [`Json::as_f64`], a wrong type
+/// from an untrusted peer becomes an `Err`, not a panic.
+fn num_field(j: &Json, k: &str) -> Result<f64> {
+    match j.opt(k) {
+        Some(Json::Num(n)) => Ok(*n),
+        Some(other) => bail!("field \"{k}\" is not a number (got {other:?})"),
+        None => bail!("message lacks \"{k}\""),
+    }
+}
+
+/// Parse a [`stats_json`] object back into a [`NetStats`].
+pub fn stats_from_json(j: &Json) -> Result<NetStats> {
+    Ok(NetStats {
+        messages: num_field(j, "messages")? as u64,
+        bytes: num_field(j, "bytes")? as u64,
+        rounds: num_field(j, "rounds")? as u64,
+        exercises: num_field(j, "exercises")? as u64,
+        virtual_time_s: num_field(j, "virtual_time_s")?,
+    })
+}
+
+fn render_response(
+    seq: u64,
+    root: i128,
+    d: u128,
+    batch: usize,
+    stats: &NetStats,
+    total: &NetStats,
+) -> String {
+    let p = root.max(0) as f64 / d as f64;
+    format!(
+        "{{\"seq\":{seq},\"root\":{root},\"p\":{p},\"d\":{d},\"batch\":{batch},\"stats\":{},\"total\":{}}}",
+        stats_json(stats),
+        stats_json(total)
+    )
+}
+
+// --- server side ----------------------------------------------------------
+
+/// Writes to a client that has stopped reading fail after this long
+/// (`SO_SNDTIMEO`); the connection is then marked dead and closed, so one
+/// stalled client can delay the scheduler at most once — never freeze it.
+pub const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One live client connection, shared between its reader thread (hello,
+/// error replies) and the scheduler (query responses, stats totals).
+struct ConnShared {
+    id: u64,
+    /// The accepted stream itself — kept for the forced close at shutdown.
+    stream: TcpStream,
+    w: Mutex<BufWriter<TcpStream>>,
+    /// This client's accumulated cost: the delta of every tick one of its
+    /// queries rode in, summed with `NetStats::Add`.
+    total: Mutex<NetStats>,
+    next_seq: AtomicU64,
+    /// Set on the first failed write (client gone, or stalled past
+    /// [`WRITE_STALL_TIMEOUT`]): all further writes are skipped and the
+    /// socket is closed.
+    dead: std::sync::atomic::AtomicBool,
+}
+
+struct Pending {
+    conn: Arc<ConnShared>,
+    seq: u64,
+    query: Query,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct QueueState {
+    queue: VecDeque<Pending>,
+    shutdown: bool,
+    conns: Vec<Arc<ConnShared>>,
+    reader_handles: Vec<JoinHandle<()>>,
+    clients_seen: u64,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cvar: Condvar,
+}
+
+/// Write one frame to a client. On failure — client gone, or stalled past
+/// [`WRITE_STALL_TIMEOUT`] — the connection is marked dead and closed so
+/// it can never delay the scheduler again. Returns false when dead.
+fn reply(conn: &ConnShared, msg: &str) -> bool {
+    use std::sync::atomic::Ordering::Relaxed;
+    if conn.dead.load(Relaxed) {
+        return false;
+    }
+    let ok = {
+        let mut w = conn.w.lock().unwrap();
+        write_json_msg(&mut *w, msg).is_ok()
+    };
+    if !ok {
+        conn.dead.store(true, Relaxed);
+        let _ = conn.stream.shutdown(Shutdown::Both);
+    }
+    ok
+}
+
+/// `{"error":..}` reply; carries the request's `seq` when one was
+/// assigned, so pipelining clients can attribute it (error replies are
+/// written immediately by the reader and may overtake in-flight query
+/// responses on the wire).
+fn reply_error(conn: &ConnShared, seq: Option<u64>, msg: &str) -> bool {
+    let m = match seq {
+        Some(s) => format!("{{\"error\":\"{}\",\"seq\":{s}}}", json_escape(msg)),
+        None => format!("{{\"error\":\"{}\"}}", json_escape(msg)),
+    };
+    reply(conn, &m)
+}
+
+/// Per-connection reader: send the hello, then parse frames into queue
+/// entries until disconnect or shutdown. Never touches the MPC session.
+/// Every non-`cmd` frame consumes one `seq`, valid or not, so replies are
+/// attributable even when interleaved.
+fn reader_session(conn: &Arc<ConnShared>, shared: &Shared, hello: &str, num_vars: usize) {
+    if !reply(conn, hello) {
+        return;
+    }
+    let Ok(rstream) = conn.stream.try_clone() else { return };
+    let mut r = BufReader::with_capacity(8192, rstream);
+    loop {
+        let Ok(txt) = read_json_msg(&mut r) else { return }; // disconnect
+        let j = match Json::parse(&txt) {
+            Ok(j) => j,
+            Err(e) => {
+                let seq = conn.next_seq.fetch_add(1, Ordering::SeqCst);
+                if !reply_error(conn, Some(seq), &format!("request is not JSON: {e}")) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if let Some(cmd) = j.opt("cmd") {
+            if matches!(cmd, Json::Str(c) if c.as_str() == "shutdown") {
+                reply(conn, "{\"ok\":true}");
+                let mut st = shared.state.lock().unwrap();
+                st.shutdown = true;
+                shared.cvar.notify_all();
+                return;
+            }
+            if !reply_error(conn, None, &format!("unknown cmd {cmd:?}")) {
+                return;
+            }
+            continue;
+        }
+        let seq = conn.next_seq.fetch_add(1, Ordering::SeqCst);
+        match query_from_json(&j, num_vars) {
+            Ok(query) => {
+                let mut st = shared.state.lock().unwrap();
+                if st.shutdown {
+                    drop(st);
+                    if !reply_error(conn, Some(seq), "server is shutting down") {
+                        return;
+                    }
+                    continue;
+                }
+                st.queue.push_back(Pending {
+                    conn: conn.clone(),
+                    seq,
+                    query,
+                    enqueued: Instant::now(),
+                });
+                shared.cvar.notify_all();
+            }
+            Err(e) => {
+                if !reply_error(conn, Some(seq), &e.to_string()) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn reader_loop(conn: Arc<ConnShared>, shared: Arc<Shared>, hello: Arc<String>, num_vars: usize) {
+    reader_session(&conn, &shared, &hello, num_vars);
+    // Prune this connection from the registry so a long-lived server does
+    // not accumulate dead sockets across connection churn. Any Pending
+    // still queued holds its own Arc, so the scheduler can finish (or
+    // skip, if dead) its responses; the sockets close with the last Arc.
+    let mut st = shared.state.lock().unwrap();
+    st.conns.retain(|c| c.id != conn.id);
+    // Reap join handles of readers that already exited (dropping a
+    // finished handle detaches a thread that is already gone). This
+    // thread's own handle stays until a later exit or teardown joins it,
+    // so the vec stays O(live connections), not O(clients ever seen).
+    st.reader_handles.retain(|h| !h.is_finished());
+}
+
+/// Accept loop: register each connection and spawn its reader. Exits when
+/// the shutdown flag is up (a dummy self-connection wakes the `accept`).
+fn listener_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    hello: Arc<String>,
+    num_vars: usize,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.state.lock().unwrap().shutdown {
+                    return;
+                }
+                // transient accept failure (e.g. fd exhaustion): back off
+                // instead of spinning a core on the hot Err path
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let mut st = shared.state.lock().unwrap();
+        if st.shutdown {
+            return; // the wake-up dummy connection (or a too-late client)
+        }
+        let _ = stream.set_nodelay(true);
+        // SO_SNDTIMEO (shared by the clones below): a client that stops
+        // reading makes writes fail after the timeout instead of blocking
+        // the scheduler forever; reply() then kills the connection.
+        let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
+        let Ok(wstream) = stream.try_clone() else { continue };
+        st.clients_seen += 1;
+        let conn = Arc::new(ConnShared {
+            id: st.clients_seen,
+            stream,
+            w: Mutex::new(BufWriter::with_capacity(8192, wstream)),
+            total: Mutex::new(NetStats::default()),
+            next_seq: AtomicU64::new(0),
+            dead: std::sync::atomic::AtomicBool::new(false),
+        });
+        st.conns.push(conn.clone());
+        let rs = shared.clone();
+        let h = hello.clone();
+        st.reader_handles.push(std::thread::spawn(move || reader_loop(conn, rs, h, num_vars)));
+    }
+}
+
+/// Collect the next tick: block until at least one query is queued, then
+/// coalesce arrivals until the queue reaches `max_batch` or the oldest
+/// entry has waited `max_wait`. Returns `None` once the queue is empty
+/// *and* the session is shutting down.
+fn next_tick(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Pending>> {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if !st.queue.is_empty() {
+            break;
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = shared.cvar.wait(st).unwrap();
+    }
+    let deadline = st.queue.front().unwrap().enqueued + cfg.max_wait;
+    while st.queue.len() < cfg.max_batch && !st.shutdown {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (g, to) = shared.cvar.wait_timeout(st, deadline - now).unwrap();
+        st = g;
+        if to.timed_out() {
+            break;
+        }
+    }
+    let take = st.queue.len().min(cfg.max_batch);
+    Some(st.queue.drain(..take).collect())
+}
+
+/// Run a serving session: accept clients on `listener`, micro-batch their
+/// queries through `ev` over `sess`, answer each with its revealed root
+/// and cost accounting, and tear everything down cleanly on shutdown.
+///
+/// The scheduler runs on the calling thread (it owns the session); the
+/// accept loop and one reader per client run on spawned threads that are
+/// all joined before this returns. Answers are byte-identical to a direct
+/// `private_eval_batch` over the same queries in arrival order — the
+/// tag-stripe invariant of `spn::plan`, pinned by `rust/tests/serve.rs`.
+pub fn serve<S: MpcSession>(
+    sess: &mut S,
+    ev: &mut Evaluator,
+    sum_w: &[DataId],
+    learned_theta: Option<&[DataId]>,
+    listener: TcpListener,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    if cfg.max_batch == 0 {
+        bail!("serve needs max_batch ≥ 1");
+    }
+    let addr = listener.local_addr()?;
+    let (hello, num_vars, d) = {
+        let p = ev.plan();
+        (
+            Arc::new(format!(
+                "{{\"proto\":1,\"name\":\"{}\",\"num_vars\":{},\"d\":{},\"max_batch\":{}}}",
+                json_escape(&p.name),
+                p.num_vars,
+                p.d,
+                cfg.max_batch
+            )),
+            p.num_vars,
+            p.d,
+        )
+    };
+    let shared = Arc::new(Shared { state: Mutex::new(QueueState::default()), cvar: Condvar::new() });
+    let ls = shared.clone();
+    let lh = std::thread::spawn(move || listener_loop(listener, ls, hello, num_vars));
+
+    let mut report = ServeReport::default();
+    while let Some(tick) = next_tick(&shared, cfg) {
+        let queries: Vec<Query> = tick.iter().map(|p| p.query.clone()).collect();
+        let (roots, delta) = ev.eval_batch(sess, &queries, sum_w, learned_theta);
+        report.batches += 1;
+        report.queries += tick.len() as u64;
+        report.stats = report.stats + delta;
+        report.max_tick = report.max_tick.max(tick.len());
+        // bill the tick delta once per distinct client that rode in it
+        let mut seen: Vec<u64> = Vec::new();
+        for p in &tick {
+            if !seen.contains(&p.conn.id) {
+                seen.push(p.conn.id);
+                let mut t = p.conn.total.lock().unwrap();
+                *t = *t + delta;
+            }
+        }
+        for (p, &root) in tick.iter().zip(&roots) {
+            let total = *p.conn.total.lock().unwrap();
+            let msg = render_response(p.seq, root, d, tick.len(), &delta, &total);
+            reply(&p.conn, &msg); // gone/stalled clients are skipped/killed
+        }
+        if let Some(maxq) = cfg.max_queries {
+            if report.queries >= maxq {
+                let mut st = shared.state.lock().unwrap();
+                st.shutdown = true;
+                shared.cvar.notify_all();
+            }
+        }
+    }
+    // Graceful teardown: wake the accept loop, close every connection,
+    // join every thread this session spawned — no leaks.
+    let _ = TcpStream::connect(addr);
+    lh.join().map_err(|_| anyhow!("serve listener thread panicked"))?;
+    let (conns, readers) = {
+        let mut st = shared.state.lock().unwrap();
+        report.clients = st.clients_seen;
+        (std::mem::take(&mut st.conns), std::mem::take(&mut st.reader_handles))
+    };
+    for c in &conns {
+        let _ = c.stream.shutdown(Shutdown::Both);
+    }
+    for h in readers {
+        h.join().map_err(|_| anyhow!("serve reader thread panicked"))?;
+    }
+    Ok(report)
+}
+
+// --- client side ----------------------------------------------------------
+
+/// The server's hello: everything a client needs to build queries.
+#[derive(Clone, Debug)]
+pub struct Hello {
+    pub proto: u64,
+    pub name: String,
+    pub num_vars: usize,
+    pub d: u128,
+    pub max_batch: usize,
+}
+
+/// One answered query as the client sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct Response {
+    /// Per-connection request number. *Query* responses for one
+    /// connection always arrive in request order (the scheduler is FIFO);
+    /// `{"error":..}` replies are written immediately by the reader and
+    /// may overtake in-flight query responses — when pipelining frames
+    /// that might be rejected, attribute replies by `seq` (error replies
+    /// carry it too), not by position.
+    pub seq: u64,
+    /// Revealed d-scaled root — exact, for byte-identity checks.
+    pub root: i128,
+    /// `max(root, 0) / d`, the probability estimate.
+    pub p: f64,
+    /// Width of the scheduler tick that served this query.
+    pub batch: usize,
+    /// The tick's traffic delta.
+    pub stats: NetStats,
+    /// This connection's accumulated traffic.
+    pub total: NetStats,
+}
+
+/// A client connection to a [`serve`] session: blocking, with split
+/// [`ServeClient::send`]/[`ServeClient::recv`] so load generators can
+/// pipeline many queries on one connection.
+pub struct ServeClient {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    pub hello: Hello,
+}
+
+impl ServeClient {
+    /// Connect and read the server hello.
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let s = TcpStream::connect(addr).map_err(|e| anyhow!("connecting to {addr}: {e}"))?;
+        s.set_nodelay(true)?;
+        let mut r = BufReader::with_capacity(8192, s.try_clone()?);
+        let w = BufWriter::with_capacity(8192, s);
+        let txt = read_json_msg(&mut r).map_err(|e| e.context("reading server hello"))?;
+        let j = Json::parse(&txt).map_err(|e| anyhow!("hello is not JSON: {e}"))?;
+        let hello = Hello {
+            proto: num_field(&j, "proto").unwrap_or(0.0) as u64,
+            name: match j.opt("name") {
+                Some(Json::Str(s)) => s.clone(),
+                _ => String::new(),
+            },
+            num_vars: num_field(&j, "num_vars").map_err(|e| e.context("bad hello"))? as usize,
+            d: num_field(&j, "d").map_err(|e| e.context("bad hello"))? as u128,
+            max_batch: num_field(&j, "max_batch").unwrap_or(1.0) as usize,
+        };
+        if hello.proto != 1 {
+            bail!("unsupported serve protocol version {}", hello.proto);
+        }
+        Ok(ServeClient { r, w, hello })
+    }
+
+    /// Send one query without waiting for its answer (pipelining).
+    pub fn send(&mut self, q: &Query) -> Result<()> {
+        write_json_msg(&mut self.w, &render_query_json(q))
+    }
+
+    /// Send a raw JSON text frame (protocol tooling / tests).
+    pub fn send_raw(&mut self, json_text: &str) -> Result<()> {
+        write_json_msg(&mut self.w, json_text)
+    }
+
+    /// Receive the next answer; an `{"error":..}` reply becomes an `Err`
+    /// (the connection stays usable — the server keeps reading).
+    pub fn recv(&mut self) -> Result<Response> {
+        let txt = read_json_msg(&mut self.r)?;
+        let j = Json::parse(&txt).map_err(|e| anyhow!("response is not JSON: {e}"))?;
+        if let Some(e) = j.opt("error") {
+            let msg = match e {
+                Json::Str(s) => s.as_str(),
+                _ => "(non-string error payload)",
+            };
+            match num_field(&j, "seq") {
+                Ok(s) => bail!("server error (seq {}): {msg}", s as u64),
+                Err(_) => bail!("server error: {msg}"),
+            }
+        }
+        Ok(Response {
+            seq: num_field(&j, "seq")? as u64,
+            root: num_field(&j, "root")? as i128,
+            p: num_field(&j, "p")?,
+            batch: num_field(&j, "batch")? as usize,
+            stats: stats_from_json(j.opt("stats").context("response lacks stats")?)?,
+            total: stats_from_json(j.opt("total").context("response lacks total")?)?,
+        })
+    }
+
+    /// One blocking round-trip.
+    pub fn query(&mut self, q: &Query) -> Result<Response> {
+        self.send(q)?;
+        self.recv()
+    }
+
+    /// Ask the server to drain and stop; consumes the connection.
+    pub fn shutdown_server(mut self) -> Result<()> {
+        write_json_msg(&mut self.w, "{\"cmd\":\"shutdown\"}")?;
+        let txt = read_json_msg(&mut self.r)?;
+        let j = Json::parse(&txt).map_err(|e| anyhow!("shutdown ack is not JSON: {e}"))?;
+        if j.opt("ok") == Some(&Json::Bool(true)) {
+            Ok(())
+        } else {
+            bail!("unexpected shutdown ack: {txt}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn json_msg_roundtrip_and_cap() {
+        let mut buf = Vec::new();
+        write_json_msg(&mut buf, "{\"x\":[1]}").unwrap();
+        write_json_msg(&mut buf, "{}").unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_json_msg(&mut cur).unwrap(), "{\"x\":[1]}");
+        assert_eq!(read_json_msg(&mut cur).unwrap(), "{}");
+        assert!(read_json_msg(&mut cur).is_err(), "EOF must error, not hang");
+        // a corrupt length prefix fails as a frame error, not an allocation
+        let mut bad = Cursor::new(vec![0xff, 0xff, 0xff, 0xff]);
+        assert!(read_json_msg(&mut bad).is_err());
+    }
+
+    #[test]
+    fn query_json_roundtrip() {
+        let q = Query { x: vec![1, 0, 1], marg: vec![false, true, false] };
+        let txt = render_query_json(&q);
+        let j = Json::parse(&txt).unwrap();
+        let back = query_from_json(&j, 3).unwrap();
+        assert_eq!(back.x, q.x);
+        assert_eq!(back.marg, q.marg);
+    }
+
+    #[test]
+    fn query_from_json_rejects_bad_shapes() {
+        let nv = 2;
+        for bad in [
+            "{\"x\":[0,1]}",                          // no marg
+            "{\"x\":[0,1],\"marg\":[true]}",          // wrong width
+            "{\"x\":[0,2],\"marg\":[true,true]}",     // non-binary x
+            "{\"x\":[0,1],\"marg\":[1,0]}",           // non-bool marg
+            "{\"x\":\"01\",\"marg\":[true,true]}",    // non-array x
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(query_from_json(&j, nv).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn stats_json_roundtrip() {
+        let s = NetStats {
+            messages: 123,
+            bytes: 45_678,
+            rounds: 9,
+            exercises: 4,
+            virtual_time_s: 0.0375,
+        };
+        let j = Json::parse(&stats_json(&s)).unwrap();
+        let back = stats_from_json(&j).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn response_render_parses_back() {
+        let stats = NetStats { messages: 7, bytes: 700, rounds: 3, exercises: 2, virtual_time_s: 0.01 };
+        let total = stats + stats;
+        let txt = render_response(5, 249, 256, 4, &stats, &total);
+        let j = Json::parse(&txt).unwrap();
+        assert_eq!(j.get("seq").as_usize(), 5);
+        assert_eq!(j.get("root").as_i64(), 249);
+        assert_eq!(j.get("batch").as_usize(), 4);
+        assert!((j.get("p").as_f64() - 249.0 / 256.0).abs() < 1e-12);
+        assert_eq!(stats_from_json(j.get("total")).unwrap().messages, 14);
+    }
+
+    #[test]
+    fn escapes_error_payloads() {
+        assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\u000a");
+    }
+}

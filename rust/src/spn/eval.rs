@@ -48,31 +48,35 @@ pub fn positivity(st: &Structure, x: &[u8]) -> Vec<Vec<f64>> {
 /// act(child) = act(parent) AND pos(child); root act = pos(root)).
 /// Returns (per-layer activations incl. layer 0 = leaves).
 pub fn activation(st: &Structure, pos: &[Vec<f64>]) -> Vec<Vec<f64>> {
-    let w0 = st.num_leaves();
     let nl = st.layers.len();
     let mut act: Vec<Vec<f64>> = st.layer_widths.iter().map(|&w| vec![0.0; w]).collect();
     act[nl] = pos[nl].clone();
     for li in (0..nl).rev() {
         let l = &st.layers[li];
         let prev_w = if li > 0 { st.layer_widths[li] } else { 0 };
-        // clone the parent activations to appease the borrow checker cheaply
-        let parent = act[li + 1].clone();
+        // Split the layer stack so the parent layer (read) and the two
+        // destination layers (written: act[li] for Prev-children, act[0]
+        // for leaves) borrow disjoint regions — no per-row clone.
+        let (lower, upper) = act.split_at_mut(li + 1);
+        let parent: &[f64] = &upper[0];
+        let (leaf_act, mid) = lower.split_first_mut().expect("layer 0 always exists");
         for (&r, &c) in l.rows.iter().zip(&l.cols) {
             let down = parent[r];
             if c < prev_w {
+                // prev_w > 0 implies li > 0, so act[li] = mid[li - 1]
+                let dst = &mut mid[li - 1][c];
                 let v = down * pos[li][c];
-                if v > act[li][c] {
-                    act[li][c] = v;
+                if v > *dst {
+                    *dst = v;
                 }
             } else {
                 let lf = c - prev_w;
                 let v = down * pos[0][lf];
-                if v > act[0][lf] {
-                    act[0][lf] = v;
+                if v > leaf_act[lf] {
+                    leaf_act[lf] = v;
                 }
             }
         }
-        let _ = w0;
     }
     act
 }

@@ -179,9 +179,22 @@ struct PlanCache {
 /// Executes a compiled [`EvalPlan`] over one session + one model, caching
 /// the per-leaf constants on first use (satisfying the one-time-cost
 /// contract: B queries pay for the constants once, not B times).
-pub struct Evaluator<'p> {
-    pub plan: &'p EvalPlan,
+///
+/// The evaluator *owns* its plan and carries no per-batch state, so one
+/// instance can serve any number of batches of **varying** width over a
+/// long-lived session — the standing-server usage of
+/// [`crate::net::serve`]. Each call reserves a fresh
+/// [`MpcSession::reserve_tags`] range (recorded in
+/// [`Evaluator::last_tags`]); ranges from successive calls are disjoint
+/// and monotone by the trait contract, which is what keeps tags from ever
+/// being reused across scheduler ticks.
+pub struct Evaluator {
+    plan: EvalPlan,
     cache: Option<PlanCache>,
+    /// `[start, end)` of the tag block the most recent batch reserved.
+    last_tags: Option<(u64, u64)>,
+    /// Batches evaluated so far (scheduler ticks, for a standing server).
+    ticks: u64,
 }
 
 fn resolve(s: Src, b: usize, prev: &[DataId], leaf_vals: &[DataId], bsz: usize) -> DataId {
@@ -191,16 +204,34 @@ fn resolve(s: Src, b: usize, prev: &[DataId], leaf_vals: &[DataId], bsz: usize) 
     }
 }
 
-impl<'p> Evaluator<'p> {
-    pub fn new(plan: &'p EvalPlan) -> Self {
-        Evaluator { plan, cache: None }
+impl Evaluator {
+    pub fn new(plan: EvalPlan) -> Self {
+        Evaluator { plan, cache: None, last_tags: None, ticks: 0 }
+    }
+
+    /// The compiled plan this evaluator executes.
+    pub fn plan(&self) -> &EvalPlan {
+        &self.plan
+    }
+
+    /// `[start, end)` of the divpub-tag block reserved by the most recent
+    /// [`Evaluator::eval_batch`] call (`None` before the first call). The
+    /// tag-freshness tests assert these ranges are pairwise disjoint and
+    /// strictly monotone across scheduler ticks.
+    pub fn last_tags(&self) -> Option<(u64, u64)> {
+        self.last_tags
+    }
+
+    /// Number of batches evaluated so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
     }
 
     fn ensure_cache<S: MpcSession>(
         &mut self,
         sess: &mut S,
         learned_theta: Option<&[DataId]>,
-    ) -> &PlanCache {
+    ) {
         if let Some(c) = &self.cache {
             // The cached θ/slope handles embed the model they were built
             // from; silently mixing them with a different model's sum
@@ -234,7 +265,6 @@ impl<'p> Evaluator<'p> {
             let learned_src = learned_theta.map(|t| t.to_vec());
             self.cache = Some(PlanCache { const_d, theta, slope, learned_src });
         }
-        self.cache.as_ref().unwrap()
     }
 
     /// Evaluate all `queries` simultaneously; returns the revealed d-scaled
@@ -253,17 +283,23 @@ impl<'p> Evaluator<'p> {
         if bsz == 0 {
             return (Vec::new(), sess.stats().delta_since(&before));
         }
-        let p = self.plan;
         for q in queries {
-            assert_eq!(q.x.len(), p.num_vars, "query width");
-            assert_eq!(q.marg.len(), p.num_vars, "marginal mask width");
+            assert_eq!(q.x.len(), self.plan.num_vars, "query width");
+            assert_eq!(q.marg.len(), self.plan.num_vars, "marginal mask width");
         }
-        let m = p.divpubs_per_query;
+        let m = self.plan.divpubs_per_query;
         // One tag block per query: query b's divpub at plan-order offset o
         // gets tag0 + b·m + o — exactly what b prior single-query calls
-        // would have reserved, hence the bit-identity.
+        // would have reserved, hence the bit-identity (and, for a standing
+        // server, partition-invariance: however the scheduler slices an
+        // arrival sequence into ticks, overall query j always lands on tag
+        // block j·m).
         let tag0 = sess.reserve_tags(m * bsz as u64);
-        let cache = self.ensure_cache(sess, learned_theta);
+        self.last_tags = Some((tag0, tag0 + m * bsz as u64));
+        self.ticks += 1;
+        self.ensure_cache(sess, learned_theta);
+        let p = &self.plan;
+        let cache = self.cache.as_ref().unwrap();
 
         // --- client input: every query's assignment, query-major ----------
         let xvals: Vec<u128> =

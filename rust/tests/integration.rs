@@ -10,7 +10,7 @@
 //! `SimSession` (PerOp and Batched) and `TcpSession` produces
 //! byte-identical weights, posteriors and centroids under the same seed.
 
-use spn_mpc::coordinator::infer::{private_eval, private_eval_batch, Query};
+use spn_mpc::coordinator::infer::{private_conditional, private_eval, private_eval_batch, Query};
 use spn_mpc::coordinator::train::{peek_weights, reveal_weights, train, TrainConfig};
 use spn_mpc::datasets;
 use spn_mpc::field::Field;
@@ -148,11 +148,8 @@ fn mini_structure() -> Structure {
 }
 
 fn mini_shard_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
-    let gt = datasets::ground_truth_params(st, 5);
-    let data = datasets::sample(st, &gt, st.rows, 21);
-    let shards = datasets::partition(&data, n);
-    let counts = shards.iter().map(|s| eval::counts(st, s)).collect();
-    (counts, st.rows as u64)
+    // seeds 5/21, shared with tests/serve.rs via the single library helper
+    (datasets::synth_shard_counts(st, n, st.rows, 5, 21), st.rows as u64)
 }
 
 #[test]
@@ -250,6 +247,51 @@ fn cross_backend_batched_inference_byte_identical() {
 
     // sanity: S(∅)·d ≈ d
     assert!((sim_roots[0] - 256).abs() <= 32, "S(∅)·d = {}", sim_roots[0]);
+}
+
+#[test]
+fn cross_backend_conditional_byte_identical() {
+    // Only batched marginals were cross-backend pinned until now; the
+    // conditional Pr(x | e) — two evaluations coalesced into one batch
+    // plus the client-side division — must also be byte-identical
+    // Sim ≡ TCP under the same seed, down to the f64 bit pattern.
+    let st = mini_structure();
+    let n = 3;
+    let (counts, rows) = mini_shard_counts(&st, n);
+    let theta = learn::default_leaf_theta(&st);
+    let cases: [(&[(usize, u8)], &[(usize, u8)]); 3] = [
+        (&[(0, 1)], &[(1, 1)]),
+        (&[(1, 0)], &[(0, 0)]),
+        (&[(0, 1)], &[]),
+    ];
+
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
+    let sim: Vec<(f64, u64)> = cases
+        .iter()
+        .map(|(x, e)| {
+            let (p, s) = private_conditional(&mut eng, &st, &model, x, e, &theta);
+            (p, s.messages)
+        })
+        .collect();
+
+    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let (model_tcp, _) = train(&mut sess, &st, &counts, rows, &TrainConfig::default());
+    let tcp: Vec<f64> = cases
+        .iter()
+        .map(|(x, e)| private_conditional(&mut sess, &st, &model_tcp, x, e, &theta).0)
+        .collect();
+    sess.shutdown().unwrap();
+
+    for (i, ((ps, msgs), pt)) in sim.iter().zip(&tcp).enumerate() {
+        assert_eq!(
+            ps.to_bits(),
+            pt.to_bits(),
+            "case {i}: conditional must be byte-identical across backends ({ps} vs {pt})"
+        );
+        assert!(*msgs > 0);
+        assert!((0.0..=1.0).contains(ps), "case {i}: Pr = {ps} out of range");
+    }
 }
 
 #[test]

@@ -1,0 +1,286 @@
+//! End-to-end tests of the persistent private-inference server: the
+//! acceptance pins of the serving layer (DESIGN.md §Serving layer).
+//!
+//! * **Byte-identity** — answers served through the front-end + scheduler
+//!   equal a direct `private_eval_batch` over the same queries in arrival
+//!   order, on both backends (Sim and TCP members).
+//! * **Partition invariance** — however the scheduler slices arrivals
+//!   into ticks (a race by design), the revealed roots are unchanged:
+//!   the tag-stripe invariant of `spn::plan`.
+//! * **Tag freshness** — N scheduler ticks of mixed widths reserve
+//!   strictly monotone, pairwise disjoint tag ranges (the PR 3 "tags are
+//!   never reused" contract under the scheduler).
+//! * **Concurrency + clean shutdown** — ≥8 concurrent clients over real
+//!   TCP members; every thread joined, member threads joined, report
+//!   totals exact.
+//!
+//! Everything runs on `Structure::mini_demo()` — no artifacts needed, so
+//! these tests run in CI on a fresh checkout.
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::Duration;
+
+use spn_mpc::coordinator::infer::private_eval_batch;
+use spn_mpc::coordinator::serve::train_and_serve;
+use spn_mpc::coordinator::train::{train, TrainConfig};
+use spn_mpc::datasets;
+use spn_mpc::field::Field;
+use spn_mpc::net::serve::{ServeClient, ServeConfig, ServeReport};
+use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::spn::plan::{EvalPlan, Evaluator, Query};
+use spn_mpc::spn::structure::Structure;
+use spn_mpc::spn::learn;
+
+const MEMBERS: usize = 3;
+
+fn mini_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
+    // seeds 5/21: the same shards as integration.rs's cross-backend tests
+    (datasets::synth_shard_counts(st, n, st.rows, 5, 21), st.rows as u64)
+}
+
+/// A deterministic mixed stream: mostly single-evidence marginals, every
+/// fifth query fully marginalized.
+fn arrival_queries(st: &Structure, total: usize) -> Vec<Query> {
+    (0..total)
+        .map(|i| {
+            let mut q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+            if i % 5 != 0 {
+                let v = i % st.num_vars;
+                q.x[v] = ((i / 2) % 2) as u8;
+                q.marg[v] = false;
+            }
+            q
+        })
+        .collect()
+}
+
+/// The oracle: a fresh identically-seeded Sim session, identical training,
+/// one direct `private_eval_batch` over the queries in arrival order.
+fn sim_oracle(st: &Structure, n: usize, queries: &[Query]) -> Vec<i128> {
+    let (counts, rows) = mini_counts(st, n);
+    let theta = learn::default_leaf_theta(st);
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model, _) = train(&mut eng, st, &counts, rows, &TrainConfig::default());
+    let (roots, _) = private_eval_batch(&mut eng, st, &model, queries, &theta);
+    roots
+}
+
+/// Bind an ephemeral listener, then train + serve on a background thread
+/// over the requested backend. Returns the address and the join handle
+/// yielding the final [`ServeReport`].
+fn spawn_server(
+    backend: &'static str,
+    st: Structure,
+    n: usize,
+    cfg: ServeConfig,
+) -> (std::net::SocketAddr, thread::JoinHandle<ServeReport>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = thread::spawn(move || {
+        let (counts, rows) = mini_counts(&st, n);
+        let theta = learn::default_leaf_theta(&st);
+        let tcfg = TrainConfig::default();
+        match backend {
+            "tcp" => {
+                let mut sess =
+                    TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+                let (report, _) =
+                    train_and_serve(&mut sess, &st, &counts, rows, &tcfg, &theta, listener, &cfg)
+                        .unwrap();
+                // member threads join here: a leak would hang the test
+                sess.shutdown().unwrap();
+                report
+            }
+            _ => {
+                let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+                let (report, _) =
+                    train_and_serve(&mut eng, &st, &counts, rows, &tcfg, &theta, listener, &cfg)
+                        .unwrap();
+                report
+            }
+        }
+    });
+    (addr, h)
+}
+
+#[test]
+fn served_answers_match_direct_batch_arrival_order() {
+    let st = Structure::mini_demo();
+    let queries = arrival_queries(&st, 9);
+    let want = sim_oracle(&st, MEMBERS, &queries);
+    for backend in ["sim", "tcp"] {
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            max_queries: None,
+        };
+        let (addr, h) = spawn_server(backend, st.clone(), MEMBERS, cfg);
+        let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+        assert_eq!(c.hello.num_vars, st.num_vars);
+        assert_eq!(c.hello.d, 256);
+        let mut got = Vec::new();
+        let mut prev_total = 0u64;
+        for q in &queries {
+            let r = c.query(q).unwrap();
+            assert!(r.stats.rounds > 0, "each response carries its tick's delta");
+            assert!(r.total.messages >= prev_total, "per-client totals accumulate");
+            prev_total = r.total.messages;
+            got.push(r.root);
+        }
+        // a second connection issues the shutdown command
+        ServeClient::connect(&addr.to_string()).unwrap().shutdown_server().unwrap();
+        let report = h.join().unwrap();
+        assert_eq!(
+            got, want,
+            "{backend}: served roots must equal a direct private_eval_batch in arrival order"
+        );
+        assert_eq!(report.queries, queries.len() as u64);
+        assert!(report.batches >= 1 && report.batches <= queries.len() as u64);
+    }
+}
+
+#[test]
+fn served_answers_are_tick_partition_invariant() {
+    // One client pipelines every query before reading any response, so the
+    // scheduler slices the arrival sequence into ticks of up to max_batch
+    // at whatever rhythm the race dictates — the roots must still equal
+    // the single direct batch (overall query j always gets tag block j·m).
+    let st = Structure::mini_demo();
+    let total = 13usize;
+    let queries = arrival_queries(&st, total);
+    let want = sim_oracle(&st, MEMBERS, &queries);
+    let cfg = ServeConfig {
+        max_batch: 5,
+        max_wait: Duration::from_millis(1),
+        max_queries: Some(total as u64),
+    };
+    let (addr, h) = spawn_server("sim", st.clone(), MEMBERS, cfg);
+    let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+    for q in &queries {
+        c.send(q).unwrap();
+    }
+    let mut got = Vec::new();
+    let mut seqs = Vec::new();
+    for _ in 0..total {
+        let r = c.recv().unwrap();
+        assert!(r.batch >= 1 && r.batch <= 5);
+        got.push(r.root);
+        seqs.push(r.seq);
+    }
+    let report = h.join().unwrap(); // max_queries reached → self-shutdown
+    assert_eq!(got, want, "tick partition must not change any revealed root");
+    assert_eq!(
+        seqs,
+        (0..total as u64).collect::<Vec<_>>(),
+        "per-connection responses arrive in request order"
+    );
+    assert!(report.max_tick <= 5);
+    assert_eq!(report.queries, total as u64);
+}
+
+#[test]
+fn concurrent_clients_match_oracle_and_shut_down_cleanly() {
+    // The CI smoke, in-process: 8 clients × 3 identical queries over real
+    // TCP members. Arrival order is racy, but identical queries make the
+    // position multiset fixed — sorted served roots must equal the sorted
+    // roots of one direct 24-query Sim batch (TCP ≡ Sim under one seed).
+    let st = Structure::mini_demo();
+    let clients = 8usize;
+    let per = 3usize;
+    let total = clients * per;
+    let q = Query { x: vec![1, 0], marg: vec![false, true] };
+    let queries: Vec<Query> = (0..total).map(|_| q.clone()).collect();
+    let mut want = sim_oracle(&st, MEMBERS, &queries);
+    want.sort_unstable();
+    let cfg = ServeConfig {
+        max_batch: 6,
+        // generous wait so ticks coalesce reliably even on a loaded runner
+        max_wait: Duration::from_millis(20),
+        max_queries: Some(total as u64),
+    };
+    let (addr, h) = spawn_server("tcp", st.clone(), MEMBERS, cfg);
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        let a = addr.to_string();
+        let q = q.clone();
+        handles.push(thread::spawn(move || {
+            let mut c = ServeClient::connect(&a).unwrap();
+            (0..per).map(|_| c.query(&q).unwrap().root).collect::<Vec<i128>>()
+        }));
+    }
+    let mut got: Vec<i128> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    got.sort_unstable();
+    let report = h.join().unwrap(); // joins = clean shutdown, nothing leaked
+    assert_eq!(got, want, "concurrent served roots must be the oracle multiset");
+    assert_eq!(report.queries, total as u64);
+    assert_eq!(report.clients, clients as u64);
+    assert!(report.max_tick >= 2, "concurrent load must actually coalesce ticks");
+}
+
+#[test]
+fn scheduler_ticks_reserve_disjoint_monotone_tag_ranges() {
+    // The PR 3 contract under the scheduler: every eval_batch tick
+    // reserves a fresh tag block; N ticks of mixed widths must produce
+    // strictly monotone, pairwise disjoint [start, end) ranges of width
+    // m·B — tags are never reused across ticks.
+    let st = Structure::mini_demo();
+    let (counts, rows) = mini_counts(&st, MEMBERS);
+    let theta = learn::default_leaf_theta(&st);
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched());
+    let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
+    let plan = EvalPlan::compile(&st, &theta, model.d);
+    let m = plan.divpubs_per_query;
+    assert!(m > 0);
+    let mut ev = Evaluator::new(plan);
+    assert!(ev.last_tags().is_none());
+
+    let widths = [1usize, 3, 2, 7, 1, 5, 4, 2, 6, 1]; // mixed traffic
+    let mut ranges: Vec<(u64, u64)> = Vec::new();
+    for (t, &w) in widths.iter().enumerate() {
+        let batch = arrival_queries(&st, w);
+        let (roots, _) = ev.eval_batch(&mut eng, &batch, &model.sum_w, model.leaf_theta.as_deref());
+        assert_eq!(roots.len(), w);
+        let (start, end) = ev.last_tags().unwrap();
+        assert_eq!(end - start, m * w as u64, "tick {t}: block width must be m·B");
+        if let Some(&(_, prev_end)) = ranges.last() {
+            assert!(
+                start >= prev_end,
+                "tick {t}: ranges must be monotone (start {start} < prev end {prev_end})"
+            );
+        }
+        ranges.push((start, end));
+        assert_eq!(ev.ticks(), (t + 1) as u64);
+    }
+    for i in 0..ranges.len() {
+        for j in i + 1..ranges.len() {
+            let (a, b) = ranges[i];
+            let (c, d) = ranges[j];
+            assert!(b <= c || d <= a, "tag ranges of ticks {i} and {j} overlap");
+        }
+    }
+}
+
+#[test]
+fn malformed_queries_get_error_replies_without_killing_the_connection() {
+    let st = Structure::mini_demo();
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        max_queries: None,
+    };
+    let (addr, h) = spawn_server("sim", st.clone(), MEMBERS, cfg);
+    let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+    for bad in ["{\"x\":[1],\"marg\":[true]}", "{\"cmd\":\"nope\"}", "not json"] {
+        c.send_raw(bad).unwrap();
+        let err = c.recv().unwrap_err().to_string();
+        assert!(err.contains("server error"), "{bad} must produce an error reply, got {err}");
+    }
+    // the connection survives and still answers real queries
+    let r = c.query(&Query { x: vec![0, 0], marg: vec![true, true] }).unwrap();
+    assert!((r.root - 256).abs() <= 32, "S(∅)·d = {}", r.root);
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown_server().unwrap();
+    let report = h.join().unwrap();
+    assert_eq!(report.queries, 1, "malformed frames must not reach the scheduler");
+}
