@@ -1,51 +1,89 @@
 //! Persistent-server throughput: load against the micro-batching
-//! scheduler of `net::serve` at rising client concurrency.
+//! scheduler of `net::serve` at rising client concurrency, then against
+//! the sharded fleet of `net::fleet` at rising shard counts.
 //!
-//! Spins up the full serve stack (Sim backend, mini structure, 3 members)
-//! and drives it with C ∈ {1, 8, 32} concurrent connections, each issuing
-//! a fixed number of closed-loop queries — so the system-wide offered
-//! concurrency is C and the scheduler can coalesce up to C queries per
-//! tick. Reports queries/s, secure **rounds per query** (from the
-//! server's summed tick deltas), and client-observed p50/p99 latency.
-//!
-//! The acceptance claim this bench charts: rounds/query **strictly
-//! decreases** as concurrency rises 1 → 32 — micro-batching amortizes
+//! Part 1 spins up the full single-session serve stack (Sim backend, mini
+//! structure, 3 members) and drives it with C ∈ {1, 8, 32} concurrent
+//! connections, each issuing a fixed number of closed-loop queries — so
+//! the system-wide offered concurrency is C and the scheduler can
+//! coalesce up to C queries per tick. Reports queries/s, secure **rounds
+//! per query** (from the server's summed tick deltas), and
+//! client-observed p50/p99 latency. The acceptance claim: rounds/query
+//! **strictly decreases** as concurrency rises — micro-batching amortizes
 //! MPC round-trips across concurrent users exactly like the offline
-//! `infer_batch` amortization curve, but on live traffic. `--json <path>`
-//! writes the `{bench, metric, value}` rows `make bench-json` commits as
-//! BENCH_serve_throughput.json. Never skips (no artifacts needed).
+//! `infer_batch` amortization curve, but on live traffic.
+//!
+//! Part 2 holds C fixed at 32 and serves through `--shards S` fleets,
+//! S ∈ {1, 2, 4}: S independent sessions replicated by deterministic
+//! replay, each evaluating its own ticks on its own thread. The
+//! acceptance claim: q/s **increases with S** (near-linear in sim, where
+//! each session's evaluation is CPU-bound on one thread). Every fleet
+//! JSON row carries the shard count (`shards_c{C}_s{S}`).
+//!
+//! `--json <path>` writes the `{bench, metric, value}` rows `make
+//! bench-json` commits as BENCH_serve_throughput.json; `--smoke` shrinks
+//! to C ∈ {1, 8}, 6 queries/connection, fleet C=8 with S ∈ {1, 2} — the
+//! CI serve-smoke job runs that path on every push. Never skips (no
+//! artifacts needed).
 
 use std::net::TcpListener;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use spn_mpc::bench::JsonSink;
-use spn_mpc::coordinator::serve::train_and_serve;
+use spn_mpc::coordinator::serve::{train_and_serve, train_and_serve_fleet};
 use spn_mpc::coordinator::train::TrainConfig;
 use spn_mpc::datasets;
 use spn_mpc::field::Field;
 use spn_mpc::metrics::render_table;
+use spn_mpc::net::fleet::FleetReport;
 use spn_mpc::net::serve::{ServeClient, ServeConfig, ServeReport};
 use spn_mpc::protocols::engine::{Engine, EngineConfig};
 use spn_mpc::spn::plan::Query;
 use spn_mpc::spn::structure::Structure;
 use spn_mpc::spn::learn;
 
-const CONCURRENCY: [usize; 3] = [1, 8, 32];
-const QUERIES_PER_CONN: usize = 24;
 const MEMBERS: usize = 3;
 
-/// One load run: serve on a background thread (auto-shutdown after the
-/// exact query count), C closed-loop client threads, per-query latencies.
-fn run_load(st: &Structure, conc: usize) -> (ServeReport, Vec<f64>, f64) {
+fn serve_cfg(total: u64) -> ServeConfig {
+    ServeConfig { max_batch: 32, max_wait: Duration::from_millis(3), max_queries: Some(total) }
+}
+
+/// C closed-loop client threads against a running server; returns sorted
+/// per-query latencies and the wall-clock of the whole load.
+fn drive_clients(addr: &str, conc: usize, per_conn: usize, nv: usize) -> (Vec<f64>, f64) {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..conc {
+        let a = addr.to_string();
+        handles.push(thread::spawn(move || {
+            let mut c = ServeClient::connect(&a).unwrap();
+            let mut lats = Vec::with_capacity(per_conn);
+            for i in 0..per_conn {
+                let mut q = Query { x: vec![0; nv], marg: vec![true; nv] };
+                let v = (t + i) % nv;
+                q.x[v] = (i % 2) as u8;
+                q.marg[v] = false;
+                let tq = Instant::now();
+                let r = c.query(&q).unwrap();
+                assert!(r.batch >= 1);
+                lats.push(tq.elapsed().as_secs_f64());
+            }
+            lats
+        }));
+    }
+    let mut lats: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(f64::total_cmp);
+    (lats, wall)
+}
+
+/// One single-session load run: serve on a background thread
+/// (auto-shutdown after the exact query count), then drive it.
+fn run_load(st: &Structure, conc: usize, per_conn: usize) -> (ServeReport, Vec<f64>, f64) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let total = (conc * QUERIES_PER_CONN) as u64;
-    let cfg = ServeConfig {
-        max_batch: 32,
-        max_wait: Duration::from_millis(3),
-        max_queries: Some(total),
-    };
+    let cfg = serve_cfg((conc * per_conn) as u64);
     let st2 = st.clone();
     let server = thread::spawn(move || {
         // seeds 5/21: the same training as the serve/integration tests
@@ -66,48 +104,66 @@ fn run_load(st: &Structure, conc: usize) -> (ServeReport, Vec<f64>, f64) {
         .unwrap();
         report
     });
+    let (lats, wall) = drive_clients(&addr, conc, per_conn, st.num_vars);
+    (server.join().unwrap(), lats, wall)
+}
 
-    let t0 = Instant::now();
-    let mut handles = Vec::new();
-    for t in 0..conc {
-        let a = addr.clone();
-        let nv = st.num_vars;
-        handles.push(thread::spawn(move || {
-            let mut c = ServeClient::connect(&a).unwrap();
-            let mut lats = Vec::with_capacity(QUERIES_PER_CONN);
-            for i in 0..QUERIES_PER_CONN {
-                let mut q = Query { x: vec![0; nv], marg: vec![true; nv] };
-                let v = (t + i) % nv;
-                q.x[v] = (i % 2) as u8;
-                q.marg[v] = false;
-                let tq = Instant::now();
-                let r = c.query(&q).unwrap();
-                assert!(r.batch >= 1);
-                lats.push(tq.elapsed().as_secs_f64());
-            }
-            lats
-        }));
-    }
-    let mut lats: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
-    let wall = t0.elapsed().as_secs_f64();
-    let report = server.join().unwrap();
-    lats.sort_by(f64::total_cmp);
-    (report, lats, wall)
+/// One fleet load run: S replicated Sim sessions behind the fleet
+/// front-end, same closed-loop client load.
+fn run_load_fleet(
+    st: &Structure,
+    conc: usize,
+    shards: usize,
+    per_conn: usize,
+) -> (FleetReport, Vec<f64>, f64) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = serve_cfg((conc * per_conn) as u64);
+    let st2 = st.clone();
+    let server = thread::spawn(move || {
+        let counts = datasets::synth_shard_counts(&st2, MEMBERS, st2.rows, 5, 21);
+        let rows = st2.rows as u64;
+        let theta = learn::default_leaf_theta(&st2);
+        let mut sessions: Vec<Engine> = (0..shards)
+            .map(|_| Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched()))
+            .collect();
+        let (report, _) = train_and_serve_fleet(
+            &mut sessions,
+            &st2,
+            &counts,
+            rows,
+            &TrainConfig::default(),
+            &theta,
+            listener,
+            &cfg,
+            Vec::new(),
+        )
+        .unwrap();
+        report
+    });
+    let (lats, wall) = drive_clients(&addr, conc, per_conn, st.num_vars);
+    (server.join().unwrap(), lats, wall)
 }
 
 fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
     let mut json = JsonSink::from_env_args();
     let st = Structure::mini_demo();
+    let concurrency: Vec<usize> = if smoke { vec![1, 8] } else { vec![1, 8, 32] };
+    let per_conn = if smoke { 6 } else { 24 };
+    let pct = |lats: &[f64], p: f64| lats[((lats.len() - 1) as f64 * p) as usize] * 1e3;
+
+    // Part 1 — single session, rising concurrency (legacy metric names).
     let mut rows = Vec::new();
     let mut rpq_curve = Vec::new();
-    for &c in &CONCURRENCY {
-        let (report, lats, wall) = run_load(&st, c);
-        assert_eq!(report.queries, (c * QUERIES_PER_CONN) as u64, "every query answered");
+    for &c in &concurrency {
+        let (report, lats, wall) = run_load(&st, c, per_conn);
+        assert_eq!(report.queries, (c * per_conn) as u64, "every query answered");
         let total = report.queries as f64;
         let qps = total / wall;
         let rpq = report.stats.rounds as f64 / total;
-        let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize] * 1e3;
-        let (p50, p99) = (pct(0.50), pct(0.99));
+        let (p50, p99) = (pct(&lats, 0.50), pct(&lats, 0.99));
         rpq_curve.push(rpq);
         json.push("serve_throughput", &format!("queries_per_s_c{c}"), qps);
         json.push("serve_throughput", &format!("rounds_per_query_c{c}"), rpq);
@@ -125,16 +181,69 @@ fn main() {
             format!("{p99:.2}"),
         ]);
     }
-    assert!(
-        rpq_curve[0] > rpq_curve[1] && rpq_curve[1] > rpq_curve[2],
-        "rounds/query must strictly decrease as concurrency rises: {rpq_curve:?}"
-    );
+    for w in rpq_curve.windows(2) {
+        assert!(
+            w[0] > w[1],
+            "rounds/query must strictly decrease as concurrency rises: {rpq_curve:?}"
+        );
+    }
     println!(
         "{}",
         render_table(
             "Persistent server — micro-batched private inference (mini, sim backend, 3 members)",
             &["conc", "queries", "ticks", "max tick", "q/s", "rounds/q", "p50 ms", "p99 ms"],
             &rows
+        )
+    );
+
+    // Part 2 — fleet scaling: fixed C, rising shard count. Every JSON row
+    // carries the shard count in its name plus an explicit shards row.
+    let fleet_c = if smoke { 8 } else { 32 };
+    let shard_counts: Vec<usize> = if smoke { vec![1, 2] } else { vec![1, 2, 4] };
+    let mut frows = Vec::new();
+    let mut qps_curve = Vec::new();
+    for &s in &shard_counts {
+        let (report, lats, wall) = run_load_fleet(&st, fleet_c, s, per_conn);
+        assert_eq!(report.queries, (fleet_c * per_conn) as u64, "every query answered");
+        assert_eq!(report.shards, s);
+        assert_eq!(report.dead_shards, 0, "no shard may die under clean load");
+        let total = report.queries as f64;
+        let qps = total / wall;
+        let rpq = report.stats.rounds as f64 / total;
+        let (p50, p99) = (pct(&lats, 0.50), pct(&lats, 0.99));
+        qps_curve.push(qps);
+        json.push("serve_throughput", &format!("shards_c{fleet_c}_s{s}"), s as f64);
+        json.push("serve_throughput", &format!("queries_per_s_c{fleet_c}_s{s}"), qps);
+        json.push("serve_throughput", &format!("rounds_per_query_c{fleet_c}_s{s}"), rpq);
+        json.push("serve_throughput", &format!("p50_ms_c{fleet_c}_s{s}"), p50);
+        json.push("serve_throughput", &format!("p99_ms_c{fleet_c}_s{s}"), p99);
+        json.push("serve_throughput", &format!("max_tick_c{fleet_c}_s{s}"), report.max_tick as f64);
+        frows.push(vec![
+            s.to_string(),
+            fleet_c.to_string(),
+            report.queries.to_string(),
+            report.batches.to_string(),
+            report.max_tick.to_string(),
+            format!("{qps:.0}"),
+            format!("{rpq:.1}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+        ]);
+    }
+    if !smoke {
+        // the fleet acceptance curve (near-linear is the target; the hard
+        // floor here is "more shards must not serve slower")
+        assert!(
+            qps_curve.last().unwrap() > qps_curve.first().unwrap(),
+            "q/s must increase with shard count at C={fleet_c}: {qps_curve:?}"
+        );
+    }
+    println!(
+        "{}",
+        render_table(
+            "Serve fleet — sharded sessions, fixed concurrency (mini, sim backend, 3 members)",
+            &["shards", "conc", "queries", "ticks", "max tick", "q/s", "rounds/q", "p50 ms", "p99 ms"],
+            &frows
         )
     );
     json.finish().expect("write --json output");

@@ -9,15 +9,25 @@
 //! once ([`EvalPlan::compile`]) and one persistent [`Evaluator`] answers
 //! every scheduler tick; per-client [`crate::net::NetStats`] deltas ride
 //! back in each response.
+//!
+//! `--shards S` scales this out through [`train_and_serve_fleet`]: S
+//! sessions are **replicated by deterministic replay** — every session is
+//! created with the same seed and trained on the same counts, so each
+//! member's share store is byte-identical across shards *without any
+//! share ever moving between sessions* (exporting shares through the
+//! manager would let it reconstruct the secrets). Each shard's evaluator
+//! is then confined to its [`TagStripe`] and the fleet front-end
+//! ([`crate::net::fleet::serve_fleet`]) routes queries across them.
 
 use std::net::TcpListener;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::train::{train, SharedModel, TrainConfig, TrainReport};
+use crate::net::fleet::{serve_fleet, FleetReport, FleetShard, ShardSever};
 use crate::net::serve::{serve, ServeConfig, ServeReport};
 use crate::protocols::session::MpcSession;
-use crate::spn::plan::{EvalPlan, Evaluator};
+use crate::spn::plan::{EvalPlan, Evaluator, TagStripe};
 use crate::spn::structure::Structure;
 
 /// Serve an already-trained model: compile its plan, build the persistent
@@ -52,4 +62,62 @@ pub fn train_and_serve<S: MpcSession>(
     let (model, treport) = train(sess, st, shard_counts, rows_total, tcfg);
     let report = serve_model(sess, st, &model, default_leaf_theta, listener, cfg)?;
     Ok((report, treport))
+}
+
+/// Train every session identically (deterministic replay replication),
+/// stripe the tag space, and serve the fleet until shutdown.
+///
+/// `severs[s]`, when present, is installed as shard s's `kill-shard`
+/// transport switch (TCP fleets pass `TcpSession::sever_handle` closures;
+/// Sim fleets pass an empty vec). The sessions stay alive afterwards: the
+/// caller shuts each down, using `TcpSession::shutdown_lossy` for shards
+/// the returned [`FleetReport`] marks dead.
+#[allow(clippy::too_many_arguments)]
+pub fn train_and_serve_fleet<S: MpcSession + Send>(
+    sessions: &mut [S],
+    st: &Structure,
+    shard_counts: &[Vec<u64>],
+    rows_total: u64,
+    tcfg: &TrainConfig,
+    default_leaf_theta: &[f64],
+    listener: TcpListener,
+    cfg: &ServeConfig,
+    severs: Vec<Option<ShardSever>>,
+) -> Result<(FleetReport, TrainReport)> {
+    let nshards = sessions.len();
+    if nshards == 0 {
+        bail!("a fleet needs at least one session");
+    }
+    let mut severs = severs;
+    if severs.is_empty() {
+        severs.resize_with(nshards, || None);
+    }
+    if severs.len() != nshards {
+        bail!("got {} sever handles for {nshards} shards", severs.len());
+    }
+    // identical replay on every session ⇒ byte-identical share stores
+    let mut models: Vec<SharedModel> = Vec::with_capacity(nshards);
+    let mut treport = None;
+    for sess in sessions.iter_mut() {
+        let (model, r) = train(sess, st, shard_counts, rows_total, tcfg);
+        treport.get_or_insert(r);
+        models.push(model);
+    }
+    let plan = EvalPlan::compile(st, default_leaf_theta, models[0].d);
+    let proto = Evaluator::new(plan);
+    let mut shards: Vec<FleetShard<'_, S>> = Vec::with_capacity(nshards);
+    for (s, ((sess, model), sever)) in
+        sessions.iter_mut().zip(&models).zip(severs).enumerate()
+    {
+        let ev = proto.clone_into_session(sess, TagStripe::new(s, nshards));
+        shards.push(FleetShard {
+            sess,
+            ev,
+            sum_w: model.sum_w.clone(),
+            learned_theta: model.leaf_theta.clone(),
+            sever,
+        });
+    }
+    let report = serve_fleet(shards, listener, cfg)?;
+    Ok((report, treport.expect("nshards ≥ 1")))
 }

@@ -9,11 +9,12 @@
 //!           — private inference (one query, or a whole batch through the
 //!           compiled evaluation plan)
 //!   serve   [--dataset <name>] [--members N] [--backend sim|tcp] [--port P]
-//!           [--max-batch B] [--max-wait-ms T] [--max-queries Q]
+//!           [--shards S] [--max-batch B] [--max-wait-ms T] [--max-queries Q]
 //!           — train, then run the persistent private-inference service:
 //!           concurrent TCP clients, micro-batched over one MPC session
+//!           (or a fleet of S sessions with `--shards S`)
 //!   client  --addr host:port [--queries FILE.jsonl | --evidence v=b,...]
-//!           [--repeat R] [--concurrency C] [--shutdown]
+//!           [--repeat R] [--concurrency C] [--kill-shard N] [--shutdown]
 //!           — drive (or stop) a running serve instance
 //!   kmeans  [--members N] [--k K] [--points P] [--backend sim|tcp]
 //!           — private clustering demo
@@ -30,7 +31,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use spn_mpc::coordinator::infer::{private_conditional, private_eval_batch, Query};
-use spn_mpc::coordinator::serve::train_and_serve;
+use spn_mpc::coordinator::serve::{train_and_serve, train_and_serve_fleet};
+use spn_mpc::net::fleet::ShardSever;
 use spn_mpc::json::Json;
 use spn_mpc::net::serve::{query_from_json, Response, ServeClient, ServeConfig};
 use spn_mpc::coordinator::train::{peek_weights, reveal_weights, train, TrainConfig};
@@ -400,11 +402,13 @@ fn synth_shard_counts(st: &Structure, n: usize, rows: usize) -> Vec<Vec<u64>> {
 }
 
 /// `serve`: train, then run the persistent private-inference service —
-/// one long-lived MPC session, many concurrent TCP clients, a
+/// one long-lived MPC session (or, with `--shards S`, a fleet of S
+/// sessions behind one front-end), many concurrent TCP clients, a
 /// micro-batching scheduler coalescing their queries per tick.
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get("dataset").unwrap_or("mini");
     let n = args.usize_or("members", 3);
+    let shards = args.usize_or("shards", 1).max(1);
     let st = load_structure(name)?;
     let rows = args.usize_or("rows", 2000.min(st.rows));
     let port = args.usize_or("port", 0);
@@ -429,13 +433,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // explicitly because stdout is block-buffered when piped.
     println!(
         "SERVE listening on {addr} dataset={name} num_vars={} members={n} backend={b} \
-         max_batch={} max_wait_ms={}",
+         max_batch={} max_wait_ms={} shards={shards}",
         st.num_vars,
         cfg.max_batch,
         cfg.max_wait.as_millis()
     );
     std::io::stdout().flush()?;
 
+    if shards > 1 {
+        return serve_fleet_cli(args, &st, n, shards, &counts, rows, &tcfg, &theta, listener, &cfg);
+    }
     let report = match b {
         "tcp" => {
             let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
@@ -467,6 +474,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `--shards S` arm of `serve`: S replicated sessions behind the
+/// fleet front-end. Dead shards (chaos kills, member failures) are torn
+/// down lossily; the clean-shutdown line still prints.
+#[allow(clippy::too_many_arguments)]
+fn serve_fleet_cli(
+    args: &Args,
+    st: &Structure,
+    n: usize,
+    shards: usize,
+    counts: &[Vec<u64>],
+    rows: usize,
+    tcfg: &TrainConfig,
+    theta: &[f64],
+    listener: std::net::TcpListener,
+    cfg: &ServeConfig,
+) -> Result<()> {
+    let report = match backend(args)? {
+        "tcp" => {
+            let mut sessions = Vec::with_capacity(shards);
+            let mut severs: Vec<Option<ShardSever>> = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+                let h = sess.sever_handle()?;
+                severs.push(Some(Box::new(move || h.sever())));
+                sessions.push(sess);
+            }
+            let (report, _) = train_and_serve_fleet(
+                &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, severs,
+            )?;
+            for (s, sess) in sessions.into_iter().enumerate() {
+                if report.per_shard[s].dead {
+                    sess.shutdown_lossy();
+                } else {
+                    sess.shutdown()?;
+                }
+            }
+            println!("[backend] tcp: {shards}×{n} member threads joined");
+            report
+        }
+        _ => {
+            let mut sessions: Vec<Engine> = (0..shards)
+                .map(|_| {
+                    let mut ec = engine_config(args, n);
+                    ec.schedule = Schedule::Batched;
+                    Engine::new(Field::paper(), ec)
+                })
+                .collect();
+            let (report, _) = train_and_serve_fleet(
+                &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, Vec::new(),
+            )?;
+            report
+        }
+    };
+    println!(
+        "serve: clean shutdown — {} queries from {} client(s) in {} batches (max tick {}), \
+         {} messages / {} rounds total, {} shard(s) ({} dead, {} re-dispatched)",
+        report.queries,
+        report.clients,
+        report.batches,
+        report.max_tick,
+        group_thousands(report.stats.messages),
+        report.stats.rounds,
+        report.shards,
+        report.dead_shards,
+        report.redispatched
+    );
+    Ok(())
+}
+
 /// `client`: drive a running `serve` instance — single queries from
 /// `--evidence`, whole JSONL files, repeated and spread over concurrent
 /// connections, or `--shutdown` to stop the server.
@@ -476,6 +552,12 @@ fn cmd_client(args: &Args) -> Result<()> {
     if args.has("shutdown") {
         ServeClient::connect(&addr)?.shutdown_server()?;
         println!("client: server acknowledged shutdown");
+        return Ok(());
+    }
+    if let Some(ks) = args.get("kill-shard") {
+        let shard: usize = ks.parse().map_err(|_| anyhow!("bad --kill-shard {ks}"))?;
+        ServeClient::connect(&addr)?.kill_shard(shard)?;
+        println!("client: server acknowledged kill-shard {shard}");
         return Ok(());
     }
     let probe = ServeClient::connect(&addr)?;

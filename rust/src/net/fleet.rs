@@ -1,0 +1,713 @@
+//! The sharded serve fleet (DESIGN.md §Serving layer, §Fleet): S
+//! independent MPC sessions for one trained model behind a single TCP
+//! front-end.
+//!
+//! [`crate::net::serve::serve`] owns exactly one session, so every client
+//! serializes through one secure-round pipeline. The fleet scales out
+//! horizontally: each **shard** is a full session (Sim engine or TCP
+//! member set) holding its own replica of the trained weight shares
+//! (deterministic replay under the shared seed — see
+//! [`crate::coordinator::serve::train_and_serve_fleet`]) and its own
+//! [`Evaluator`] confined to stripe s of the partitioned divpub-tag space
+//! ([`TagStripe`]). Tag freshness is a *per-session* invariant, so the
+//! stripes need no cross-shard coordination, and a shard's answers are
+//! byte-identical to a direct `private_eval_batch` on that shard's
+//! session.
+//!
+//! ## Dispatch
+//!
+//! One FIFO queue per shard; readers route each arriving query to the
+//! least-loaded live shard (queue depth + in-flight tick width, ties to
+//! the lowest index). A query may pin itself to a shard with an optional
+//! `"shard":s` field — honored while that shard is live (the byte-identity
+//! and chaos tests use this), otherwise it falls back to least-loaded.
+//! A shard whose own queue is empty **steals** the back half of the
+//! longest live queue (skipping entries pinned to the victim), so one hot
+//! queue cannot idle the rest of the fleet. Per-shard scheduling keeps
+//! the single-session flush rules ([`ServeConfig::max_batch`] /
+//! [`ServeConfig::max_wait`]) per shard.
+//!
+//! Responses carry a `"shard"` field and can interleave across shards on
+//! one connection — fleet clients attribute replies by `seq`.
+//!
+//! ## Degrade, don't crash
+//!
+//! Each tick's evaluation runs under `catch_unwind`: a session whose
+//! transport dies (TCP members gone) or that is killed by the
+//! `{"cmd":"kill-shard","shard":s}` chaos command panics mid-op, the
+//! shard is marked **dead**, and every query it owed — the interrupted
+//! tick plus its queue — is re-dispatched to surviving shards. The
+//! interrupted tick's reserved tags are burned unrevealed, which is safe:
+//! freshness only forbids *reuse*, and survivors evaluate with their own
+//! stripe-local tags. With zero survivors the front-end answers errors
+//! but keeps accepting connections, so `{"cmd":"shutdown"}` still drains
+//! and the clean-shutdown teardown still runs.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::serve::{
+    json_escape, query_from_json, read_json_msg, render_response, reply, reply_error,
+    ConnShared, ServeConfig,
+};
+use super::NetStats;
+use crate::json::Json;
+use crate::protocols::engine::DataId;
+use crate::protocols::session::MpcSession;
+use crate::spn::plan::{Evaluator, Query, TagStripe};
+
+/// Out-of-band shard kill switch: severs the shard's transport so its
+/// next secure op aborts. TCP shards install
+/// `TcpSession::sever_handle`; Sim shards have no transport to cut and
+/// rely on the killed flag alone.
+pub type ShardSever = Box<dyn Fn() + Send + Sync>;
+
+/// One shard of a serve fleet: a session, its striped evaluator, and its
+/// replica of the model's weight shares.
+pub struct FleetShard<'a, S: MpcSession> {
+    /// The shard's MPC session (exclusively owned by its scheduler
+    /// thread for the lifetime of [`serve_fleet`]).
+    pub sess: &'a mut S,
+    /// Plan evaluator confined to this shard's [`TagStripe`] (built via
+    /// `Evaluator::clone_into_session`).
+    pub ev: Evaluator,
+    /// Sum-weight share handles in `sess`.
+    pub sum_w: Vec<DataId>,
+    /// Learned leaf-θ share handles in `sess` (None = public defaults).
+    pub learned_theta: Option<Vec<DataId>>,
+    /// Optional transport kill switch for `kill-shard` (TCP shards).
+    pub sever: Option<ShardSever>,
+}
+
+/// What one shard did, inside a [`FleetReport`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardReport {
+    /// Queries this shard answered.
+    pub queries: u64,
+    /// Scheduler ticks this shard ran.
+    pub batches: u64,
+    /// Widest tick this shard served.
+    pub max_tick: usize,
+    /// Σ of this shard's per-tick [`NetStats`] deltas.
+    pub stats: NetStats,
+    /// Did this shard die (session panic or kill-shard)?
+    pub dead: bool,
+}
+
+/// What a fleet did, returned by [`serve_fleet`] after the drain.
+#[derive(Clone, Debug, Default)]
+pub struct FleetReport {
+    /// Queries answered across all shards.
+    pub queries: u64,
+    /// Scheduler ticks across all shards.
+    pub batches: u64,
+    /// Client connections accepted over the fleet's lifetime.
+    pub clients: u64,
+    /// Σ of every shard's stats.
+    pub stats: NetStats,
+    /// Widest tick any shard served.
+    pub max_tick: usize,
+    /// Number of shards the fleet started with.
+    pub shards: usize,
+    /// Shards dead by the end of the run.
+    pub dead_shards: usize,
+    /// Queries moved off a dying shard onto survivors.
+    pub redispatched: u64,
+    /// Per-shard breakdown, indexed by shard.
+    pub per_shard: Vec<ShardReport>,
+}
+
+// --- shared front-end state ------------------------------------------------
+
+struct FPending {
+    conn: Arc<ConnShared>,
+    seq: u64,
+    query: Query,
+    enqueued: Instant,
+    /// Client-requested shard, if any (kept so stealing never moves a
+    /// pinned query off its live shard).
+    pin: Option<usize>,
+}
+
+#[derive(Default)]
+struct ShardQueue {
+    queue: VecDeque<FPending>,
+    /// Width of the tick the shard is currently evaluating (load signal
+    /// for least-loaded dispatch).
+    in_flight: usize,
+    /// Session gone; never routed to again.
+    dead: bool,
+    /// kill-shard received; the scheduler turns this into `dead` on its
+    /// next wake-up.
+    killed: bool,
+}
+
+#[derive(Default)]
+struct FleetState {
+    shards: Vec<ShardQueue>,
+    shutdown: bool,
+    /// Queries answered fleet-wide (drives `max_queries`).
+    answered: u64,
+    redispatched: u64,
+    conns: Vec<Arc<ConnShared>>,
+    reader_handles: Vec<JoinHandle<()>>,
+    clients_seen: u64,
+}
+
+struct FleetShared {
+    state: Mutex<FleetState>,
+    cvar: Condvar,
+    /// Per-shard transport kill switches (`None` for Sim shards).
+    severs: Vec<Option<ShardSever>>,
+    nshards: usize,
+}
+
+/// Least-loaded live shard, honoring a live pin. `None` = no live shard.
+fn route(st: &FleetState, pin: Option<usize>) -> Option<usize> {
+    if let Some(p) = pin {
+        let sq = &st.shards[p];
+        if !sq.dead && !sq.killed {
+            return Some(p);
+        }
+    }
+    st.shards
+        .iter()
+        .enumerate()
+        .filter(|(_, q)| !q.dead && !q.killed)
+        .min_by_key(|(i, q)| (q.queue.len() + q.in_flight, *i))
+        .map(|(i, _)| i)
+}
+
+/// The longest live queue worth stealing from (≥ 2 entries, not `thief`).
+fn steal_victim(st: &FleetState, thief: usize) -> Option<usize> {
+    st.shards
+        .iter()
+        .enumerate()
+        .filter(|&(i, q)| i != thief && !q.dead && !q.killed && q.queue.len() >= 2)
+        .max_by_key(|(_, q)| q.queue.len())
+        .map(|(i, _)| i)
+}
+
+/// Take up to half of `victim`'s queue (capped at `max_batch`) from the
+/// back, skipping entries pinned to the victim; the stolen run keeps its
+/// FIFO order.
+fn steal_from(q: &mut VecDeque<FPending>, max_batch: usize, victim: usize) -> Vec<FPending> {
+    let want = (q.len() / 2).min(max_batch);
+    let mut got = Vec::new();
+    while got.len() < want {
+        match q.back() {
+            Some(p) if p.pin != Some(victim) => got.push(q.pop_back().unwrap()),
+            _ => break,
+        }
+    }
+    got.reverse();
+    got
+}
+
+/// Next tick for shard `s`: its own queue under the single-session flush
+/// rules, else stolen work, else block. `Some(vec![])` signals a pending
+/// kill (the scheduler panics into the death path); `None` means drained
+/// shutdown.
+fn next_fleet_tick(shared: &FleetShared, s: usize, cfg: &ServeConfig) -> Option<Vec<FPending>> {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shards[s].dead {
+            return None;
+        }
+        if st.shards[s].killed {
+            return Some(Vec::new());
+        }
+        if !st.shards[s].queue.is_empty() {
+            break;
+        }
+        if let Some(v) = steal_victim(&st, s) {
+            let stolen = steal_from(&mut st.shards[v].queue, cfg.max_batch, v);
+            if !stolen.is_empty() {
+                st.shards[s].in_flight = stolen.len();
+                return Some(stolen);
+            }
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = shared.cvar.wait(st).unwrap();
+    }
+    // coalesce arrivals exactly like the single-session scheduler
+    let deadline = st.shards[s].queue.front().unwrap().enqueued + cfg.max_wait;
+    while st.shards[s].queue.len() < cfg.max_batch && !st.shutdown && !st.shards[s].killed {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (g, to) = shared.cvar.wait_timeout(st, deadline - now).unwrap();
+        st = g;
+        if to.timed_out() {
+            break;
+        }
+    }
+    let take = st.shards[s].queue.len().min(cfg.max_batch);
+    let tick: Vec<FPending> = st.shards[s].queue.drain(..take).collect();
+    st.shards[s].in_flight = tick.len();
+    Some(tick)
+}
+
+/// One shard's scheduler: owns the session, serves ticks until drained
+/// shutdown or death. Runs on a scoped thread inside [`serve_fleet`].
+fn shard_scheduler<S: MpcSession>(
+    s: usize,
+    shard: &mut FleetShard<'_, S>,
+    shared: &FleetShared,
+    cfg: &ServeConfig,
+    d: u128,
+) -> ShardReport {
+    let mut rep = ShardReport::default();
+    while let Some(tick) = next_fleet_tick(shared, s, cfg) {
+        let queries: Vec<Query> = tick.iter().map(|p| p.query.clone()).collect();
+        // Read the kill flag *outside* the unwind region: panicking while
+        // holding the state lock would poison it for the whole front-end.
+        let killed = { shared.state.lock().unwrap().shards[s].killed };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if killed {
+                panic!("shard {s} killed by command");
+            }
+            shard.ev.eval_batch(
+                shard.sess,
+                &queries,
+                &shard.sum_w,
+                shard.learned_theta.as_deref(),
+            )
+        }));
+        match outcome {
+            Ok((roots, delta)) => {
+                rep.queries += tick.len() as u64;
+                rep.batches += 1;
+                rep.stats = rep.stats + delta;
+                rep.max_tick = rep.max_tick.max(tick.len());
+                // bill the tick delta once per distinct client in the tick
+                let mut seen: Vec<u64> = Vec::new();
+                for p in &tick {
+                    if !seen.contains(&p.conn.id) {
+                        seen.push(p.conn.id);
+                        let mut t = p.conn.total.lock().unwrap();
+                        *t = *t + delta;
+                    }
+                }
+                for (p, &root) in tick.iter().zip(&roots) {
+                    let total = *p.conn.total.lock().unwrap();
+                    let msg =
+                        render_response(p.seq, root, d, tick.len(), &delta, &total, Some(s));
+                    reply(&p.conn, &msg);
+                }
+                let mut st = shared.state.lock().unwrap();
+                st.shards[s].in_flight = 0;
+                st.answered += tick.len() as u64;
+                if let Some(maxq) = cfg.max_queries {
+                    if st.answered >= maxq {
+                        st.shutdown = true;
+                    }
+                }
+                shared.cvar.notify_all();
+            }
+            Err(_) => {
+                // The session is gone mid-tick. Mark the shard dead and
+                // move every query it owed — the interrupted tick plus its
+                // queue — to survivors. The tick's reserved tags are
+                // burned unrevealed (freshness only forbids reuse);
+                // survivors answer with their own stripe-local tags.
+                let mut lost = Vec::new();
+                {
+                    let mut st = shared.state.lock().unwrap();
+                    st.shards[s].dead = true;
+                    st.shards[s].in_flight = 0;
+                    let mut orphans = tick;
+                    orphans.extend(st.shards[s].queue.drain(..));
+                    st.redispatched += orphans.len() as u64;
+                    for mut p in orphans {
+                        if p.pin == Some(s) {
+                            p.pin = None;
+                        }
+                        match route(&st, p.pin) {
+                            Some(t) => st.shards[t].queue.push_back(p),
+                            None => lost.push(p),
+                        }
+                    }
+                    shared.cvar.notify_all();
+                }
+                for p in lost {
+                    reply_error(
+                        &p.conn,
+                        Some(p.seq),
+                        &format!("shard {s} died with no surviving shards"),
+                    );
+                }
+                rep.dead = true;
+                break;
+            }
+        }
+    }
+    rep
+}
+
+// --- front-end (readers + accept loop) -------------------------------------
+
+/// Parse an optional integer `"shard"` routing hint in `0..nshards`.
+/// `Ok(None)` = unpinned; `Err` = present but unusable.
+fn parse_pin(j: &Json, nshards: usize) -> Result<Option<usize>> {
+    match j.opt("shard") {
+        None => Ok(None),
+        Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 && (*n as usize) < nshards => {
+            Ok(Some(*n as usize))
+        }
+        Some(_) => bail!("\"shard\" must be an integer in 0..{nshards}"),
+    }
+}
+
+/// Per-connection reader: hello, then frames → routed queue entries.
+/// Extends the single-session reader with the `"shard"` pin and the
+/// `kill-shard` chaos command. Never touches any MPC session.
+fn fleet_reader_session(conn: &Arc<ConnShared>, shared: &FleetShared, hello: &str, num_vars: usize) {
+    if !reply(conn, hello) {
+        return;
+    }
+    let Ok(rstream) = conn.stream.try_clone() else { return };
+    let mut r = BufReader::with_capacity(8192, rstream);
+    let nshards = shared.nshards;
+    loop {
+        let Ok(txt) = read_json_msg(&mut r) else { return }; // disconnect
+        let j = match Json::parse(&txt) {
+            Ok(j) => j,
+            Err(e) => {
+                let seq = conn.next_seq.fetch_add(1, Ordering::SeqCst);
+                if !reply_error(conn, Some(seq), &format!("request is not JSON: {e}")) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if let Some(cmd) = j.opt("cmd") {
+            if matches!(cmd, Json::Str(c) if c.as_str() == "shutdown") {
+                reply(conn, "{\"ok\":true}");
+                let mut st = shared.state.lock().unwrap();
+                st.shutdown = true;
+                shared.cvar.notify_all();
+                return;
+            }
+            if matches!(cmd, Json::Str(c) if c.as_str() == "kill-shard") {
+                match parse_pin(&j, nshards) {
+                    Ok(Some(t)) => {
+                        {
+                            let mut st = shared.state.lock().unwrap();
+                            st.shards[t].killed = true;
+                            shared.cvar.notify_all();
+                        }
+                        // sever outside the lock: closing sockets can block
+                        if let Some(f) = &shared.severs[t] {
+                            f();
+                        }
+                        if !reply(conn, &format!("{{\"ok\":true,\"killed\":{t}}}")) {
+                            return;
+                        }
+                    }
+                    _ => {
+                        if !reply_error(
+                            conn,
+                            None,
+                            &format!("kill-shard needs \"shard\" in 0..{nshards}"),
+                        ) {
+                            return;
+                        }
+                    }
+                }
+                continue;
+            }
+            if !reply_error(conn, None, &format!("unknown cmd {cmd:?}")) {
+                return;
+            }
+            continue;
+        }
+        let seq = conn.next_seq.fetch_add(1, Ordering::SeqCst);
+        let pin = match parse_pin(&j, nshards) {
+            Ok(p) => p,
+            Err(e) => {
+                if !reply_error(conn, Some(seq), &e.to_string()) {
+                    return;
+                }
+                continue;
+            }
+        };
+        match query_from_json(&j, num_vars) {
+            Ok(query) => {
+                let mut st = shared.state.lock().unwrap();
+                if st.shutdown {
+                    drop(st);
+                    if !reply_error(conn, Some(seq), "server is shutting down") {
+                        return;
+                    }
+                    continue;
+                }
+                match route(&st, pin) {
+                    Some(t) => {
+                        st.shards[t].queue.push_back(FPending {
+                            conn: conn.clone(),
+                            seq,
+                            query,
+                            enqueued: Instant::now(),
+                            pin,
+                        });
+                        shared.cvar.notify_all();
+                    }
+                    None => {
+                        drop(st);
+                        if !reply_error(conn, Some(seq), "no live shards") {
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                if !reply_error(conn, Some(seq), &e.to_string()) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn fleet_reader_loop(
+    conn: Arc<ConnShared>,
+    shared: Arc<FleetShared>,
+    hello: Arc<String>,
+    num_vars: usize,
+) {
+    fleet_reader_session(&conn, &shared, &hello, num_vars);
+    // prune, exactly like the single-session reader (queued FPendings hold
+    // their own Arc, so in-flight responses still go out)
+    let mut st = shared.state.lock().unwrap();
+    st.conns.retain(|c| c.id != conn.id);
+    st.reader_handles.retain(|h| !h.is_finished());
+}
+
+/// Accept loop: register connections, spawn readers, exit on shutdown
+/// (woken by a dummy self-connection, as in the single-session server).
+fn fleet_listener_loop(
+    listener: TcpListener,
+    shared: Arc<FleetShared>,
+    hello: Arc<String>,
+    num_vars: usize,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.state.lock().unwrap().shutdown {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let mut st = shared.state.lock().unwrap();
+        if st.shutdown {
+            return;
+        }
+        st.clients_seen += 1;
+        let Some(conn) = ConnShared::register(st.clients_seen, stream) else { continue };
+        st.conns.push(conn.clone());
+        let rs = shared.clone();
+        let h = hello.clone();
+        st.reader_handles
+            .push(std::thread::spawn(move || fleet_reader_loop(conn, rs, h, num_vars)));
+    }
+}
+
+/// Run a serve fleet: accept clients on `listener` and micro-batch their
+/// queries across the `shards` — one scheduler thread per shard, each
+/// exclusively owning its session. Returns after a drained shutdown with
+/// every spawned thread joined; the sessions outlive the call (the caller
+/// shuts them down, using their lossy path for dead shards).
+///
+/// Every shard must serve the same compiled plan; each shard's answers
+/// are byte-identical to a direct `private_eval_batch` of the queries it
+/// served, in its served order, on a session with the same seed, training
+/// replay, and [`TagStripe`] (pinned by `rust/tests/fleet.rs`).
+pub fn serve_fleet<S: MpcSession + Send>(
+    mut shards: Vec<FleetShard<'_, S>>,
+    listener: TcpListener,
+    cfg: &ServeConfig,
+) -> Result<FleetReport> {
+    if cfg.max_batch == 0 {
+        bail!("serve_fleet needs max_batch ≥ 1");
+    }
+    if shards.is_empty() {
+        bail!("serve_fleet needs at least one shard");
+    }
+    let (num_vars, d) = (shards[0].ev.plan().num_vars, shards[0].ev.plan().d);
+    for sh in &shards {
+        let p = sh.ev.plan();
+        if p.num_vars != num_vars || p.d != d {
+            bail!("every fleet shard must serve the same compiled plan");
+        }
+        let stripe = sh.ev.stripe();
+        if stripe.map(|st| st.shards()) != Some(shards.len()) {
+            bail!(
+                "shard evaluator stripe {stripe:?} does not match a {}-shard fleet \
+                 (build shards via Evaluator::clone_into_session)",
+                shards.len()
+            );
+        }
+    }
+    let nshards = shards.len();
+    let addr = listener.local_addr()?;
+    let hello = Arc::new(format!(
+        "{{\"proto\":1,\"name\":\"{}\",\"num_vars\":{},\"d\":{},\"max_batch\":{},\"shards\":{}}}",
+        json_escape(&shards[0].ev.plan().name),
+        num_vars,
+        d,
+        cfg.max_batch,
+        nshards
+    ));
+    let severs: Vec<Option<ShardSever>> = shards.iter_mut().map(|sh| sh.sever.take()).collect();
+    let shared = Arc::new(FleetShared {
+        state: Mutex::new(FleetState {
+            shards: (0..nshards).map(|_| ShardQueue::default()).collect(),
+            ..FleetState::default()
+        }),
+        cvar: Condvar::new(),
+        severs,
+        nshards,
+    });
+    let ls = shared.clone();
+    let lhello = hello.clone();
+    let lh = std::thread::spawn(move || fleet_listener_loop(listener, ls, lhello, num_vars));
+
+    let mut per_shard: Vec<ShardReport> = Vec::with_capacity(nshards);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nshards);
+        for (s, shard) in shards.iter_mut().enumerate() {
+            let sh: &FleetShared = &shared;
+            handles.push(scope.spawn(move || shard_scheduler(s, shard, sh, cfg, d)));
+        }
+        // Hold the front door open until shutdown even if every scheduler
+        // died: readers keep answering errors and the shutdown command
+        // must still drain cleanly.
+        {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown {
+                st = shared.cvar.wait(st).unwrap();
+            }
+        }
+        for h in handles {
+            per_shard
+                .push(h.join().unwrap_or(ShardReport { dead: true, ..ShardReport::default() }));
+        }
+    });
+    // graceful teardown, exactly like the single-session server
+    let _ = TcpStream::connect(addr);
+    lh.join().map_err(|_| anyhow!("fleet listener thread panicked"))?;
+    let (conns, readers, clients, redispatched) = {
+        let mut st = shared.state.lock().unwrap();
+        (
+            std::mem::take(&mut st.conns),
+            std::mem::take(&mut st.reader_handles),
+            st.clients_seen,
+            st.redispatched,
+        )
+    };
+    for c in &conns {
+        let _ = c.stream.shutdown(Shutdown::Both);
+    }
+    for h in readers {
+        h.join().map_err(|_| anyhow!("fleet reader thread panicked"))?;
+    }
+
+    let mut report = FleetReport {
+        clients,
+        shards: nshards,
+        redispatched,
+        per_shard: per_shard.clone(),
+        ..FleetReport::default()
+    };
+    for r in &per_shard {
+        report.queries += r.queries;
+        report.batches += r.batches;
+        report.stats = report.stats + r.stats;
+        report.max_tick = report.max_tick.max(r.max_tick);
+        report.dead_shards += r.dead as usize;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pend(pin: Option<usize>) -> FPending {
+        // a connected TCP pair so ConnShared::register has a real socket
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let conn = ConnShared::register(1, a).unwrap();
+        FPending {
+            conn,
+            seq: 0,
+            query: Query { x: vec![0], marg: vec![true] },
+            enqueued: Instant::now(),
+            pin,
+        }
+    }
+
+    fn state(loads: &[(usize, usize, bool)]) -> FleetState {
+        // (queued, in_flight, dead) per shard
+        let mut st = FleetState::default();
+        for &(queued, in_flight, dead) in loads {
+            let mut q = ShardQueue { in_flight, dead, ..ShardQueue::default() };
+            for _ in 0..queued {
+                q.queue.push_back(pend(None));
+            }
+            st.shards.push(q);
+        }
+        st
+    }
+
+    #[test]
+    fn routing_is_least_loaded_with_live_pins() {
+        let st = state(&[(3, 0, false), (0, 2, false), (1, 0, false)]);
+        assert_eq!(route(&st, None), Some(2), "lowest queue+in_flight wins");
+        assert_eq!(route(&st, Some(0)), Some(0), "a live pin is honored");
+        let st = state(&[(0, 0, true), (5, 0, false)]);
+        assert_eq!(route(&st, Some(0)), Some(1), "a dead pin falls back");
+        let st = state(&[(0, 0, true), (0, 0, true)]);
+        assert_eq!(route(&st, None), None, "no live shard → no route");
+    }
+
+    #[test]
+    fn stealing_takes_the_unpinned_back_half_in_order() {
+        let mut q: VecDeque<FPending> = VecDeque::new();
+        for seq in 0..6 {
+            let mut p = pend(None);
+            p.seq = seq;
+            q.push_back(p);
+        }
+        let got = steal_from(&mut q, 16, 0);
+        assert_eq!(got.len(), 3, "half of six");
+        assert_eq!(got.iter().map(|p| p.seq).collect::<Vec<_>>(), vec![3, 4, 5], "FIFO kept");
+        assert_eq!(q.len(), 3);
+
+        // entries pinned to the victim are never stolen
+        let mut q: VecDeque<FPending> = VecDeque::new();
+        for seq in 0..4 {
+            let mut p = pend(Some(7));
+            p.seq = seq;
+            q.push_back(p);
+        }
+        assert!(steal_from(&mut q, 16, 7).is_empty());
+        assert_eq!(q.len(), 4);
+    }
+}

@@ -20,6 +20,7 @@
 //! [`MpcSession`](crate::protocols::session::MpcSession), byte-identical to
 //! the simulation under the same seed.
 
+pub mod fleet;
 pub mod serve;
 pub mod tcp;
 pub mod tcp_session;

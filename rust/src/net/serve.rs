@@ -61,6 +61,14 @@
 //! joined — [`serve`] returns only when nothing it spawned is left
 //! running. The MPC session itself outlives [`serve`]: the caller decides
 //! whether to reuse it or `TcpSession::shutdown` it.
+//!
+//! ## Scaling out
+//!
+//! [`serve`] owns exactly one session; [`crate::net::fleet`] puts the
+//! same wire protocol in front of S independent sessions for one model
+//! (per-shard FIFO queues, least-loaded dispatch, work stealing, shard
+//! death tolerance). Fleet responses additionally carry a `"shard"`
+//! field, and the fleet hello reports `"shards"`.
 
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -143,7 +151,7 @@ pub fn read_json_msg<R: Read>(r: &mut R) -> Result<String> {
     Ok(String::from_utf8(buf)?)
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     s.chars()
         .flat_map(|c| match c {
             '"' => vec!['\\', '"'],
@@ -203,7 +211,7 @@ pub fn stats_json(s: &NetStats) -> String {
 
 /// Fallible numeric field access — unlike [`Json::as_f64`], a wrong type
 /// from an untrusted peer becomes an `Err`, not a panic.
-fn num_field(j: &Json, k: &str) -> Result<f64> {
+pub(crate) fn num_field(j: &Json, k: &str) -> Result<f64> {
     match j.opt(k) {
         Some(Json::Num(n)) => Ok(*n),
         Some(other) => bail!("field \"{k}\" is not a number (got {other:?})"),
@@ -222,17 +230,25 @@ pub fn stats_from_json(j: &Json) -> Result<NetStats> {
     })
 }
 
-fn render_response(
+/// Render one query response. `shard` is `Some` only on fleet servers
+/// ([`crate::net::fleet`]): clients of a single-session [`serve`] see the
+/// exact PR-5 wire format.
+pub(crate) fn render_response(
     seq: u64,
     root: i128,
     d: u128,
     batch: usize,
     stats: &NetStats,
     total: &NetStats,
+    shard: Option<usize>,
 ) -> String {
     let p = root.max(0) as f64 / d as f64;
+    let shard_field = match shard {
+        Some(s) => format!("\"shard\":{s},"),
+        None => String::new(),
+    };
     format!(
-        "{{\"seq\":{seq},\"root\":{root},\"p\":{p},\"d\":{d},\"batch\":{batch},\"stats\":{},\"total\":{}}}",
+        "{{\"seq\":{seq},\"root\":{root},\"p\":{p},\"d\":{d},\"batch\":{batch},{shard_field}\"stats\":{},\"total\":{}}}",
         stats_json(stats),
         stats_json(total)
     )
@@ -247,19 +263,39 @@ pub const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// One live client connection, shared between its reader thread (hello,
 /// error replies) and the scheduler (query responses, stats totals).
-struct ConnShared {
-    id: u64,
+/// Shared with [`crate::net::fleet`], whose readers and per-shard
+/// schedulers use the same registration/reply/teardown discipline.
+pub(crate) struct ConnShared {
+    pub(crate) id: u64,
     /// The accepted stream itself — kept for the forced close at shutdown.
-    stream: TcpStream,
-    w: Mutex<BufWriter<TcpStream>>,
+    pub(crate) stream: TcpStream,
+    pub(crate) w: Mutex<BufWriter<TcpStream>>,
     /// This client's accumulated cost: the delta of every tick one of its
     /// queries rode in, summed with `NetStats::Add`.
-    total: Mutex<NetStats>,
-    next_seq: AtomicU64,
+    pub(crate) total: Mutex<NetStats>,
+    pub(crate) next_seq: AtomicU64,
     /// Set on the first failed write (client gone, or stalled past
     /// [`WRITE_STALL_TIMEOUT`]): all further writes are skipped and the
     /// socket is closed.
-    dead: std::sync::atomic::AtomicBool,
+    pub(crate) dead: std::sync::atomic::AtomicBool,
+}
+
+impl ConnShared {
+    /// Register a freshly accepted client stream: nodelay + bounded write
+    /// stall, with a buffered writer on a cloned handle.
+    pub(crate) fn register(id: u64, stream: TcpStream) -> Option<Arc<ConnShared>> {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
+        let wstream = stream.try_clone().ok()?;
+        Some(Arc::new(ConnShared {
+            id,
+            stream,
+            w: Mutex::new(BufWriter::with_capacity(8192, wstream)),
+            total: Mutex::new(NetStats::default()),
+            next_seq: AtomicU64::new(0),
+            dead: std::sync::atomic::AtomicBool::new(false),
+        }))
+    }
 }
 
 struct Pending {
@@ -286,7 +322,7 @@ struct Shared {
 /// Write one frame to a client. On failure — client gone, or stalled past
 /// [`WRITE_STALL_TIMEOUT`] — the connection is marked dead and closed so
 /// it can never delay the scheduler again. Returns false when dead.
-fn reply(conn: &ConnShared, msg: &str) -> bool {
+pub(crate) fn reply(conn: &ConnShared, msg: &str) -> bool {
     use std::sync::atomic::Ordering::Relaxed;
     if conn.dead.load(Relaxed) {
         return false;
@@ -306,7 +342,7 @@ fn reply(conn: &ConnShared, msg: &str) -> bool {
 /// assigned, so pipelining clients can attribute it (error replies are
 /// written immediately by the reader and may overtake in-flight query
 /// responses on the wire).
-fn reply_error(conn: &ConnShared, seq: Option<u64>, msg: &str) -> bool {
+pub(crate) fn reply_error(conn: &ConnShared, seq: Option<u64>, msg: &str) -> bool {
     let m = match seq {
         Some(s) => format!("{{\"error\":\"{}\",\"seq\":{s}}}", json_escape(msg)),
         None => format!("{{\"error\":\"{}\"}}", json_escape(msg)),
@@ -417,21 +453,8 @@ fn listener_loop(
         if st.shutdown {
             return; // the wake-up dummy connection (or a too-late client)
         }
-        let _ = stream.set_nodelay(true);
-        // SO_SNDTIMEO (shared by the clones below): a client that stops
-        // reading makes writes fail after the timeout instead of blocking
-        // the scheduler forever; reply() then kills the connection.
-        let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
-        let Ok(wstream) = stream.try_clone() else { continue };
         st.clients_seen += 1;
-        let conn = Arc::new(ConnShared {
-            id: st.clients_seen,
-            stream,
-            w: Mutex::new(BufWriter::with_capacity(8192, wstream)),
-            total: Mutex::new(NetStats::default()),
-            next_seq: AtomicU64::new(0),
-            dead: std::sync::atomic::AtomicBool::new(false),
-        });
+        let Some(conn) = ConnShared::register(st.clients_seen, stream) else { continue };
         st.conns.push(conn.clone());
         let rs = shared.clone();
         let h = hello.clone();
@@ -528,7 +551,7 @@ pub fn serve<S: MpcSession>(
         }
         for (p, &root) in tick.iter().zip(&roots) {
             let total = *p.conn.total.lock().unwrap();
-            let msg = render_response(p.seq, root, d, tick.len(), &delta, &total);
+            let msg = render_response(p.seq, root, d, tick.len(), &delta, &total, None);
             reply(&p.conn, &msg); // gone/stalled clients are skipped/killed
         }
         if let Some(maxq) = cfg.max_queries {
@@ -567,6 +590,10 @@ pub struct Hello {
     pub num_vars: usize,
     pub d: u128,
     pub max_batch: usize,
+    /// Sessions behind the front-end: 1 for a [`serve`] server, S for a
+    /// [`crate::net::fleet::serve_fleet`] server (absent on old servers →
+    /// parsed as 1).
+    pub shards: usize,
 }
 
 /// One answered query as the client sees it.
@@ -589,6 +616,10 @@ pub struct Response {
     pub stats: NetStats,
     /// This connection's accumulated traffic.
     pub total: NetStats,
+    /// Which fleet shard served this query (`None` from a single-session
+    /// [`serve`] server). Fleet responses can interleave across shards, so
+    /// pipelining clients attribute replies by `seq`.
+    pub shard: Option<usize>,
 }
 
 /// A client connection to a [`serve`] session: blocking, with split
@@ -618,6 +649,7 @@ impl ServeClient {
             num_vars: num_field(&j, "num_vars").map_err(|e| e.context("bad hello"))? as usize,
             d: num_field(&j, "d").map_err(|e| e.context("bad hello"))? as u128,
             max_batch: num_field(&j, "max_batch").unwrap_or(1.0) as usize,
+            shards: num_field(&j, "shards").unwrap_or(1.0) as usize,
         };
         if hello.proto != 1 {
             bail!("unsupported serve protocol version {}", hello.proto);
@@ -657,6 +689,10 @@ impl ServeClient {
             batch: num_field(&j, "batch")? as usize,
             stats: stats_from_json(j.opt("stats").context("response lacks stats")?)?,
             total: stats_from_json(j.opt("total").context("response lacks total")?)?,
+            shard: match j.opt("shard") {
+                Some(Json::Num(n)) => Some(*n as usize),
+                _ => None,
+            },
         })
     }
 
@@ -664,6 +700,22 @@ impl ServeClient {
     pub fn query(&mut self, q: &Query) -> Result<Response> {
         self.send(q)?;
         self.recv()
+    }
+
+    /// Ask a fleet server to kill shard `shard` (chaos testing / ops
+    /// drills): the shard is marked dead, its TCP member sockets (if any)
+    /// are severed, and its queued queries move to surviving shards. The
+    /// connection stays usable. Single-session [`serve`] servers reject
+    /// the command.
+    pub fn kill_shard(&mut self, shard: usize) -> Result<()> {
+        write_json_msg(&mut self.w, &format!("{{\"cmd\":\"kill-shard\",\"shard\":{shard}}}"))?;
+        let txt = read_json_msg(&mut self.r)?;
+        let j = Json::parse(&txt).map_err(|e| anyhow!("kill-shard ack is not JSON: {e}"))?;
+        if j.opt("ok") == Some(&Json::Bool(true)) {
+            Ok(())
+        } else {
+            bail!("unexpected kill-shard ack: {txt}");
+        }
     }
 
     /// Ask the server to drain and stop; consumes the connection.
@@ -741,13 +793,18 @@ mod tests {
     fn response_render_parses_back() {
         let stats = NetStats { messages: 7, bytes: 700, rounds: 3, exercises: 2, virtual_time_s: 0.01 };
         let total = stats + stats;
-        let txt = render_response(5, 249, 256, 4, &stats, &total);
+        let txt = render_response(5, 249, 256, 4, &stats, &total, None);
         let j = Json::parse(&txt).unwrap();
         assert_eq!(j.get("seq").as_usize(), 5);
         assert_eq!(j.get("root").as_i64(), 249);
         assert_eq!(j.get("batch").as_usize(), 4);
         assert!((j.get("p").as_f64() - 249.0 / 256.0).abs() < 1e-12);
         assert_eq!(stats_from_json(j.get("total")).unwrap().messages, 14);
+        assert!(j.opt("shard").is_none(), "single-session responses carry no shard");
+        // fleet responses name the serving shard
+        let ftxt = render_response(5, 249, 256, 4, &stats, &total, Some(2));
+        let fj = Json::parse(&ftxt).unwrap();
+        assert_eq!(fj.get("shard").as_usize(), 2);
     }
 
     #[test]

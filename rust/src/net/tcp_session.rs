@@ -330,6 +330,24 @@ struct Conn {
     w: BufWriter<TcpStream>,
 }
 
+/// Duplicated handles to a live session's member sockets, obtained via
+/// [`TcpSession::sever_handle`]: [`SessionSever::sever`] shuts every
+/// socket down from outside the session, aborting its next op. Chaos
+/// tooling only — there is no way back to a healthy session.
+pub struct SessionSever {
+    streams: Vec<TcpStream>,
+}
+
+impl SessionSever {
+    /// Cut every manager↔member connection (both directions). Idempotent;
+    /// errors are ignored (the sockets may already be gone).
+    pub fn sever(&self) {
+        for s in &self.streams {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
 /// The Manager end of a TCP session: owns the member connections,
 /// schedules exercises, relays sub-shares, accounts frames.
 pub struct TcpSession {
@@ -389,6 +407,32 @@ impl TcpSession {
             h.join().map_err(|_| anyhow!("member thread panicked"))??;
         }
         Ok(())
+    }
+
+    /// Best-effort shutdown for a session whose transport may already be
+    /// severed (a dead fleet shard): try the OP_SHUTDOWN broadcast, then
+    /// join member threads ignoring transport errors — a severed member
+    /// exits with a read error rather than a clean opcode.
+    pub fn shutdown_lossy(mut self) {
+        let _ = self.broadcast(&[OP_SHUTDOWN]);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Duplicate handles to every member connection for out-of-band
+    /// severing — the chaos switch behind the serve fleet's `kill-shard`
+    /// command. [`SessionSever::sever`] may be called from any thread
+    /// while the session is in use; the manager's next op then fails and
+    /// the [`MpcSession`] impl panics, which a fleet catches as shard
+    /// death. After severing, tear the session down with
+    /// [`TcpSession::shutdown_lossy`].
+    pub fn sever_handle(&self) -> Result<SessionSever> {
+        let mut streams = Vec::with_capacity(self.conns.len());
+        for c in &self.conns {
+            streams.push(c.r.get_ref().try_clone()?);
+        }
+        Ok(SessionSever { streams })
     }
 
     // --- relay plumbing ---------------------------------------------------

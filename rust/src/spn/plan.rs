@@ -45,6 +45,60 @@ pub struct Query {
     pub marg: Vec<bool>,
 }
 
+/// One shard's slice of the 64-bit divpub-tag space.
+///
+/// A serve fleet (DESIGN.md §Fleet) runs S independent sessions for one
+/// model; shard `s` draws every tag from `[s·W, (s+1)·W)` with
+/// `W = u64::MAX / S`, so the stripes are pairwise disjoint by
+/// construction and the tag-freshness invariant holds *per session*
+/// without any cross-shard coordination. `TagStripe::new(0, 1)` is the
+/// whole tag space — a fleet of one is tag-for-tag the single-session
+/// server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TagStripe {
+    shard: usize,
+    shards: usize,
+}
+
+impl TagStripe {
+    /// Stripe `shard` of a `shards`-way partition (`shard < shards`).
+    pub fn new(shard: usize, shards: usize) -> TagStripe {
+        assert!(shards >= 1, "a fleet has at least one shard");
+        assert!(shard < shards, "stripe {shard} of a {shards}-shard fleet");
+        TagStripe { shard, shards }
+    }
+
+    /// This stripe's shard index.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Total shards in the partition.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Stripe width `W = u64::MAX / shards`.
+    pub fn width(shards: usize) -> u64 {
+        u64::MAX / shards as u64
+    }
+
+    /// First tag of the stripe.
+    pub fn base(&self) -> u64 {
+        self.shard as u64 * Self::width(self.shards)
+    }
+
+    /// One past the last tag of the stripe.
+    pub fn limit(&self) -> u64 {
+        self.base() + Self::width(self.shards)
+    }
+
+    /// Does the half-open tag range `[start, end)` fall inside the stripe?
+    pub fn contains(&self, start: u64, end: u64) -> bool {
+        start <= end && start >= self.base() && end <= self.limit()
+    }
+}
+
 /// Where a step input comes from: the previous layer's outputs or a leaf.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Src {
@@ -195,6 +249,11 @@ pub struct Evaluator {
     last_tags: Option<(u64, u64)>,
     /// Batches evaluated so far (scheduler ticks, for a standing server).
     ticks: u64,
+    /// The tag stripe this evaluator's session is confined to (`None` =
+    /// unsharded: the whole tag space). Installed by
+    /// [`Evaluator::clone_into_session`]; every reservation is asserted to
+    /// stay inside it.
+    stripe: Option<TagStripe>,
 }
 
 fn resolve(s: Src, b: usize, prev: &[DataId], leaf_vals: &[DataId], bsz: usize) -> DataId {
@@ -206,12 +265,48 @@ fn resolve(s: Src, b: usize, prev: &[DataId], leaf_vals: &[DataId], bsz: usize) 
 
 impl Evaluator {
     pub fn new(plan: EvalPlan) -> Self {
-        Evaluator { plan, cache: None, last_tags: None, ticks: 0 }
+        Evaluator { plan, cache: None, last_tags: None, ticks: 0, stripe: None }
     }
 
     /// The compiled plan this evaluator executes.
     pub fn plan(&self) -> &EvalPlan {
         &self.plan
+    }
+
+    /// The tag stripe this evaluator is confined to (`None` = unsharded).
+    pub fn stripe(&self) -> Option<TagStripe> {
+        self.stripe
+    }
+
+    /// The fleet replication path: bind a copy of this evaluator's compiled
+    /// plan to another session and confine it to `stripe` of the partitioned
+    /// tag space.
+    ///
+    /// The session-bound cache is *not* cloned — [`DataId`]s are meaningless
+    /// across sessions; `sess` rebuilds its own constants on first use. The
+    /// stripe is installed by advancing `sess`'s monotone tag counter to the
+    /// stripe base, which is only sound on a session that has never reserved
+    /// a tag (training and k-means use untagged divpub, so a freshly trained
+    /// replica qualifies); a session with tag history is rejected. With
+    /// stripe 0 of 1 this is byte-for-byte the unsharded evaluator.
+    pub fn clone_into_session<S: MpcSession>(
+        &self,
+        sess: &mut S,
+        stripe: TagStripe,
+    ) -> Evaluator {
+        let start = sess.reserve_tags(stripe.base());
+        assert_eq!(
+            start, 0,
+            "fleet replication needs a session with a fresh tag space \
+             (tag counter was {start}, not 0)"
+        );
+        Evaluator {
+            plan: self.plan.clone(),
+            cache: None,
+            last_tags: None,
+            ticks: 0,
+            stripe: Some(stripe),
+        }
     }
 
     /// `[start, end)` of the divpub-tag block reserved by the most recent
@@ -295,6 +390,19 @@ impl Evaluator {
         // arrival sequence into ticks, overall query j always lands on tag
         // block j·m).
         let tag0 = sess.reserve_tags(m * bsz as u64);
+        if let Some(stripe) = self.stripe {
+            // Escaping the stripe would collide with another shard's tag
+            // namespace; at W = u64::MAX / S tags per stripe this cannot
+            // happen before the heat death of the counter, but a violated
+            // invariant here must never reach the wire.
+            assert!(
+                stripe.contains(tag0, tag0 + m * bsz as u64),
+                "tag block [{tag0}, {}) escapes stripe {} of {}",
+                tag0 + m * bsz as u64,
+                stripe.shard(),
+                stripe.shards(),
+            );
+        }
         self.last_tags = Some((tag0, tag0 + m * bsz as u64));
         self.ticks += 1;
         self.ensure_cache(sess, learned_theta);
@@ -454,6 +562,26 @@ mod tests {
         // 2 chain-link divpubs + 1 sum divpub per query
         assert_eq!(plan.divpubs_per_query, 3);
         assert_eq!(plan.chain_rounds(), 2);
+    }
+
+    #[test]
+    fn tag_stripes_partition_the_space() {
+        for shards in [1usize, 2, 3, 4, 7] {
+            let stripes: Vec<TagStripe> =
+                (0..shards).map(|s| TagStripe::new(s, shards)).collect();
+            assert_eq!(stripes[0].base(), 0, "stripe 0 starts at tag 0");
+            for w in stripes.windows(2) {
+                assert_eq!(w[0].limit(), w[1].base(), "stripes tile without gaps");
+            }
+            for s in &stripes {
+                assert!(s.contains(s.base(), s.base() + 1000));
+                assert!(!s.contains(s.limit(), s.limit() + 1));
+                assert_eq!(s.limit() - s.base(), TagStripe::width(shards));
+            }
+        }
+        // a fleet of one owns (almost) the whole space — the unsharded server
+        let whole = TagStripe::new(0, 1);
+        assert!(whole.contains(0, u64::MAX));
     }
 
     #[test]

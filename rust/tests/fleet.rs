@@ -1,0 +1,412 @@
+//! Acceptance pins of the sharded serve fleet (DESIGN.md §Fleet):
+//!
+//! * **Cross-shard byte-identity** — a query pinned to any shard (Sim and
+//!   TCP backends) reveals the bit-identical `root`/`p` of its
+//!   single-session oracle: a fresh identically-seeded session, identical
+//!   training replay, the shard's tag stripe installed, one direct
+//!   `Evaluator::eval_batch` in served order. Stripe 0 starts at tag 0,
+//!   so shard 0 is additionally bit-identical to the *unsharded* oracle.
+//! * **Tag-stripe discipline** — mixed-width ticks on S shards reserve
+//!   ranges that are monotone, pairwise disjoint within the shard, and
+//!   confined to the shard's stripe (the PR 5 freshness test, fleetized).
+//! * **Chaos** — under 8-client concurrent load, killing a shard mid-run
+//!   loses no query: every in-flight and queued query is answered by a
+//!   survivor, post-kill queries pinned at the corpse are served
+//!   elsewhere, and the server drains through a clean shutdown. The TCP
+//!   variant severs real member sockets via the kill-shard command.
+//! * **Dispatch** — unpinned pipelined load spreads over multiple live
+//!   shards (least-loaded routing), with exact report totals.
+//!
+//! Everything runs on `Structure::mini_demo()` — artifact-free, CI-safe.
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::Duration;
+
+use spn_mpc::coordinator::infer::private_eval_batch;
+use spn_mpc::coordinator::serve::train_and_serve_fleet;
+use spn_mpc::coordinator::train::{train, TrainConfig};
+use spn_mpc::datasets;
+use spn_mpc::field::Field;
+use spn_mpc::net::fleet::{FleetReport, ShardSever};
+use spn_mpc::net::serve::{render_query_json, ServeClient, ServeConfig};
+use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::spn::learn;
+use spn_mpc::spn::plan::{EvalPlan, Evaluator, Query, TagStripe};
+use spn_mpc::spn::structure::Structure;
+
+const MEMBERS: usize = 3;
+
+fn mini_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
+    // seeds 5/21: the same shards as serve.rs / integration.rs
+    (datasets::synth_shard_counts(st, n, st.rows, 5, 21), st.rows as u64)
+}
+
+/// A deterministic mixed stream (same shape as serve.rs): mostly
+/// single-evidence marginals, every fifth query fully marginalized.
+fn arrival_queries(st: &Structure, total: usize) -> Vec<Query> {
+    (0..total)
+        .map(|i| {
+            let mut q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+            if i % 5 != 0 {
+                let v = i % st.num_vars;
+                q.x[v] = ((i / 2) % 2) as u8;
+                q.marg[v] = false;
+            }
+            q
+        })
+        .collect()
+}
+
+/// Shard s's single-session oracle: a fresh identically-seeded Sim
+/// session, identical training replay, stripe s of `shards` installed,
+/// one direct eval_batch over the queries that shard served, in served
+/// order. (TCP ≡ Sim byte-identically under one seed, so this is the
+/// oracle for both backends.)
+fn shard_oracle(
+    st: &Structure,
+    n: usize,
+    s: usize,
+    shards: usize,
+    queries: &[Query],
+) -> Vec<i128> {
+    let (counts, rows) = mini_counts(st, n);
+    let theta = learn::default_leaf_theta(st);
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model, _) = train(&mut eng, st, &counts, rows, &TrainConfig::default());
+    let plan = EvalPlan::compile(st, &theta, model.d);
+    let mut ev = Evaluator::new(plan).clone_into_session(&mut eng, TagStripe::new(s, shards));
+    let (roots, _) = ev.eval_batch(&mut eng, queries, &model.sum_w, model.leaf_theta.as_deref());
+    roots
+}
+
+/// The unsharded oracle of serve.rs, for the shard-0 ≡ single-session pin.
+fn plain_oracle(st: &Structure, n: usize, queries: &[Query]) -> Vec<i128> {
+    let (counts, rows) = mini_counts(st, n);
+    let theta = learn::default_leaf_theta(st);
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model, _) = train(&mut eng, st, &counts, rows, &TrainConfig::default());
+    let (roots, _) = private_eval_batch(&mut eng, st, &model, queries, &theta);
+    roots
+}
+
+/// Bind an ephemeral listener, then train + serve a fleet of `shards`
+/// sessions on a background thread. TCP fleets get real sever handles so
+/// `kill-shard` cuts member sockets; dead TCP shards are torn down
+/// lossily after the drain (a leak would hang the test).
+fn spawn_fleet(
+    backend: &'static str,
+    st: Structure,
+    shards: usize,
+    cfg: ServeConfig,
+) -> (std::net::SocketAddr, thread::JoinHandle<FleetReport>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = thread::spawn(move || {
+        let (counts, rows) = mini_counts(&st, MEMBERS);
+        let theta = learn::default_leaf_theta(&st);
+        let tcfg = TrainConfig::default();
+        match backend {
+            "tcp" => {
+                let mut sessions = Vec::with_capacity(shards);
+                let mut severs: Vec<Option<ShardSever>> = Vec::with_capacity(shards);
+                for _ in 0..shards {
+                    let sess =
+                        TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(MEMBERS))
+                            .unwrap();
+                    let sever = sess.sever_handle().unwrap();
+                    severs.push(Some(Box::new(move || sever.sever())));
+                    sessions.push(sess);
+                }
+                let (report, _) = train_and_serve_fleet(
+                    &mut sessions, &st, &counts, rows, &tcfg, &theta, listener, &cfg, severs,
+                )
+                .unwrap();
+                for (s, sess) in sessions.into_iter().enumerate() {
+                    if report.per_shard[s].dead {
+                        sess.shutdown_lossy();
+                    } else {
+                        sess.shutdown().unwrap();
+                    }
+                }
+                report
+            }
+            _ => {
+                let mut sessions: Vec<Engine> = (0..shards)
+                    .map(|_| Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched()))
+                    .collect();
+                let (report, _) = train_and_serve_fleet(
+                    &mut sessions, &st, &counts, rows, &tcfg, &theta, listener, &cfg, Vec::new(),
+                )
+                .unwrap();
+                report
+            }
+        }
+    });
+    (addr, h)
+}
+
+/// A query frame carrying the `"shard"` routing pin.
+fn pinned_query_json(q: &Query, shard: usize) -> String {
+    let mut s = render_query_json(q);
+    s.truncate(s.len() - 1); // drop the closing brace
+    format!("{s},\"shard\":{shard}}}")
+}
+
+#[test]
+fn any_shard_matches_its_single_session_oracle_marginal_and_conditional() {
+    let st = Structure::mini_demo();
+    let shards = 3usize;
+    // one marginal plus the two components of Pr(x0=1 | x1=1) — the
+    // conditional is served as two queries; the client forms the ratio
+    let marginal = Query { x: vec![1, 0], marg: vec![false, true] };
+    let q_xe = Query { x: vec![1, 1], marg: vec![false, false] };
+    let q_e = Query { x: vec![0, 1], marg: vec![true, false] };
+    let served: Vec<Query> = vec![marginal, q_xe, q_e];
+    let cfg =
+        ServeConfig { max_batch: 4, max_wait: Duration::from_millis(2), max_queries: None };
+    for backend in ["sim", "tcp"] {
+        let (addr, h) = spawn_fleet(backend, st.clone(), shards, cfg);
+        let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+        assert_eq!(c.hello.shards, shards, "{backend}: hello reports the fleet width");
+        let mut roots_by_shard: Vec<Vec<i128>> = Vec::new();
+        for s in 0..shards {
+            // closed loop, pinned: shard s serves exactly these three
+            // queries, in this order
+            let mut got = Vec::new();
+            for q in &served {
+                c.send_raw(&pinned_query_json(q, s)).unwrap();
+                let r = c.recv().unwrap();
+                assert_eq!(r.shard, Some(s), "{backend}: pin to live shard {s} is honored");
+                // p is the shortest-roundtrip rendering of root.max(0)/d
+                assert_eq!(r.p, r.root.max(0) as f64 / 256.0);
+                got.push(r.root);
+            }
+            let want = shard_oracle(&st, MEMBERS, s, shards, &served);
+            assert_eq!(
+                got, want,
+                "{backend} shard {s}: served roots must be bit-identical to the \
+                 single-session oracle with stripe {s} of {shards}"
+            );
+            // conditional: the served ratio equals the oracle ratio exactly
+            let ratio = |v: &[i128]| {
+                if v[2] <= 0 {
+                    0.0
+                } else {
+                    (v[1].max(0) as f64 / v[2] as f64).min(1.0)
+                }
+            };
+            assert_eq!(ratio(&got), ratio(&want), "{backend} shard {s}: conditional p");
+            roots_by_shard.push(got);
+        }
+        // stripe 0 starts at tag 0 → shard 0 ≡ the unsharded single session
+        assert_eq!(
+            roots_by_shard[0],
+            plain_oracle(&st, MEMBERS, &served),
+            "{backend}: shard 0 must equal the unsharded oracle bit-for-bit"
+        );
+        // across shards the masks differ (different tag stripes), so roots
+        // may differ by the ±1-per-divpub rounding — never more
+        for s in 1..shards {
+            for (a, b) in roots_by_shard[0].iter().zip(&roots_by_shard[s]) {
+                assert!((a - b).abs() <= 8, "shard {s} root {b} vs shard 0 root {a}");
+            }
+        }
+        ServeClient::connect(&addr.to_string()).unwrap().shutdown_server().unwrap();
+        let report = h.join().unwrap();
+        assert_eq!(report.queries, (shards * served.len()) as u64);
+        assert_eq!(report.shards, shards);
+        assert_eq!(report.dead_shards, 0);
+        assert_eq!(report.redispatched, 0);
+    }
+}
+
+#[test]
+fn mixed_width_ticks_stay_confined_to_each_shards_stripe() {
+    // The PR 5 tag-freshness pin, fleetized: on every shard of a 3-way
+    // fleet, mixed-width ticks reserve monotone, pairwise-disjoint ranges
+    // that never leave the shard's stripe — and the stripes themselves
+    // are disjoint across shards by construction.
+    let st = Structure::mini_demo();
+    let shards = 3usize;
+    let (counts, rows) = mini_counts(&st, MEMBERS);
+    let theta = learn::default_leaf_theta(&st);
+    let widths = [1usize, 3, 2, 7, 1, 5, 4, 2, 6, 1]; // mixed traffic
+    let mut all_ranges: Vec<Vec<(u64, u64)>> = Vec::new();
+    for s in 0..shards {
+        let stripe = TagStripe::new(s, shards);
+        let mut eng = Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched());
+        let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
+        let plan = EvalPlan::compile(&st, &theta, model.d);
+        let m = plan.divpubs_per_query;
+        let mut ev = Evaluator::new(plan).clone_into_session(&mut eng, stripe);
+        assert_eq!(ev.stripe(), Some(stripe));
+        let mut ranges: Vec<(u64, u64)> = Vec::new();
+        for (t, &w) in widths.iter().enumerate() {
+            let batch = arrival_queries(&st, w);
+            let (roots, _) =
+                ev.eval_batch(&mut eng, &batch, &model.sum_w, model.leaf_theta.as_deref());
+            assert_eq!(roots.len(), w);
+            let (start, end) = ev.last_tags().unwrap();
+            assert_eq!(end - start, m * w as u64, "shard {s} tick {t}: width must be m·B");
+            assert!(
+                start >= stripe.base() && end <= stripe.limit(),
+                "shard {s} tick {t}: range [{start}, {end}) escapes its stripe"
+            );
+            if let Some(&(_, prev_end)) = ranges.last() {
+                assert!(start >= prev_end, "shard {s} tick {t}: ranges must be monotone");
+            }
+            ranges.push((start, end));
+        }
+        for i in 0..ranges.len() {
+            for j in i + 1..ranges.len() {
+                let (a, b) = ranges[i];
+                let (c, d) = ranges[j];
+                assert!(b <= c || d <= a, "shard {s}: tick ranges {i}/{j} overlap");
+            }
+        }
+        all_ranges.push(ranges);
+    }
+    for i in 0..shards {
+        for j in i + 1..shards {
+            for &(a, b) in &all_ranges[i] {
+                for &(c, d) in &all_ranges[j] {
+                    assert!(b <= c || d <= a, "shards {i}/{j} share tags — stripes broken");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn killing_a_shard_under_load_degrades_without_losing_queries() {
+    // The chaos pin: 8 concurrent clients, one kills shard 0 mid-run.
+    // Every query — in flight, queued on the corpse, or sent afterwards —
+    // still gets a correct answer from a survivor, and the fleet drains
+    // through a clean shutdown.
+    let st = Structure::mini_demo();
+    let shards = 2usize;
+    let clients = 8usize;
+    let per = 6usize;
+    let cfg =
+        ServeConfig { max_batch: 4, max_wait: Duration::from_millis(2), max_queries: None };
+    let (addr, h) = spawn_fleet("sim", st.clone(), shards, cfg);
+    let all_marg = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+    let mut workers = Vec::new();
+    for t in 0..clients {
+        let a = addr.to_string();
+        let q = all_marg.clone();
+        workers.push(thread::spawn(move || {
+            let mut c = ServeClient::connect(&a).unwrap();
+            let mut out = Vec::new();
+            for i in 0..per {
+                if t == 0 && i == per / 2 {
+                    // mid-run, with the other 7 clients still loading
+                    let mut killer = ServeClient::connect(&a).unwrap();
+                    killer.kill_shard(0).unwrap();
+                }
+                let r = c.query(&q).unwrap();
+                out.push((r.root, r.shard));
+            }
+            out
+        }));
+    }
+    let answered: Vec<(i128, Option<usize>)> =
+        workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+    assert_eq!(answered.len(), clients * per, "no query may be lost to the kill");
+    for &(root, shard) in &answered {
+        // S(∅)·d ≈ d on every shard (masks differ per stripe, value doesn't)
+        assert!((root - 256).abs() <= 32, "root {root} from shard {shard:?}");
+        assert!(matches!(shard, Some(0) | Some(1)));
+    }
+    // the kill has long landed: queries pinned at the corpse must be
+    // served by the survivor
+    let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+    let post = 4usize;
+    for _ in 0..post {
+        c.send_raw(&pinned_query_json(&all_marg, 0)).unwrap();
+        let r = c.recv().unwrap();
+        assert_eq!(r.shard, Some(1), "a dead pin falls back to the survivor");
+        assert!((r.root - 256).abs() <= 32);
+    }
+    drop(c);
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown_server().unwrap();
+    let report = h.join().unwrap();
+    assert_eq!(report.queries, (clients * per + post) as u64, "exact accounting");
+    assert_eq!(report.dead_shards, 1);
+    assert!(report.per_shard[0].dead, "shard 0 is the corpse");
+    assert!(!report.per_shard[1].dead);
+    assert_eq!(
+        report.per_shard[0].queries + report.per_shard[1].queries,
+        report.queries,
+        "per-shard counts partition the total"
+    );
+    // 8 workers + 1 killer + 1 post-kill client + 1 shutdown connection
+    assert_eq!(report.clients, clients as u64 + 3);
+}
+
+#[test]
+fn tcp_fleet_kill_severs_member_sockets_and_survivors_serve() {
+    // The TCP chaos variant: kill-shard cuts shard 0's real member
+    // sockets out from under its session; the fleet degrades and the
+    // dead member set is torn down lossily.
+    let st = Structure::mini_demo();
+    let cfg =
+        ServeConfig { max_batch: 4, max_wait: Duration::from_millis(2), max_queries: None };
+    let (addr, h) = spawn_fleet("tcp", st.clone(), 2, cfg);
+    let q = Query { x: vec![1, 0], marg: vec![false, true] };
+    let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+    let before = {
+        c.send_raw(&pinned_query_json(&q, 0)).unwrap();
+        let r = c.recv().unwrap();
+        assert_eq!(r.shard, Some(0), "shard 0 serves while alive");
+        r.root
+    };
+    let mut killer = ServeClient::connect(&addr.to_string()).unwrap();
+    killer.kill_shard(0).unwrap();
+    for _ in 0..3 {
+        let r = c.query(&q).unwrap();
+        assert_eq!(r.shard, Some(1), "only the survivor serves after the kill");
+        assert!((r.root - before).abs() <= 8, "same query, rounding-close root");
+    }
+    drop(c);
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown_server().unwrap();
+    let report = h.join().unwrap(); // member threads joined in spawn_fleet
+    assert_eq!(report.queries, 4);
+    assert_eq!(report.dead_shards, 1);
+    assert!(report.per_shard[0].dead);
+}
+
+#[test]
+fn unpinned_pipelined_load_spreads_over_live_shards() {
+    // Least-loaded dispatch: one client pipelining a burst must light up
+    // both shards (while a shard evaluates, new arrivals route to the
+    // other), with exact totals and no deaths.
+    let st = Structure::mini_demo();
+    let total = 12usize;
+    let queries = arrival_queries(&st, total);
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        max_queries: Some(total as u64),
+    };
+    let (addr, h) = spawn_fleet("sim", st.clone(), 2, cfg);
+    let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+    for q in &queries {
+        c.send(q).unwrap();
+    }
+    let mut used = [0u64; 2];
+    for _ in 0..total {
+        let r = c.recv().unwrap();
+        let s = r.shard.expect("fleet responses name their shard");
+        used[s] += 1;
+        assert!(r.batch >= 1 && r.batch <= 2);
+    }
+    let report = h.join().unwrap(); // max_queries reached → self-shutdown
+    assert_eq!(report.queries, total as u64);
+    assert_eq!(report.dead_shards, 0);
+    assert!(used[0] > 0 && used[1] > 0, "both shards must serve ({used:?})");
+    assert_eq!(report.per_shard[0].queries, used[0]);
+    assert_eq!(report.per_shard[1].queries, used[1]);
+}
