@@ -15,13 +15,17 @@
 #                     be committed when refreshed (so neither gitignored
 #                     nor removed by `make clean`)
 #   make doc        — cargo doc --no-deps (zero warnings is the contract)
+#   make lint       — spn-lint protocol-contract source pass (L001–L006)
+#                     over rust/src, then its --self-check against the
+#                     committed fixtures. Blocking in CI; zero findings is
+#                     the contract (see DESIGN.md §Static analysis)
 #   make clean      — remove build output and generated artifacts
 
 PY            ?= python3
 ARTIFACTS_DIR := rust/artifacts
 DATASETS      ?= toy,nltcs,jester,baudio,bnetflix
 
-.PHONY: all build test bench bench-json doc artifacts fmt clean
+.PHONY: all build test bench bench-json doc lint artifacts fmt clean
 
 all: build
 
@@ -60,6 +64,10 @@ bench-json: artifacts
 
 doc:
 	cargo doc --no-deps
+
+lint:
+	cargo run --release -p spn-lint -- --root .
+	cargo run --release -p spn-lint -- --self-check --root .
 
 fmt:
 	cargo fmt --all --check

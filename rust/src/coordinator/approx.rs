@@ -113,6 +113,7 @@ pub fn approx_divide_session<S: MpcSession>(
         .map(|i| params.iter().map(|locals| local_scaled_fraction(&locals[i], d, n)).collect())
         .collect();
     let ids = sess.sq2pq_vec(&contribs);
+    sess.mark_outputs(&ids); // §3.2 reveals exactly the summed fractions
     let revealed = sess.reveal_vec(&ids);
     (revealed, sess.stats().delta_since(&before))
 }

@@ -29,7 +29,7 @@
 
 use crate::protocols::division::{divide_many, DivisionConfig};
 use crate::protocols::engine::{DataId, Engine};
-use crate::protocols::session::MpcSession;
+use crate::protocols::session::{MpcSession, SessionPhase};
 use crate::net::NetStats;
 use crate::spn::learn::SMOOTH;
 use crate::spn::structure::Structure;
@@ -124,6 +124,9 @@ pub fn train<S: MpcSession>(
         assert_eq!(c.len(), st.counts_len());
     }
     let before = sess.stats();
+    // Training uses the stream-order untagged divpub throughout (the Eq. 3
+    // pipeline has a fixed call order); tell the sanitizer, if one wraps us.
+    sess.declare_phase(SessionPhase::Training);
     let bmax = rows_total as u128 + SMOOTH as u128;
 
     // Enter the MPC: parties SQ2PQ their local count contributions for every
@@ -177,6 +180,7 @@ pub fn train<S: MpcSession>(
 /// works over any backend and is how the TCP path reads its result out).
 pub fn reveal_weights<S: MpcSession>(sess: &mut S, model: &SharedModel) -> Vec<i128> {
     let f = sess.field();
+    sess.mark_outputs(&model.sum_w); // the learned weights are the deliverable
     let vals = sess.reveal_vec(&model.sum_w);
     vals.into_iter().map(|v| f.to_i128(v)).collect()
 }

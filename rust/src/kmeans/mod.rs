@@ -11,7 +11,7 @@
 //! Coordinates are fixed-point integers scaled by `scale` (e.g. 1000).
 
 use crate::protocols::division::{divide_shared_den, DivisionConfig};
-use crate::protocols::session::MpcSession;
+use crate::protocols::session::{MpcSession, SessionPhase};
 use crate::net::NetStats;
 
 /// One party's local view of the data: points in fixed-point coordinates.
@@ -54,6 +54,8 @@ pub fn private_kmeans<S: MpcSession>(
     assert_eq!(parties.len(), n);
     let dim = init[0].len();
     let before = sess.stats();
+    // k-means divisions ride the Training (stream-order divpub) discipline.
+    sess.declare_phase(SessionPhase::Training);
     let mut centroids: Vec<Vec<i64>> = init.to_vec();
     let total_points: u64 = parties.iter().map(|p| p.points.len() as u64).sum();
     // public bound for the division: count ≤ total points; sums need the
@@ -111,6 +113,7 @@ pub fn private_kmeans<S: MpcSession>(
             let ws = divide_shared_den(sess, &nums, den, total_points as u128 + 1, &cfg.division);
             // reveal the centroid (public per [2])
             let f = sess.field();
+            sess.mark_outputs(&ws);
             let revealed = sess.reveal_vec(&ws);
             let coord: Vec<i64> = revealed
                 .iter()

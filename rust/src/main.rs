@@ -3,7 +3,12 @@
 //! Subcommands:
 //!   train   --dataset <name> [--members N] [--latency MS] [--batched]
 //!           [--learn-leaves] [--native-counts] [--backend sim|tcp]
-//!           — private parameter learning
+//!           [--checked] — private parameter learning
+//!
+//! The `--checked` flag (train/infer/serve/kmeans) wraps the session in
+//! the [`CheckedSession`] protocol sanitizer: tag freshness, reveal
+//! discipline, phase rules and (sim backend) Tables 2–3 accounting
+//! conservation are enforced on every call (DESIGN.md §Static analysis).
 //!   infer   --dataset <name> [--members N] [--evidence v=b,...]
 //!           [--target v=b,...] [--batch queries.jsonl] [--backend sim|tcp]
 //!           — private inference (one query, or a whole batch through the
@@ -42,6 +47,7 @@ use spn_mpc::kmeans::{plain_kmeans, private_kmeans, KmeansConfig, PartyData};
 use spn_mpc::metrics::{group_thousands, render_table, stats_row};
 use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
 use spn_mpc::net::NetConfig;
+use spn_mpc::protocols::checked::CheckedSession;
 use spn_mpc::protocols::division::DivisionConfig;
 use spn_mpc::protocols::engine::{Engine, EngineConfig, Schedule};
 use spn_mpc::runtime;
@@ -179,21 +185,43 @@ fn cmd_train(args: &Args) -> Result<()> {
         learn_leaves: args.has("learn-leaves"),
     };
     let t0 = std::time::Instant::now();
+    let checked = args.has("checked");
     let (d, got, report) = match backend(args)? {
         "tcp" => {
-            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
-            let (model, report) = train(&mut sess, &st, &counts, rows as u64, &cfg);
-            let got = reveal_weights(&mut sess, &model);
-            sess.shutdown()?;
+            let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let out = if checked {
+                let mut cs = CheckedSession::new(sess);
+                let (model, report) = train(&mut cs, &st, &counts, rows as u64, &cfg);
+                let got = reveal_weights(&mut cs, &model);
+                cs.into_inner().shutdown()?;
+                (model.d, got, report)
+            } else {
+                let mut sess = sess;
+                let (model, report) = train(&mut sess, &st, &counts, rows as u64, &cfg);
+                let got = reveal_weights(&mut sess, &model);
+                sess.shutdown()?;
+                (model.d, got, report)
+            };
             println!("[backend] tcp: {n} member threads over loopback");
-            (model.d, got, report)
+            out
         }
         _ => {
-            let mut eng = Engine::new(Field::paper(), engine_config(args, n));
-            let (model, report) = train(&mut eng, &st, &counts, rows as u64, &cfg);
-            (model.d, peek_weights(&eng, &model), report)
+            let ec = engine_config(args, n);
+            let eng = Engine::new(Field::paper(), ec);
+            if checked {
+                let mut cs = CheckedSession::with_sim_accounting(eng, ec.schedule);
+                let (model, report) = train(&mut cs, &st, &counts, rows as u64, &cfg);
+                (model.d, peek_weights(cs.inner(), &model), report)
+            } else {
+                let mut eng = eng;
+                let (model, report) = train(&mut eng, &st, &counts, rows as u64, &cfg);
+                (model.d, peek_weights(&eng, &model), report)
+            }
         }
     };
+    if checked {
+        println!("[checked] CheckedSession sanitizer active: no contract violations");
+    }
     let wall = t0.elapsed().as_secs_f64();
 
     // verification vs centralized oracle
@@ -285,25 +313,48 @@ fn cmd_infer_batch(
     }
     let queries = parse_batch_queries(path, st.num_vars)?;
     let bsz = queries.len();
+    let checked = args.has("checked");
     let (roots, stats, d) = match backend(args)? {
         "tcp" => {
-            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
-            let (model, _) = train(&mut sess, st, counts, rows as u64, &TrainConfig::default());
-            let (roots, stats) = private_eval_batch(&mut sess, st, &model, &queries, theta);
-            let dd = model.d;
-            sess.shutdown()?;
+            let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let out = if checked {
+                let mut cs = CheckedSession::new(sess);
+                let (model, _) = train(&mut cs, st, counts, rows as u64, &TrainConfig::default());
+                let (roots, stats) = private_eval_batch(&mut cs, st, &model, &queries, theta);
+                let dd = model.d;
+                cs.into_inner().shutdown()?;
+                (roots, stats, dd)
+            } else {
+                let mut sess = sess;
+                let (model, _) = train(&mut sess, st, counts, rows as u64, &TrainConfig::default());
+                let (roots, stats) = private_eval_batch(&mut sess, st, &model, &queries, theta);
+                let dd = model.d;
+                sess.shutdown()?;
+                (roots, stats, dd)
+            };
             println!("[backend] tcp: {n} member threads over loopback");
-            (roots, stats, dd)
+            out
         }
         _ => {
             let mut cfg = engine_config(args, n);
             cfg.schedule = Schedule::Batched; // amortization is the point
-            let mut eng = Engine::new(Field::paper(), cfg);
-            let (model, _) = train(&mut eng, st, counts, rows as u64, &TrainConfig::default());
-            let (roots, stats) = private_eval_batch(&mut eng, st, &model, &queries, theta);
-            (roots, stats, model.d)
+            let eng = Engine::new(Field::paper(), cfg);
+            if checked {
+                let mut cs = CheckedSession::with_sim_accounting(eng, cfg.schedule);
+                let (model, _) = train(&mut cs, st, counts, rows as u64, &TrainConfig::default());
+                let (roots, stats) = private_eval_batch(&mut cs, st, &model, &queries, theta);
+                (roots, stats, model.d)
+            } else {
+                let mut eng = eng;
+                let (model, _) = train(&mut eng, st, counts, rows as u64, &TrainConfig::default());
+                let (roots, stats) = private_eval_batch(&mut eng, st, &model, &queries, theta);
+                (roots, stats, model.d)
+            }
         }
     };
+    if checked {
+        println!("[checked] CheckedSession sanitizer active: no contract violations");
+    }
     for (i, (q, &root)) in queries.iter().zip(&roots).enumerate() {
         let ev: Vec<String> = (0..st.num_vars)
             .filter(|&v| !q.marg[v])
@@ -342,31 +393,60 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let target = parse_assign(args.get("target").unwrap_or("0=1"))?;
     let evidence = parse_assign(args.get("evidence").unwrap_or(""))?;
 
+    let checked = args.has("checked");
     let (p, stats, fixed, d) = match backend(args)? {
         "tcp" => {
-            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
-            let (model, _) = train(&mut sess, &st, &counts, rows as u64, &TrainConfig::default());
-            let (p, stats) =
-                private_conditional(&mut sess, &st, &model, &target, &evidence, &theta);
-            let fixed = reveal_weights(&mut sess, &model);
-            sess.shutdown()?;
+            let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let out = if checked {
+                let mut cs = CheckedSession::new(sess);
+                let (model, _) = train(&mut cs, &st, &counts, rows as u64, &TrainConfig::default());
+                let (p, stats) =
+                    private_conditional(&mut cs, &st, &model, &target, &evidence, &theta);
+                let fixed = reveal_weights(&mut cs, &model);
+                cs.into_inner().shutdown()?;
+                (p, stats, fixed, model.d)
+            } else {
+                let mut sess = sess;
+                let (model, _) = train(&mut sess, &st, &counts, rows as u64, &TrainConfig::default());
+                let (p, stats) =
+                    private_conditional(&mut sess, &st, &model, &target, &evidence, &theta);
+                let fixed = reveal_weights(&mut sess, &model);
+                sess.shutdown()?;
+                (p, stats, fixed, model.d)
+            };
             println!("[backend] tcp: {n} member threads over loopback");
-            (p, stats, fixed, model.d)
+            out
         }
         _ => {
             let mut eng_cfg = engine_config(args, n);
             eng_cfg.schedule = Schedule::Batched;
-            let mut eng = Engine::new(Field::paper(), eng_cfg);
-            let (model, _) = train(&mut eng, &st, &counts, rows as u64, &TrainConfig::default());
+            let eng = Engine::new(Field::paper(), eng_cfg);
             // switch to per-op accounting for the inference cost report
-            eng.cfg.schedule =
+            let infer_schedule =
                 if args.has("batched") { Schedule::Batched } else { Schedule::PerOp };
-            let (p, stats) =
-                private_conditional(&mut eng, &st, &model, &target, &evidence, &theta);
-            let fixed = peek_weights(&eng, &model);
-            (p, stats, fixed, model.d)
+            if checked {
+                let mut cs = CheckedSession::with_sim_accounting(eng, eng_cfg.schedule);
+                let (model, _) = train(&mut cs, &st, &counts, rows as u64, &TrainConfig::default());
+                cs.inner_mut().cfg.schedule = infer_schedule;
+                cs.set_sim_schedule(infer_schedule);
+                let (p, stats) =
+                    private_conditional(&mut cs, &st, &model, &target, &evidence, &theta);
+                let fixed = peek_weights(cs.inner(), &model);
+                (p, stats, fixed, model.d)
+            } else {
+                let mut eng = eng;
+                let (model, _) = train(&mut eng, &st, &counts, rows as u64, &TrainConfig::default());
+                eng.cfg.schedule = infer_schedule;
+                let (p, stats) =
+                    private_conditional(&mut eng, &st, &model, &target, &evidence, &theta);
+                let fixed = peek_weights(&eng, &model);
+                (p, stats, fixed, model.d)
+            }
         }
     };
+    if checked {
+        println!("[checked] CheckedSession sanitizer active: no contract violations");
+    }
     println!("Pr({target:?} | {evidence:?}) = {p:.4}");
 
     // oracle comparison
@@ -443,24 +523,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if shards > 1 {
         return serve_fleet_cli(args, &st, n, shards, &counts, rows, &tcfg, &theta, listener, &cfg);
     }
+    let checked = args.has("checked");
     let report = match b {
         "tcp" => {
-            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
-            let (report, _) =
-                train_and_serve(&mut sess, &st, &counts, rows as u64, &tcfg, &theta, listener, &cfg)?;
-            sess.shutdown()?;
+            let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let report = if checked {
+                let mut cs = CheckedSession::new(sess);
+                let (report, _) =
+                    train_and_serve(&mut cs, &st, &counts, rows as u64, &tcfg, &theta, listener, &cfg)?;
+                cs.into_inner().shutdown()?;
+                report
+            } else {
+                let mut sess = sess;
+                let (report, _) =
+                    train_and_serve(&mut sess, &st, &counts, rows as u64, &tcfg, &theta, listener, &cfg)?;
+                sess.shutdown()?;
+                report
+            };
             println!("[backend] tcp: {n} member threads joined");
             report
         }
         _ => {
             let mut ec = engine_config(args, n);
             ec.schedule = Schedule::Batched; // a standing service amortizes
-            let mut eng = Engine::new(Field::paper(), ec);
-            let (report, _) =
-                train_and_serve(&mut eng, &st, &counts, rows as u64, &tcfg, &theta, listener, &cfg)?;
-            report
+            let eng = Engine::new(Field::paper(), ec);
+            if checked {
+                let mut cs = CheckedSession::with_sim_accounting(eng, ec.schedule);
+                let (report, _) =
+                    train_and_serve(&mut cs, &st, &counts, rows as u64, &tcfg, &theta, listener, &cfg)?;
+                report
+            } else {
+                let mut eng = eng;
+                let (report, _) =
+                    train_and_serve(&mut eng, &st, &counts, rows as u64, &tcfg, &theta, listener, &cfg)?;
+                report
+            }
         }
     };
+    if checked {
+        println!("[checked] CheckedSession sanitizer active: no contract violations");
+    }
     println!(
         "serve: clean shutdown — {} queries from {} client(s) in {} batches (max tick {}), \
          {} messages / {} rounds total",
@@ -490,20 +592,37 @@ fn serve_fleet_cli(
     listener: std::net::TcpListener,
     cfg: &ServeConfig,
 ) -> Result<()> {
+    let checked = args.has("checked");
     let report = match backend(args)? {
         "tcp" => {
-            let mut sessions = Vec::with_capacity(shards);
+            let mut raw = Vec::with_capacity(shards);
             let mut severs: Vec<Option<ShardSever>> = Vec::with_capacity(shards);
             for _ in 0..shards {
                 let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+                // Sever handles are taken BEFORE any sanitizer wrapping:
+                // they cut the transport underneath the session and do not
+                // go through the MpcSession vocabulary.
                 let h = sess.sever_handle()?;
                 severs.push(Some(Box::new(move || h.sever())));
-                sessions.push(sess);
+                raw.push(sess);
             }
-            let (report, _) = train_and_serve_fleet(
-                &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, severs,
-            )?;
-            for (s, sess) in sessions.into_iter().enumerate() {
+            let (report, shutdowns) = if checked {
+                let mut sessions: Vec<CheckedSession<TcpSession>> =
+                    raw.into_iter().map(CheckedSession::new).collect();
+                let (report, _) = train_and_serve_fleet(
+                    &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, severs,
+                )?;
+                let inner: Vec<TcpSession> =
+                    sessions.into_iter().map(CheckedSession::into_inner).collect();
+                (report, inner)
+            } else {
+                let mut sessions = raw;
+                let (report, _) = train_and_serve_fleet(
+                    &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, severs,
+                )?;
+                (report, sessions)
+            };
+            for (s, sess) in shutdowns.into_iter().enumerate() {
                 if report.per_shard[s].dead {
                     sess.shutdown_lossy();
                 } else {
@@ -514,19 +633,34 @@ fn serve_fleet_cli(
             report
         }
         _ => {
-            let mut sessions: Vec<Engine> = (0..shards)
-                .map(|_| {
-                    let mut ec = engine_config(args, n);
-                    ec.schedule = Schedule::Batched;
-                    Engine::new(Field::paper(), ec)
-                })
-                .collect();
-            let (report, _) = train_and_serve_fleet(
-                &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, Vec::new(),
-            )?;
-            report
+            let build = |_: usize| {
+                let mut ec = engine_config(args, n);
+                ec.schedule = Schedule::Batched;
+                (Engine::new(Field::paper(), ec), ec.schedule)
+            };
+            if checked {
+                let mut sessions: Vec<CheckedSession<Engine>> = (0..shards)
+                    .map(|s| {
+                        let (eng, sched) = build(s);
+                        CheckedSession::with_sim_accounting(eng, sched)
+                    })
+                    .collect();
+                let (report, _) = train_and_serve_fleet(
+                    &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, Vec::new(),
+                )?;
+                report
+            } else {
+                let mut sessions: Vec<Engine> = (0..shards).map(|s| build(s).0).collect();
+                let (report, _) = train_and_serve_fleet(
+                    &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, Vec::new(),
+                )?;
+                report
+            }
         }
     };
+    if checked {
+        println!("[checked] CheckedSession sanitizer active: no contract violations");
+    }
     println!(
         "serve: clean shutdown — {} queries from {} client(s) in {} batches (max tick {}), \
          {} messages / {} rounds total, {} shard(s) ({} dead, {} re-dispatched)",
@@ -671,19 +805,39 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         (0..k).map(|i| vec![500 + 13 * i as i64, 500 - 17 * i as i64]).collect();
 
     let cfg = KmeansConfig { k, iters: 10, division: DivisionConfig::default() };
+    let checked = args.has("checked");
     let out = match backend(args)? {
         "tcp" => {
-            let mut sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
-            let out = private_kmeans(&mut sess, &parties, &init, &cfg);
-            sess.shutdown()?;
+            let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+            let out = if checked {
+                let mut cs = CheckedSession::new(sess);
+                let out = private_kmeans(&mut cs, &parties, &init, &cfg);
+                cs.into_inner().shutdown()?;
+                out
+            } else {
+                let mut sess = sess;
+                let out = private_kmeans(&mut sess, &parties, &init, &cfg);
+                sess.shutdown()?;
+                out
+            };
             println!("[backend] tcp: {n} member threads over loopback");
             out
         }
         _ => {
-            let mut eng = Engine::new(Field::paper(), engine_config(args, n));
-            private_kmeans(&mut eng, &parties, &init, &cfg)
+            let ec = engine_config(args, n);
+            let eng = Engine::new(Field::paper(), ec);
+            if checked {
+                let mut cs = CheckedSession::with_sim_accounting(eng, ec.schedule);
+                private_kmeans(&mut cs, &parties, &init, &cfg)
+            } else {
+                let mut eng = eng;
+                private_kmeans(&mut eng, &parties, &init, &cfg)
+            }
         }
     };
+    if checked {
+        println!("[checked] CheckedSession sanitizer active: no contract violations");
+    }
     let plain = plain_kmeans(&all, &init, 10);
     println!("private centroids: {:?}", out.centroids);
     println!("plain   centroids: {plain:?}");
@@ -797,6 +951,9 @@ fn main() -> Result<()> {
                  \t--backend sim|tcp (train/infer/serve/kmeans; default sim = accounted\n\
                  \t    simulation, tcp = real member threads over loopback sockets\n\
                  \t    running the same protocol byte-identically)\n\
+                 \t--checked (train/infer/serve/kmeans: wrap the session in the\n\
+                 \t    CheckedSession protocol sanitizer — tag freshness, reveal\n\
+                 \t    discipline, phase rules, accounting conservation)\n\
                  \t(--dataset mini is the in-code demo structure: no artifacts needed)\n\
                  infer flags: --target v=b,... --evidence v=b,...\n\
                  \t--batch FILE.jsonl (one {{\"x\": [...], \"marg\": [...]}} per line:\n\

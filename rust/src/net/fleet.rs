@@ -55,8 +55,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::serve::{
-    json_escape, query_from_json, read_json_msg, render_response, reply, reply_error,
-    ConnShared, ServeConfig,
+    cv_wait, cv_wait_timeout, json_escape, lock, query_from_json, read_json_msg,
+    render_response, reply, reply_error, ConnShared, ServeConfig,
 };
 use super::NetStats;
 use crate::json::Json;
@@ -203,9 +203,13 @@ fn steal_from(q: &mut VecDeque<FPending>, max_batch: usize, victim: usize) -> Ve
     let want = (q.len() / 2).min(max_batch);
     let mut got = Vec::new();
     while got.len() < want {
-        match q.back() {
-            Some(p) if p.pin != Some(victim) => got.push(q.pop_back().unwrap()),
-            _ => break,
+        match q.pop_back() {
+            Some(p) if p.pin != Some(victim) => got.push(p),
+            Some(pinned) => {
+                q.push_back(pinned);
+                break;
+            }
+            None => break,
         }
     }
     got.reverse();
@@ -217,7 +221,7 @@ fn steal_from(q: &mut VecDeque<FPending>, max_batch: usize, victim: usize) -> Ve
 /// kill (the scheduler panics into the death path); `None` means drained
 /// shutdown.
 fn next_fleet_tick(shared: &FleetShared, s: usize, cfg: &ServeConfig) -> Option<Vec<FPending>> {
-    let mut st = shared.state.lock().unwrap();
+    let mut st = lock(&shared.state);
     loop {
         if st.shards[s].dead {
             return None;
@@ -238,16 +242,17 @@ fn next_fleet_tick(shared: &FleetShared, s: usize, cfg: &ServeConfig) -> Option<
         if st.shutdown {
             return None;
         }
-        st = shared.cvar.wait(st).unwrap();
+        st = cv_wait(&shared.cvar, st);
     }
     // coalesce arrivals exactly like the single-session scheduler
+    // lint:allow(L004) — the loop above guarantees the queue is non-empty
     let deadline = st.shards[s].queue.front().unwrap().enqueued + cfg.max_wait;
     while st.shards[s].queue.len() < cfg.max_batch && !st.shutdown && !st.shards[s].killed {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
-        let (g, to) = shared.cvar.wait_timeout(st, deadline - now).unwrap();
+        let (g, to) = cv_wait_timeout(&shared.cvar, st, deadline - now);
         st = g;
         if to.timed_out() {
             break;
@@ -273,7 +278,7 @@ fn shard_scheduler<S: MpcSession>(
         let queries: Vec<Query> = tick.iter().map(|p| p.query.clone()).collect();
         // Read the kill flag *outside* the unwind region: panicking while
         // holding the state lock would poison it for the whole front-end.
-        let killed = { shared.state.lock().unwrap().shards[s].killed };
+        let killed = { lock(&shared.state).shards[s].killed };
         let outcome = catch_unwind(AssertUnwindSafe(|| {
             if killed {
                 panic!("shard {s} killed by command");
@@ -296,17 +301,17 @@ fn shard_scheduler<S: MpcSession>(
                 for p in &tick {
                     if !seen.contains(&p.conn.id) {
                         seen.push(p.conn.id);
-                        let mut t = p.conn.total.lock().unwrap();
+                        let mut t = lock(&p.conn.total);
                         *t = *t + delta;
                     }
                 }
                 for (p, &root) in tick.iter().zip(&roots) {
-                    let total = *p.conn.total.lock().unwrap();
+                    let total = *lock(&p.conn.total);
                     let msg =
                         render_response(p.seq, root, d, tick.len(), &delta, &total, Some(s));
                     reply(&p.conn, &msg);
                 }
-                let mut st = shared.state.lock().unwrap();
+                let mut st = lock(&shared.state);
                 st.shards[s].in_flight = 0;
                 st.answered += tick.len() as u64;
                 if let Some(maxq) = cfg.max_queries {
@@ -324,7 +329,7 @@ fn shard_scheduler<S: MpcSession>(
                 // survivors answer with their own stripe-local tags.
                 let mut lost = Vec::new();
                 {
-                    let mut st = shared.state.lock().unwrap();
+                    let mut st = lock(&shared.state);
                     st.shards[s].dead = true;
                     st.shards[s].in_flight = 0;
                     let mut orphans = tick;
@@ -395,7 +400,7 @@ fn fleet_reader_session(conn: &Arc<ConnShared>, shared: &FleetShared, hello: &st
         if let Some(cmd) = j.opt("cmd") {
             if matches!(cmd, Json::Str(c) if c.as_str() == "shutdown") {
                 reply(conn, "{\"ok\":true}");
-                let mut st = shared.state.lock().unwrap();
+                let mut st = lock(&shared.state);
                 st.shutdown = true;
                 shared.cvar.notify_all();
                 return;
@@ -404,7 +409,7 @@ fn fleet_reader_session(conn: &Arc<ConnShared>, shared: &FleetShared, hello: &st
                 match parse_pin(&j, nshards) {
                     Ok(Some(t)) => {
                         {
-                            let mut st = shared.state.lock().unwrap();
+                            let mut st = lock(&shared.state);
                             st.shards[t].killed = true;
                             shared.cvar.notify_all();
                         }
@@ -445,7 +450,7 @@ fn fleet_reader_session(conn: &Arc<ConnShared>, shared: &FleetShared, hello: &st
         };
         match query_from_json(&j, num_vars) {
             Ok(query) => {
-                let mut st = shared.state.lock().unwrap();
+                let mut st = lock(&shared.state);
                 if st.shutdown {
                     drop(st);
                     if !reply_error(conn, Some(seq), "server is shutting down") {
@@ -490,7 +495,7 @@ fn fleet_reader_loop(
     fleet_reader_session(&conn, &shared, &hello, num_vars);
     // prune, exactly like the single-session reader (queued FPendings hold
     // their own Arc, so in-flight responses still go out)
-    let mut st = shared.state.lock().unwrap();
+    let mut st = lock(&shared.state);
     st.conns.retain(|c| c.id != conn.id);
     st.reader_handles.retain(|h| !h.is_finished());
 }
@@ -507,14 +512,14 @@ fn fleet_listener_loop(
         let stream = match listener.accept() {
             Ok((s, _)) => s,
             Err(_) => {
-                if shared.state.lock().unwrap().shutdown {
+                if lock(&shared.state).shutdown {
                     return;
                 }
                 std::thread::sleep(Duration::from_millis(50));
                 continue;
             }
         };
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock(&shared.state);
         if st.shutdown {
             return;
         }
@@ -599,9 +604,9 @@ pub fn serve_fleet<S: MpcSession + Send>(
         // died: readers keep answering errors and the shutdown command
         // must still drain cleanly.
         {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock(&shared.state);
             while !st.shutdown {
-                st = shared.cvar.wait(st).unwrap();
+                st = cv_wait(&shared.cvar, st);
             }
         }
         for h in handles {
@@ -613,7 +618,7 @@ pub fn serve_fleet<S: MpcSession + Send>(
     let _ = TcpStream::connect(addr);
     lh.join().map_err(|_| anyhow!("fleet listener thread panicked"))?;
     let (conns, readers, clients, redispatched) = {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock(&shared.state);
         (
             std::mem::take(&mut st.conns),
             std::mem::take(&mut st.reader_handles),

@@ -24,6 +24,7 @@ pub mod fleet;
 pub mod serve;
 pub mod tcp;
 pub mod tcp_session;
+pub mod wire;
 
 /// Wire/latency model. Defaults reproduce the paper's setting.
 #[derive(Clone, Copy, Debug)]

@@ -319,6 +319,34 @@ struct Shared {
     cvar: Condvar,
 }
 
+// --- poisoning policy -----------------------------------------------------
+// A panicked serve/fleet thread must not cascade into every other thread
+// that touches the shared queue: the guarded state is plain data, valid at
+// every release point, so lock poisoning is recovered rather than
+// propagated (spn-lint L004 bans bare `.unwrap()` in this layer).
+
+/// Lock a mutex, recovering the data from a poisoned lock.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock`].
+pub(crate) fn cv_wait<'a, T>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`] with the same poison recovery as [`lock`].
+pub(crate) fn cv_wait_timeout<'a, T>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, T>,
+    d: Duration,
+) -> (std::sync::MutexGuard<'a, T>, std::sync::WaitTimeoutResult) {
+    cv.wait_timeout(g, d).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Write one frame to a client. On failure — client gone, or stalled past
 /// [`WRITE_STALL_TIMEOUT`] — the connection is marked dead and closed so
 /// it can never delay the scheduler again. Returns false when dead.
@@ -328,7 +356,7 @@ pub(crate) fn reply(conn: &ConnShared, msg: &str) -> bool {
         return false;
     }
     let ok = {
-        let mut w = conn.w.lock().unwrap();
+        let mut w = lock(&conn.w);
         write_json_msg(&mut *w, msg).is_ok()
     };
     if !ok {
@@ -375,7 +403,7 @@ fn reader_session(conn: &Arc<ConnShared>, shared: &Shared, hello: &str, num_vars
         if let Some(cmd) = j.opt("cmd") {
             if matches!(cmd, Json::Str(c) if c.as_str() == "shutdown") {
                 reply(conn, "{\"ok\":true}");
-                let mut st = shared.state.lock().unwrap();
+                let mut st = lock(&shared.state);
                 st.shutdown = true;
                 shared.cvar.notify_all();
                 return;
@@ -388,7 +416,7 @@ fn reader_session(conn: &Arc<ConnShared>, shared: &Shared, hello: &str, num_vars
         let seq = conn.next_seq.fetch_add(1, Ordering::SeqCst);
         match query_from_json(&j, num_vars) {
             Ok(query) => {
-                let mut st = shared.state.lock().unwrap();
+                let mut st = lock(&shared.state);
                 if st.shutdown {
                     drop(st);
                     if !reply_error(conn, Some(seq), "server is shutting down") {
@@ -419,7 +447,7 @@ fn reader_loop(conn: Arc<ConnShared>, shared: Arc<Shared>, hello: Arc<String>, n
     // not accumulate dead sockets across connection churn. Any Pending
     // still queued holds its own Arc, so the scheduler can finish (or
     // skip, if dead) its responses; the sockets close with the last Arc.
-    let mut st = shared.state.lock().unwrap();
+    let mut st = lock(&shared.state);
     st.conns.retain(|c| c.id != conn.id);
     // Reap join handles of readers that already exited (dropping a
     // finished handle detaches a thread that is already gone). This
@@ -440,7 +468,7 @@ fn listener_loop(
         let stream = match listener.accept() {
             Ok((s, _)) => s,
             Err(_) => {
-                if shared.state.lock().unwrap().shutdown {
+                if lock(&shared.state).shutdown {
                     return;
                 }
                 // transient accept failure (e.g. fd exhaustion): back off
@@ -449,7 +477,7 @@ fn listener_loop(
                 continue;
             }
         };
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock(&shared.state);
         if st.shutdown {
             return; // the wake-up dummy connection (or a too-late client)
         }
@@ -467,7 +495,7 @@ fn listener_loop(
 /// entry has waited `max_wait`. Returns `None` once the queue is empty
 /// *and* the session is shutting down.
 fn next_tick(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Pending>> {
-    let mut st = shared.state.lock().unwrap();
+    let mut st = lock(&shared.state);
     loop {
         if !st.queue.is_empty() {
             break;
@@ -475,15 +503,16 @@ fn next_tick(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Pending>> {
         if st.shutdown {
             return None;
         }
-        st = shared.cvar.wait(st).unwrap();
+        st = cv_wait(&shared.cvar, st);
     }
+    // lint:allow(L004) — the loop above guarantees the queue is non-empty
     let deadline = st.queue.front().unwrap().enqueued + cfg.max_wait;
     while st.queue.len() < cfg.max_batch && !st.shutdown {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
-        let (g, to) = shared.cvar.wait_timeout(st, deadline - now).unwrap();
+        let (g, to) = cv_wait_timeout(&shared.cvar, st, deadline - now);
         st = g;
         if to.timed_out() {
             break;
@@ -545,18 +574,18 @@ pub fn serve<S: MpcSession>(
         for p in &tick {
             if !seen.contains(&p.conn.id) {
                 seen.push(p.conn.id);
-                let mut t = p.conn.total.lock().unwrap();
+                let mut t = lock(&p.conn.total);
                 *t = *t + delta;
             }
         }
         for (p, &root) in tick.iter().zip(&roots) {
-            let total = *p.conn.total.lock().unwrap();
+            let total = *lock(&p.conn.total);
             let msg = render_response(p.seq, root, d, tick.len(), &delta, &total, None);
             reply(&p.conn, &msg); // gone/stalled clients are skipped/killed
         }
         if let Some(maxq) = cfg.max_queries {
             if report.queries >= maxq {
-                let mut st = shared.state.lock().unwrap();
+                let mut st = lock(&shared.state);
                 st.shutdown = true;
                 shared.cvar.notify_all();
             }
@@ -567,7 +596,7 @@ pub fn serve<S: MpcSession>(
     let _ = TcpStream::connect(addr);
     lh.join().map_err(|_| anyhow!("serve listener thread panicked"))?;
     let (conns, readers) = {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock(&shared.state);
         report.clients = st.clients_seen;
         (std::mem::take(&mut st.conns), std::mem::take(&mut st.reader_handles))
     };

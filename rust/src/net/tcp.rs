@@ -20,17 +20,16 @@
 //! sockets and `std::thread` — entirely adequate for the N ≤ 13 member
 //! sessions. [`super::tcp_session::TcpSession`] drives the full
 //! transport-agnostic session vocabulary over these frames.
+//!
+//! wire-layout: v2 (geometry and strides defined in [`super::wire`];
+//! change them there and both sides of the socket move together).
 
 use std::io::{BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
 use anyhow::{bail, Result};
 
-/// Upper bound on elements in one frame (256 MiB of payload — far above
-/// any real exercise). A corrupt or desynced stream whose next 16 bytes
-/// decode to an absurd length then fails as a diagnosable frame error
-/// instead of a multi-GiB `Vec` allocation abort.
-pub const MAX_FRAME_ELEMS: usize = 1 << 24;
+pub use super::wire::{wire_bytes_for, MAX_FRAME_ELEMS};
 
 /// A framed protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -51,11 +50,6 @@ impl Frame {
     pub fn wire_bytes(&self) -> usize {
         wire_bytes_for(self.elems.len())
     }
-}
-
-/// Bytes on the wire for a frame of `n_elems` elements.
-pub fn wire_bytes_for(n_elems: usize) -> usize {
-    16 + n_elems * 16
 }
 
 /// Write one frame from its parts — the allocation-free path: sessions

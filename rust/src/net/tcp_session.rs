@@ -44,8 +44,13 @@
 //! simulated engine remains **authoritative** for the Tables 2–3 numbers
 //! (DESIGN.md §2, §Session API); this module's stats describe the star
 //! deployment as wired.
+//!
+//! wire-layout: v2 (opcodes, frame geometry and stride math live in
+//! [`super::wire`], shared with `tcp.rs` — the compiler keeps both sides
+//! of the socket in lockstep, and spn-lint L005 keeps these markers
+//! paired).
 
-use std::collections::HashMap;
+use std::collections::HashMap; // lint:allow(L003) — d⁻¹ memo, not a share store
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::thread::JoinHandle;
@@ -53,8 +58,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Error, Result};
 
-use super::tcp::{
-    read_frame, read_frame_into, wire_bytes_for, write_frame_parts, Frame,
+use super::tcp::{read_frame, read_frame_into, write_frame_parts, Frame};
+use super::wire::{
+    divpub_q_slot, divpub_r_slot, element_major, party_major, wire_bytes_for, OP_CONST,
+    OP_DIVPUB, OP_DIVPUB_TAGGED, OP_INPUT, OP_LIN, OP_MUL, OP_REVEAL, OP_SHUTDOWN, OP_SQ2PQ,
 };
 use super::NetStats;
 use crate::field::Field;
@@ -63,18 +70,6 @@ use crate::protocols::engine::{reset_scratch, DataId, ShareStore};
 use crate::protocols::session::MpcSession;
 use crate::rng::Prng;
 use crate::sharing::shamir::ShamirCtx;
-
-// Exercise opcodes (first element of a broadcast frame). The vectorized
-// vocabulary of the session API; every op carries its width k.
-const OP_INPUT: u128 = 1;
-const OP_CONST: u128 = 2;
-const OP_LIN: u128 = 3;
-const OP_MUL: u128 = 4;
-const OP_DIVPUB: u128 = 5;
-const OP_REVEAL: u128 = 6;
-const OP_SQ2PQ: u128 = 7;
-const OP_SHUTDOWN: u128 = 8;
-const OP_DIVPUB_TAGGED: u128 = 9;
 
 /// Buffered-framing capacity on both sides of every socket: large enough
 /// that a typical vectorized exercise frame flushes in one write.
@@ -124,7 +119,9 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
     let n = cfg.n;
     let f = field;
     let mut store = ShareStore::new();
-    let mut dinv_cache: HashMap<u128, u128> = HashMap::new();
+    // Per-divisor d⁻¹ memo (a handful of entries), not a per-element
+    // data-plane store; the share slab stays dense.
+    let mut dinv_cache: HashMap<u128, u128> = HashMap::new(); // lint:allow(L003)
     let stream = TcpStream::connect(&addr)?;
     stream.set_nodelay(true)?;
     let mut w = BufWriter::with_capacity(FRAME_BUF, stream.try_clone()?);
@@ -212,7 +209,7 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                 for (ei, &o) in outs.iter().enumerate() {
                     let mut acc = 0u128;
                     for (i, &l) in lambda.iter().enumerate() {
-                        acc = f.add(acc, f.mul(l, sub[ei * n + i]));
+                        acc = f.add(acc, f.mul(l, sub[element_major(ei, n, i)]));
                     }
                     store.put(o as u64, acc);
                 }
@@ -276,7 +273,7 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                     w.flush()?;
                 }
                 read_frame_into(&mut r, &mut body2)?; // my k [w] shares
-                // Phase 4 (local, corrected sign — DESIGN.md §4 erratum):
+                // Phase 4 (local, corrected sign — DESIGN.md §4, the sign erratum):
                 // [v] = ([u] + [q] − [w]) · d⁻¹, with d⁻¹ memoized per
                 // divisor (Fermat inversion is ~74 squarings).
                 let dinv = *dinv_cache.entry(d).or_insert_with(|| f.inv(d % f.p));
@@ -313,7 +310,7 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                 for (ei, &o) in outs.iter().enumerate() {
                     let mut acc = 0u128;
                     for i in 0..n {
-                        acc = f.add(acc, sub[ei * n + i]);
+                        acc = f.add(acc, sub[element_major(ei, n, i)]);
                     }
                     store.put(o as u64, acc);
                 }
@@ -502,7 +499,7 @@ impl TcpSession {
             mine.clear();
             for e in 0..k {
                 for di in dealt.iter() {
-                    mine.push(di[j * k + e]);
+                    mine.push(di[party_major(j, k, e)]);
                 }
             }
             self.tx(j, &mine)?;
@@ -599,8 +596,8 @@ impl TcpSession {
         for j in 0..n {
             mine.clear();
             for e in 0..k {
-                mine.push(alice[e * 2 * n + j]);
-                mine.push(alice[e * 2 * n + n + j]);
+                mine.push(alice[divpub_r_slot(e, n, j)]);
+                mine.push(alice[divpub_q_slot(e, n, j)]);
             }
             self.tx(j, &mine)?;
         }
@@ -621,7 +618,7 @@ impl TcpSession {
         for j in 0..n {
             mine.clear();
             for e in 0..k {
-                mine.push(bob[e * n + j]);
+                mine.push(bob[element_major(e, n, j)]);
             }
             self.tx(j, &mine)?;
         }

@@ -1,0 +1,120 @@
+//! Shared frame-layout vocabulary of the TCP data plane: the opcode
+//! numbers, frame geometry and party-major/element-major stride math that
+//! [`super::tcp`] (framing) and [`super::tcp_session`] (the session
+//! driver + member event loop) must agree on byte-for-byte.
+//!
+//! Both sides of the wire compile against *these* definitions, so a
+//! layout change is a one-file edit the compiler propagates — and the
+//! paired `wire-layout: v2` comment markers in `tcp.rs`/`tcp_session.rs`
+//! (checked by spn-lint L005, see DESIGN.md §Static analysis) force the
+//! prose documentation to move together with it.
+
+/// Version of the frame layout. Bump when any constant or stride rule in
+/// this module changes meaning, and update the `wire-layout: v2` markers
+/// in `tcp.rs` and `tcp_session.rs` to match (spn-lint L005 enforces the
+/// pairing).
+pub const WIRE_LAYOUT_VERSION: u32 = 2;
+
+/// Frame header: `exercise_id: u64 | from: u32 | n_elems: u32`.
+pub const FRAME_HDR_BYTES: usize = 16;
+
+/// One little-endian field element on the wire.
+pub const ELEM_BYTES: usize = 16;
+
+/// Upper bound on elements in one frame (256 MiB of payload — far above
+/// any real exercise). A corrupt or desynced stream whose next 16 bytes
+/// decode to an absurd length then fails as a diagnosable frame error
+/// instead of a multi-GiB `Vec` allocation abort.
+pub const MAX_FRAME_ELEMS: usize = 1 << 24;
+
+/// Bytes on the wire for a frame of `n_elems` elements.
+pub fn wire_bytes_for(n_elems: usize) -> usize {
+    FRAME_HDR_BYTES + n_elems * ELEM_BYTES
+}
+
+// --- exercise opcodes -------------------------------------------------------
+// First element of a broadcast frame. The vectorized vocabulary of the
+// session API; every op carries its width k.
+
+pub const OP_INPUT: u128 = 1;
+pub const OP_CONST: u128 = 2;
+pub const OP_LIN: u128 = 3;
+pub const OP_MUL: u128 = 4;
+pub const OP_DIVPUB: u128 = 5;
+pub const OP_REVEAL: u128 = 6;
+pub const OP_SQ2PQ: u128 = 7;
+pub const OP_SHUTDOWN: u128 = 8;
+pub const OP_DIVPUB_TAGGED: u128 = 9;
+
+// --- stride math ------------------------------------------------------------
+// Dealer→manager frames for input/mul/sq2pq are party-major (the flat
+// batch-dealing layout of `share_batch_into`); manager→member frames are
+// element-major with dealer-inner stride; §3.4 divpub interleaves Alice's
+// two deals per element (the draw-order contract).
+
+/// Party-major dealer frame: slot of member `j`'s sub-share of element
+/// `e` in a width-`k` deal (`dealt[j·k + e]`). `j` is 0-based.
+#[inline]
+pub fn party_major(j: usize, k: usize, e: usize) -> usize {
+    j * k + e
+}
+
+/// Element-major relay frame with dealer-inner stride: slot of dealer
+/// `i`'s sub-share of element `e` in an `n`-member session
+/// (`out[e·n + i]`). `i` is 0-based.
+#[inline]
+pub fn element_major(e: usize, n: usize, i: usize) -> usize {
+    e * n + i
+}
+
+/// Alice's divpub deal, `[r]` half: slot of member `j`'s sub-share of
+/// element `e`'s mask `r` (`alice[e·2n + j]`).
+#[inline]
+pub fn divpub_r_slot(e: usize, n: usize, j: usize) -> usize {
+    e * 2 * n + j
+}
+
+/// Alice's divpub deal, `[q = r mod d]` half: slot of member `j`'s
+/// sub-share of element `e`'s `q` (`alice[e·2n + n + j]`).
+#[inline]
+pub fn divpub_q_slot(e: usize, n: usize, j: usize) -> usize {
+    e * 2 * n + n + j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_geometry() {
+        assert_eq!(wire_bytes_for(0), FRAME_HDR_BYTES);
+        assert_eq!(wire_bytes_for(3), 16 + 48);
+    }
+
+    #[test]
+    fn strides_cover_their_frames_disjointly() {
+        // party-major covers 0..n*k exactly once
+        let (n, k) = (3usize, 4usize);
+        let mut seen = vec![false; n * k];
+        for j in 0..n {
+            for e in 0..k {
+                let s = party_major(j, k, e);
+                assert!(!seen[s]);
+                seen[s] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        // divpub r/q halves tile 0..2nk without overlap
+        let mut seen = vec![false; 2 * n * k];
+        for e in 0..k {
+            for j in 0..n {
+                for s in [divpub_r_slot(e, n, j), divpub_q_slot(e, n, j)] {
+                    assert!(!seen[s]);
+                    seen[s] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        assert_eq!(element_major(2, n, 1), 7);
+    }
+}

@@ -1,0 +1,573 @@
+//! `CheckedSession` — the dynamic MPC protocol sanitizer (DESIGN.md
+//! §Static analysis).
+//!
+//! A zero-cost-when-unused wrapper around any [`MpcSession`] backend that
+//! validates, on every trait call, the contracts the rest of the crate
+//! merely *documents*:
+//!
+//! * **DataId hygiene** — every id a call consumes must have been defined
+//!   by an earlier call on the *same* session (a [`DataId`] from another
+//!   session is a different share space), and no id is defined twice.
+//! * **Reveal discipline** — only ids explicitly marked as protocol
+//!   outputs ([`MpcSession::mark_outputs`]) may be revealed, and each at
+//!   most once. The paper's §4 security argument needs every intermediate
+//!   to stay shared; an accidental `reveal_vec` of a partial product is a
+//!   leak, not a bug you want to find in production.
+//! * **Divpub tag freshness** — every tag passed to
+//!   [`MpcSession::divpub_vec_tagged`] must come from a
+//!   [`MpcSession::reserve_tags`] reservation and is consumed exactly
+//!   once (mask reuse would let Bob difference two openings, §3.4). With
+//!   [`MpcSession::confine_tags`] installed (the fleet's per-shard
+//!   [`TagStripe`](crate::spn::plan::TagStripe) handoff), reservations
+//!   escaping the stripe are violations too.
+//! * **Phase discipline** — after
+//!   [`declare_phase(Inference)`](MpcSession::declare_phase), the
+//!   stream-order untagged [`MpcSession::divpub_vec`] is forbidden: the
+//!   compiled-plan batch evaluator's bit-identity contract only holds for
+//!   tagged truncations (DESIGN.md §Evaluation Plan). Training/k-means
+//!   declare `Training` and keep the untagged path.
+//! * **Accounting conservation** (Sim backend, opt-in) — the
+//!   message/round/exercise delta of every call must equal the closed
+//!   forms behind Tables 2–3 (see [`expected_costs`]). A protocol change
+//!   that silently alters the accounting trips here, next to the call
+//!   that did it, instead of surfacing as a drifted table in a report.
+//!
+//! The wrapper is pure bookkeeping: it never touches shares, never adds
+//! traffic, and calls the inner backend exactly once per operation — so a
+//! checked run is *bit-identical* to an unchecked one (asserted by the
+//! cross-backend suites compiled with `--features checked-session`).
+//! Violations panic with a message starting `CheckedSession violation:` —
+//! the negative tests in `tests/checked.rs` pin one panic per class.
+
+use std::collections::HashSet;
+
+use crate::field::Field;
+use crate::net::NetStats;
+
+use super::engine::{DataId, Schedule};
+use super::session::{MpcSession, SessionPhase};
+
+/// Per-id lifecycle bits in the flag slab (ids are monotone from 1, so a
+/// dense `Vec<u8>` indexed by `DataId.0` replaces a hash set).
+const DEFINED: u8 = 1;
+const REVEALED: u8 = 2;
+const OUTPUT: u8 = 4;
+
+macro_rules! violation {
+    ($($t:tt)*) => {
+        panic!("CheckedSession violation: {}", format_args!($($t)*))
+    };
+}
+
+/// Which closed-form cost row a primitive is checked against.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    /// `input_vec` / `reveal_vec`: star exchange — (3n−1, 3) per slot.
+    Star,
+    /// `lin_vec`: overhead + finish only — (2n, 2) per slot.
+    Lin,
+    /// `mul_vec` / `sq2pq_vec`: full mesh — (n²+n, 3) per slot.
+    Mesh,
+    /// `divpub_vec(_tagged)`: three star phases — (5n−3, 5) per slot.
+    Divpub,
+    /// `constant` / `reserve_tags` / the hooks: no traffic at all.
+    Local,
+}
+
+/// Per-exercise message/round closed forms for an n-member session —
+/// the Tables 2–3 accounting the Sim engine implements (engine.rs is the
+/// normative source; these are its per-slot totals inclusive of the
+/// Appendix-A schedule broadcast and "finished" collection).
+///
+/// Returns `(messages, rounds)` for ONE exercise slot; a k-wide vector op
+/// consumes k slots under `Schedule::PerOp` and 1 under
+/// `Schedule::Batched`, and every non-local slot is one scheduled
+/// exercise.
+fn expected_costs(op: Op, n: u64) -> (u64, u64) {
+    match op {
+        Op::Star => (3 * n - 1, 3),
+        Op::Lin => (2 * n, 2),
+        Op::Mesh => (n * n + n, 3),
+        Op::Divpub => (5 * n - 3, 5),
+        Op::Local => (0, 0),
+    }
+}
+
+/// Opt-in conservation checking against the Sim backend's accounting.
+struct SimAccounting {
+    n: u64,
+    schedule: Schedule,
+}
+
+/// The sanitizing wrapper. Construct with [`CheckedSession::new`] (any
+/// backend) or [`CheckedSession::with_sim_accounting`] (Sim backend, adds
+/// the conservation check), then use it wherever an [`MpcSession`] goes —
+/// it implements the trait by validating and delegating.
+pub struct CheckedSession<S: MpcSession> {
+    inner: S,
+    /// Lifecycle flags indexed by `DataId.0`.
+    flags: Vec<u8>,
+    /// Monotone `[start, end)` tag reservations returned by the inner
+    /// session (the trait contract makes them disjoint and sorted).
+    reserved: Vec<(u64, u64)>,
+    /// Tags already consumed by a tagged divpub.
+    used_tags: HashSet<u64>,
+    phase: SessionPhase,
+    /// `Some((lo, hi))` once [`MpcSession::confine_tags`] was installed.
+    stripe: Option<(u64, u64)>,
+    accounting: Option<SimAccounting>,
+}
+
+impl<S: MpcSession> CheckedSession<S> {
+    /// Wrap `inner` with the contract checks (no accounting conservation —
+    /// correct for any backend, including TCP whose frame counts follow a
+    /// different model).
+    pub fn new(inner: S) -> Self {
+        CheckedSession {
+            inner,
+            flags: Vec::new(),
+            reserved: Vec::new(),
+            used_tags: HashSet::new(),
+            phase: SessionPhase::Training,
+            stripe: None,
+            accounting: None,
+        }
+    }
+
+    /// Wrap a **Sim** session and additionally check that every call's
+    /// message/round/exercise delta matches the Tables 2–3 closed forms
+    /// for `schedule`. The schedule must mirror the engine's
+    /// (`EngineConfig::schedule`); if the run switches schedules mid-way,
+    /// mirror it with [`CheckedSession::set_sim_schedule`].
+    pub fn with_sim_accounting(inner: S, schedule: Schedule) -> Self {
+        let n = inner.n() as u64;
+        let mut s = CheckedSession::new(inner);
+        s.accounting = Some(SimAccounting { n, schedule });
+        s
+    }
+
+    /// Keep the conservation checker in sync after the caller flips the
+    /// engine's schedule between runs. No-op without accounting.
+    pub fn set_sim_schedule(&mut self, schedule: Schedule) {
+        if let Some(acc) = &mut self.accounting {
+            acc.schedule = schedule;
+        }
+    }
+
+    /// The wrapped backend (read-only — e.g. `peek` diagnostics on a Sim
+    /// session).
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    /// The wrapped backend, mutable. Calls made directly on it bypass the
+    /// checks — reserved for out-of-band configuration (e.g. switching
+    /// `cfg.schedule` between runs), not for protocol operations.
+    pub fn inner_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    /// Unwrap, discarding the bookkeeping (e.g. to call a backend-specific
+    /// `shutdown`).
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    fn flag(&self, id: DataId) -> u8 {
+        self.flags.get(id.0 as usize).copied().unwrap_or(0)
+    }
+
+    fn flag_mut(&mut self, id: DataId) -> &mut u8 {
+        let idx = id.0 as usize;
+        if idx >= self.flags.len() {
+            self.flags.resize(idx + 1, 0);
+        }
+        &mut self.flags[idx]
+    }
+
+    /// Record ids a call returned. Backends allocate monotonically, so a
+    /// re-defined id means the caller mixed sessions.
+    fn note_defined(&mut self, ids: &[DataId], op: &str) {
+        for &id in ids {
+            let f = self.flag_mut(id);
+            if *f & DEFINED != 0 {
+                violation!("{op} returned {id:?} which is already defined (mixed sessions?)");
+            }
+            *f |= DEFINED;
+        }
+    }
+
+    /// Every id a call consumes must be live in this session.
+    fn check_inputs<I: IntoIterator<Item = DataId>>(&self, ids: I, op: &str) {
+        for id in ids {
+            if self.flag(id) & DEFINED == 0 {
+                violation!("{op} uses {id:?} before it was defined in this session");
+            }
+        }
+    }
+
+    /// Is `tag` inside some reservation handed out by this session?
+    fn tag_reserved(&self, tag: u64) -> bool {
+        // Reservations are sorted by start (monotone counter): binary
+        // search for the last range starting at or before `tag`.
+        let i = self.reserved.partition_point(|r| r.0 <= tag);
+        i > 0 && tag < self.reserved[i - 1].1
+    }
+
+    /// Run `call` on the inner session; with Sim accounting enabled,
+    /// check the stats delta against the closed form for `op` at vector
+    /// width `k`. Degenerate widths/sessions (k = 0 under PerOp costs
+    /// nothing; n < 2 collapses star/mesh rounds) skip the non-local
+    /// rows rather than special-casing the formulas.
+    fn counted<R>(&mut self, op: Op, k: usize, call: impl FnOnce(&mut S) -> R) -> R {
+        let check = match (&self.accounting, op) {
+            (None, _) => false,
+            (Some(_), Op::Local) => true,
+            (Some(acc), _) => k > 0 && acc.n >= 2,
+        };
+        if !check {
+            return call(&mut self.inner);
+        }
+        let before = self.inner.stats();
+        let out = call(&mut self.inner);
+        let d = self.inner.stats().delta_since(&before);
+        let acc = self.accounting.as_ref().unwrap();
+        let slots = match (op, acc.schedule) {
+            (Op::Local, _) => 0,
+            (_, Schedule::PerOp) => k as u64,
+            (_, Schedule::Batched) => 1,
+        };
+        let (m1, r1) = expected_costs(op, acc.n);
+        let (em, er) = (m1 * slots, r1 * slots);
+        if d.messages != em || d.rounds != er || d.exercises != slots {
+            violation!(
+                "accounting conservation broken for {op:?} (k={k}, n={}, {:?}): \
+                 expected {em} msgs / {er} rounds / {slots} exercises, \
+                 got {} / {} / {}",
+                acc.n,
+                acc.schedule,
+                d.messages,
+                d.rounds,
+                d.exercises,
+            );
+        }
+        out
+    }
+}
+
+impl<S: MpcSession> MpcSession for CheckedSession<S> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn field(&self) -> Field {
+        self.inner.field()
+    }
+
+    fn input_vec(&mut self, owner: usize, values: &[u128]) -> Vec<DataId> {
+        let ids = self.counted(Op::Star, values.len(), |s| s.input_vec(owner, values));
+        self.note_defined(&ids, "input_vec");
+        ids
+    }
+
+    fn constant(&mut self, c: u128) -> DataId {
+        let id = self.counted(Op::Local, 1, |s| s.constant(c));
+        self.note_defined(&[id], "constant");
+        id
+    }
+
+    fn lin_vec(&mut self, ops: &[(i128, Vec<(i128, DataId)>)]) -> Vec<DataId> {
+        self.check_inputs(
+            ops.iter().flat_map(|(_, terms)| terms.iter().map(|&(_, a)| a)),
+            "lin_vec",
+        );
+        let ids = self.counted(Op::Lin, ops.len(), |s| s.lin_vec(ops));
+        self.note_defined(&ids, "lin_vec");
+        ids
+    }
+
+    fn mul_vec(&mut self, pairs: &[(DataId, DataId)]) -> Vec<DataId> {
+        self.check_inputs(pairs.iter().flat_map(|&(a, b)| [a, b]), "mul_vec");
+        let ids = self.counted(Op::Mesh, pairs.len(), |s| s.mul_vec(pairs));
+        self.note_defined(&ids, "mul_vec");
+        ids
+    }
+
+    fn divpub_vec(&mut self, us: &[DataId], d: u128) -> Vec<DataId> {
+        if self.phase == SessionPhase::Inference {
+            violation!(
+                "untagged divpub_vec in the Inference phase — the compiled-plan \
+                 bit-identity contract requires divpub_vec_tagged with fresh tags \
+                 (DESIGN.md §Evaluation Plan)"
+            );
+        }
+        self.check_inputs(us.iter().copied(), "divpub_vec");
+        let ids = self.counted(Op::Divpub, us.len(), |s| s.divpub_vec(us, d));
+        self.note_defined(&ids, "divpub_vec");
+        ids
+    }
+
+    fn divpub_vec_tagged(&mut self, us: &[DataId], d: u128, tags: &[u64]) -> Vec<DataId> {
+        self.check_inputs(us.iter().copied(), "divpub_vec_tagged");
+        for &t in tags {
+            if !self.tag_reserved(t) {
+                violation!("divpub tag {t} was never reserved via reserve_tags");
+            }
+            if let Some((lo, hi)) = self.stripe {
+                if t < lo || t >= hi {
+                    violation!("divpub tag {t} escapes the confined stripe [{lo}, {hi})");
+                }
+            }
+            if !self.used_tags.insert(t) {
+                violation!(
+                    "divpub tag {t} reused — mask reuse lets Bob difference two \
+                     openings (§3.4 freshness contract)"
+                );
+            }
+        }
+        let ids = self.counted(Op::Divpub, us.len(), |s| s.divpub_vec_tagged(us, d, tags));
+        self.note_defined(&ids, "divpub_vec_tagged");
+        ids
+    }
+
+    fn reserve_tags(&mut self, count: u64) -> u64 {
+        let base = self.counted(Op::Local, 0, |s| s.reserve_tags(count));
+        if count > 0 {
+            if let Some((lo, hi)) = self.stripe {
+                let escapes = match base.checked_add(count) {
+                    Some(end) => base < lo || end > hi,
+                    None => true,
+                };
+                if escapes {
+                    violation!(
+                        "tag reservation [{base}, {base}+{count}) escapes the \
+                         confined stripe [{lo}, {hi})"
+                    );
+                }
+            }
+            self.reserved.push((base, base + count));
+        }
+        base
+    }
+
+    fn reveal_vec(&mut self, ids: &[DataId]) -> Vec<u128> {
+        for &id in ids {
+            let f = self.flag(id);
+            if f & DEFINED == 0 {
+                violation!("reveal_vec of {id:?} which was never defined in this session");
+            }
+            if f & OUTPUT == 0 {
+                violation!(
+                    "reveal_vec of {id:?} which is not a marked protocol output — \
+                     intermediates must stay shared (paper §4); call mark_outputs \
+                     first if this value is genuinely part of the functionality"
+                );
+            }
+            if f & REVEALED != 0 {
+                violation!("double reveal of {id:?}");
+            }
+            *self.flag_mut(id) |= REVEALED;
+        }
+        self.counted(Op::Star, ids.len(), |s| s.reveal_vec(ids))
+    }
+
+    fn sq2pq_vec(&mut self, local_values: &[Vec<u128>]) -> Vec<DataId> {
+        let k = local_values.first().map_or(0, |v| v.len());
+        let ids = self.counted(Op::Mesh, k, |s| s.sq2pq_vec(local_values));
+        self.note_defined(&ids, "sq2pq_vec");
+        ids
+    }
+
+    fn stats(&self) -> NetStats {
+        self.inner.stats()
+    }
+
+    fn declare_phase(&mut self, phase: SessionPhase) {
+        self.phase = phase;
+        self.counted(Op::Local, 0, |s| s.declare_phase(phase));
+    }
+
+    fn mark_outputs(&mut self, ids: &[DataId]) {
+        for &id in ids {
+            if self.flag(id) & DEFINED == 0 {
+                violation!("mark_outputs of {id:?} which was never defined in this session");
+            }
+            *self.flag_mut(id) |= OUTPUT;
+        }
+        self.counted(Op::Local, 0, |s| s.mark_outputs(ids));
+    }
+
+    fn confine_tags(&mut self, lo: u64, hi: u64) {
+        if lo > hi {
+            violation!("confine_tags with an inverted stripe [{lo}, {hi})");
+        }
+        self.stripe = Some((lo, hi));
+        self.counted(Op::Local, 0, |s| s.confine_tags(lo, hi));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Field;
+    use crate::protocols::engine::{Engine, EngineConfig};
+
+    fn checked(n: usize) -> CheckedSession<Engine> {
+        let cfg = EngineConfig::new(n);
+        CheckedSession::with_sim_accounting(Engine::new(Field::paper(), cfg), cfg.schedule)
+    }
+
+    /// A clean training-shaped pipeline passes every check under both
+    /// schedules — including the conservation rows for every primitive,
+    /// which pins the closed forms to the engine's actual accounting.
+    #[test]
+    fn clean_pipeline_passes_all_checks() {
+        for batched in [false, true] {
+            let mut cfg = EngineConfig::new(5);
+            if batched {
+                cfg = cfg.batched();
+            }
+            let mut s = CheckedSession::with_sim_accounting(
+                Engine::new(Field::paper(), cfg),
+                cfg.schedule,
+            );
+            s.declare_phase(SessionPhase::Training);
+            let xs = s.input_vec(1, &[40, 50, 60]);
+            let ys = s.input_vec(2, &[7, 8, 9]);
+            let c = s.constant(3);
+            let sums = s.lin_vec(&[(1, vec![(2, xs[0]), (1, c)])]);
+            let pairs: Vec<_> = xs.iter().copied().zip(ys.iter().copied()).collect();
+            let prods = s.mul_vec(&pairs);
+            let qs = s.divpub_vec(&prods, 16); // Training: untagged OK
+            let t0 = s.reserve_tags(3);
+            let tagged = s.divpub_vec_tagged(&prods, 16, &[t0, t0 + 1, t0 + 2]);
+            let locals: Vec<Vec<u128>> = (0..5).map(|i| vec![i as u128 + 1]).collect();
+            let sq = s.sq2pq_vec(&locals);
+            let mut outs = vec![sums[0], sq[0]];
+            outs.extend(&qs);
+            outs.extend(&tagged);
+            s.mark_outputs(&outs);
+            let vals = s.reveal_vec(&outs);
+            assert_eq!(vals[1], 1 + 2 + 3 + 4 + 5);
+            let got = vals[2] as i128;
+            assert!((got - (40 * 7) / 16).abs() <= 1, "divpub is ±1-exact, got {got}");
+        }
+    }
+
+    /// Checked and raw runs of the same call sequence are bit-identical,
+    /// in values and in accounting.
+    #[test]
+    fn checked_run_is_bit_identical_to_raw() {
+        let mut raw = Engine::new(Field::paper(), EngineConfig::new(5));
+        let a = raw.input(1, &[123, 456])[0];
+        let b = raw.input(2, &[9, 9])[0];
+        let p = raw.mul(a, b);
+        let q = raw.divpub(p, 256);
+        let raw_val = raw.reveal(q);
+        let raw_stats = raw.net.stats;
+
+        let mut chk = checked(5);
+        let a = chk.input_vec(1, &[123, 456])[0];
+        let b = chk.input_vec(2, &[9, 9])[0];
+        let p = chk.mul(a, b);
+        let q = chk.divpub(p, 256);
+        chk.mark_outputs(&[q]);
+        let chk_val = chk.reveal(q);
+        assert_eq!(chk_val, raw_val, "sanitizer must not change values");
+        assert_eq!(chk.stats(), raw_stats, "sanitizer must not change accounting");
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn use_before_define_trips() {
+        let mut s = checked(3);
+        let ghost = DataId(999);
+        let _ = s.mul_vec(&[(ghost, ghost)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn reveal_of_unmarked_intermediate_trips() {
+        let mut s = checked(3);
+        let a = s.input_vec(1, &[5])[0];
+        let _ = s.reveal_vec(&[a]); // never marked as an output
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn double_reveal_trips() {
+        let mut s = checked(3);
+        let a = s.input_vec(1, &[5])[0];
+        s.mark_outputs(&[a]);
+        let _ = s.reveal_vec(&[a]);
+        let _ = s.reveal_vec(&[a]);
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn unreserved_tag_trips() {
+        let mut s = checked(3);
+        let a = s.input_vec(1, &[64])[0];
+        let _ = s.divpub_vec_tagged(&[a], 16, &[1234]); // never reserved
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn tag_reuse_trips() {
+        let mut s = checked(3);
+        let a = s.input_vec(1, &[64])[0];
+        let t = s.reserve_tags(1);
+        let v = s.divpub_vec_tagged(&[a], 16, &[t]);
+        let _ = s.divpub_vec_tagged(&v, 16, &[t]); // same tag again
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn untagged_divpub_in_inference_trips() {
+        let mut s = checked(3);
+        let a = s.input_vec(1, &[64])[0];
+        s.declare_phase(SessionPhase::Inference);
+        let _ = s.divpub_vec(&[a], 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn stripe_escape_trips() {
+        let mut s = checked(3);
+        s.confine_tags(1000, 2000);
+        // The engine's monotone counter starts at 0 — the very first
+        // reservation lands below the stripe.
+        let _ = s.reserve_tags(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn accounting_mismatch_trips() {
+        // Tell the checker the engine is PerOp while it actually batches:
+        // a width-2 mul then has 1 exercise where PerOp predicts 2.
+        let mut s = CheckedSession::with_sim_accounting(
+            Engine::new(Field::paper(), EngineConfig::new(3).batched()),
+            Schedule::PerOp,
+        );
+        // Width-1 calls cost the same under both schedules, so these pass…
+        let a = s.input_vec(1, &[3])[0];
+        let b = s.input_vec(2, &[4])[0];
+        // …and the first genuinely vectorized call exposes the lie: one
+        // batched exercise where PerOp predicts two.
+        let _ = s.mul_vec(&[(a, b), (b, a)]);
+    }
+
+    #[test]
+    fn reservations_inside_stripe_pass() {
+        let mut s = checked(3);
+        let a = s.input_vec(1, &[640])[0];
+        // Burn the counter up to the stripe base (the clone_into_session
+        // handoff), then confine and reserve inside.
+        let start = s.reserve_tags(1000);
+        assert_eq!(start, 0);
+        s.confine_tags(1000, 2000);
+        let t = s.reserve_tags(2);
+        assert_eq!(t, 1000);
+        let _ = s.divpub_vec_tagged(&[a], 16, &[t]);
+    }
+}

@@ -14,13 +14,18 @@
 //!   protocol code is generic over: [`SimSession`] (= the engine, with the
 //!   paper-exact accounting) or the real-socket
 //!   [`crate::net::tcp_session::TcpSession`].
+//! * [`checked`]  — the [`CheckedSession`] sanitizer: wraps any backend
+//!   and enforces the tag-freshness, reveal, phase and accounting
+//!   contracts at runtime (DESIGN.md §Static analysis).
 
+pub mod checked;
 pub mod divpub;
 pub mod division;
 pub mod engine;
 pub mod newton;
 pub mod session;
 
+pub use checked::CheckedSession;
 pub use division::DivisionConfig;
 pub use engine::{DataId, Engine, EngineConfig, Schedule};
-pub use session::{MpcSession, SimSession};
+pub use session::{MpcSession, SessionPhase, SimSession};

@@ -29,6 +29,21 @@ use crate::net::NetStats;
 
 use super::engine::{DataId, Engine};
 
+/// Protocol phase a session is operating in, declared by the coordinator
+/// via [`MpcSession::declare_phase`]. Raw backends ignore it; the
+/// [`CheckedSession`](super::checked::CheckedSession) sanitizer uses it to
+/// enforce the divpub mode discipline: **Inference** permits tagged
+/// divpubs only (the order-invariance contract of the compiled-plan batch
+/// evaluator), while **Training** also admits the stream-order untagged
+/// `divpub_vec` the Eq.-(3)/k-means paths use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionPhase {
+    /// Parameter learning / k-means: untagged stream-order divpub allowed.
+    Training,
+    /// Compiled-plan inference: every divpub must carry fresh tags.
+    Inference,
+}
+
 /// The in-process simulation backend is the engine itself; the alias makes
 /// call sites explicit about which side of the Sim/Tcp pair they are on.
 pub type SimSession = Engine;
@@ -96,6 +111,29 @@ pub trait MpcSession {
     /// this is the paper-exact Tables 2–3 accounting; for the TCP backend
     /// it counts the actual relayed frames.
     fn stats(&self) -> NetStats;
+
+    // --- sanitizer hooks (default no-ops; bookkeeping only) --------------
+    // CheckedSession overrides these three to enforce the protocol
+    // contracts; raw backends inherit the no-ops, so calling them costs
+    // nothing and changes nothing — bit-identity by construction.
+
+    /// Declare the protocol phase ([`SessionPhase`]) the following calls
+    /// belong to. Pure bookkeeping: no traffic, no accounting, and raw
+    /// backends ignore it entirely.
+    fn declare_phase(&mut self, _phase: SessionPhase) {}
+
+    /// Mark `ids` as protocol **outputs** — values whose reveal is part of
+    /// the functionality (learned weights, batch roots, centroids). The
+    /// sanitizer only permits revealing marked ids (the paper's §4
+    /// security argument needs intermediates to stay shared). No-op on raw
+    /// backends.
+    fn mark_outputs(&mut self, _ids: &[DataId]) {}
+
+    /// Confine every future tag reservation to `lo..hi` — the fleet's
+    /// per-shard [`crate::spn::plan::TagStripe`] handoff. No-op on raw
+    /// backends (stripes are already disjoint by construction; the
+    /// sanitizer turns an escape into a panic instead of silent reuse).
+    fn confine_tags(&mut self, _lo: u64, _hi: u64) {}
 
     // --- provided scalar conveniences (same delegation as the engine) ----
 

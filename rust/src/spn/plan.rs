@@ -35,7 +35,7 @@
 
 use crate::net::NetStats;
 use crate::protocols::engine::DataId;
-use crate::protocols::session::MpcSession;
+use crate::protocols::session::{MpcSession, SessionPhase};
 use crate::spn::structure::{LayerKind, Structure};
 
 /// A client query: assignment + which variables are marginalized.
@@ -300,6 +300,10 @@ impl Evaluator {
             "fleet replication needs a session with a fresh tag space \
              (tag counter was {start}, not 0)"
         );
+        // Hand the stripe bounds to the session's sanitizer (if one is
+        // wrapped around it): from here on, a reservation escaping the
+        // stripe is a contract violation, not silent cross-shard reuse.
+        sess.confine_tags(stripe.base(), stripe.limit());
         Evaluator {
             plan: self.plan.clone(),
             cache: None,
@@ -382,6 +386,10 @@ impl Evaluator {
             assert_eq!(q.x.len(), self.plan.num_vars, "query width");
             assert_eq!(q.marg.len(), self.plan.num_vars, "marginal mask width");
         }
+        // Batch evaluation is inference by definition: every truncation
+        // below goes through the tagged divpub, and the sanitizer (when
+        // wrapped) may hold us to that.
+        sess.declare_phase(SessionPhase::Inference);
         let m = self.plan.divpubs_per_query;
         // One tag block per query: query b's divpub at plan-order offset o
         // gets tag0 + b·m + o — exactly what b prior single-query calls
@@ -517,6 +525,7 @@ impl Evaluator {
 
         // --- reveal every root to the client -------------------------------
         let roots: Vec<DataId> = prev[..bsz].to_vec(); // root layer width 1
+        sess.mark_outputs(&roots); // the posteriors ARE the functionality
         let vals = sess.reveal_vec(&roots);
         let f = sess.field();
         let out: Vec<i128> = vals.into_iter().map(|v| f.to_i128(v)).collect();

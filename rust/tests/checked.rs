@@ -1,0 +1,196 @@
+//! Integration pins of the `CheckedSession` protocol sanitizer
+//! (DESIGN.md §Static analysis).
+//!
+//! Two halves:
+//!
+//! * **Clean paths** — the real coordinators (training, batched
+//!   inference, k-means) run under full checking *with* Sim accounting
+//!   conservation, and stay bit-identical to an unchecked run. This is
+//!   the "the crate satisfies its own contracts" pin; CI additionally
+//!   re-runs the whole cross-backend / serve / fleet suites with
+//!   `--features checked-session`.
+//! * **Mutant coordinators** — each negative test re-implements a small
+//!   coordinator step with one deliberate contract violation of the kind
+//!   a refactor could plausibly introduce. Every `should_panic`
+//!   expectation pins the *specific* violation message of the class the
+//!   mutant was built to trip, so a test cannot pass by stumbling into a
+//!   different check first.
+
+use spn_mpc::coordinator::infer::{private_eval_batch, Query};
+use spn_mpc::coordinator::train::{reveal_weights, train, TrainConfig};
+use spn_mpc::datasets;
+use spn_mpc::field::Field;
+use spn_mpc::kmeans::{private_kmeans, KmeansConfig, PartyData};
+use spn_mpc::protocols::division::DivisionConfig;
+use spn_mpc::protocols::engine::{Engine, EngineConfig, Schedule};
+use spn_mpc::protocols::{CheckedSession, MpcSession, SessionPhase};
+use spn_mpc::spn::learn;
+use spn_mpc::spn::plan::TagStripe;
+use spn_mpc::spn::structure::Structure;
+
+const MEMBERS: usize = 3;
+
+fn mini_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
+    // seeds 5/21: the same shards as integration.rs / serve.rs
+    (datasets::synth_shard_counts(st, n, st.rows, 5, 21), st.rows as u64)
+}
+
+fn mini_queries(st: &Structure, total: usize) -> Vec<Query> {
+    (0..total)
+        .map(|i| {
+            let mut q = Query { x: vec![0; st.num_vars], marg: vec![true; st.num_vars] };
+            if i % 4 != 0 {
+                let v = i % st.num_vars;
+                q.x[v] = (i % 2) as u8;
+                q.marg[v] = false;
+            }
+            q
+        })
+        .collect()
+}
+
+fn checked_engine(n: usize) -> CheckedSession<Engine> {
+    let cfg = EngineConfig::new(n).batched();
+    CheckedSession::with_sim_accounting(Engine::new(Field::paper(), cfg), cfg.schedule)
+}
+
+// ---------------------------------------------------------------- clean
+
+/// Training + batched inference under full checking (including Tables 2–3
+/// conservation on every call) reveal exactly what an unchecked run
+/// reveals, with exactly the same accounting.
+#[test]
+fn real_coordinators_run_clean_under_full_checking_and_stay_bit_identical() {
+    let st = Structure::mini_demo();
+    let (counts, rows) = mini_counts(&st, MEMBERS);
+    let theta = learn::default_leaf_theta(&st);
+    let queries = mini_queries(&st, 6);
+
+    let mut raw = Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched());
+    let (model, _) = train(&mut raw, &st, &counts, rows, &TrainConfig::default());
+    let want_w = reveal_weights(&mut raw, &model);
+    let (want_roots, _) = private_eval_batch(&mut raw, &st, &model, &queries, &theta);
+    let raw_stats = raw.stats();
+
+    let mut chk = checked_engine(MEMBERS);
+    let (model, _) = train(&mut chk, &st, &counts, rows, &TrainConfig::default());
+    assert_eq!(reveal_weights(&mut chk, &model), want_w, "weights drift under checking");
+    let (roots, _) = private_eval_batch(&mut chk, &st, &model, &queries, &theta);
+    assert_eq!(roots, want_roots, "roots drift under checking");
+    assert_eq!(chk.stats(), raw_stats, "the sanitizer must add zero traffic");
+}
+
+/// Private k-means (the §6 protocol on the same division primitive) is
+/// likewise clean under checking and bit-identical to a raw run.
+#[test]
+fn private_kmeans_runs_clean_under_full_checking() {
+    let n = MEMBERS;
+    let mut parties = vec![PartyData { points: vec![] }; n];
+    for i in 0..12usize {
+        let (cx, cy) = if i % 2 == 0 { (100i64, 120i64) } else { (700, 650) };
+        parties[i % n].points.push(vec![cx + i as i64, cy - i as i64]);
+    }
+    let init = vec![vec![0, 0], vec![800, 800]];
+    let cfg = KmeansConfig { k: 2, iters: 2, division: DivisionConfig::default() };
+
+    let mut raw = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let want = private_kmeans(&mut raw, &parties, &init, &cfg);
+
+    let mut chk = checked_engine(n);
+    let got = private_kmeans(&mut chk, &parties, &init, &cfg);
+    assert_eq!(got.centroids, want.centroids, "centroids drift under checking");
+    assert_eq!(got.assignments_counts, want.assignments_counts);
+    assert_eq!(got.iterations_run, want.iterations_run);
+}
+
+// -------------------------------------------------------------- mutants
+
+/// Mutant training loop that "debugs" by opening the unnormalized total —
+/// a classic leak: the value is protocol-internal, not functionality
+/// output, and the paper's §4 argument needs it to stay shared.
+#[test]
+#[should_panic(expected = "not a marked protocol output")]
+fn mutant_coordinator_revealing_an_intermediate_is_caught() {
+    let mut s = checked_engine(MEMBERS);
+    s.declare_phase(SessionPhase::Training);
+    let shares = s.input_vec(1, &[10, 20, 30]);
+    let total = s.lin_vec(&[(0, shares.iter().map(|&c| (1i128, c)).collect())]);
+    let _ = s.reveal_vec(&[total[0]]);
+}
+
+/// Mutant inference path that falls back to the stream-order untagged
+/// divpub — exactly the regression the compiled-plan bit-identity
+/// contract (DESIGN.md §Evaluation Plan) forbids.
+#[test]
+#[should_panic(expected = "untagged divpub_vec in the Inference phase")]
+fn mutant_inference_skipping_tags_is_caught() {
+    let mut s = checked_engine(MEMBERS);
+    let v = s.input_vec(1, &[640])[0];
+    s.declare_phase(SessionPhase::Inference);
+    let _ = s.divpub_vec(&[v], 256);
+}
+
+/// Mutant scheduler that replays a tick's tag block instead of reserving
+/// a fresh one — §3.4 mask reuse, the freshness contract the serve
+/// scheduler exists to preserve.
+#[test]
+#[should_panic(expected = "reused")]
+fn mutant_scheduler_replaying_a_tag_block_is_caught() {
+    let mut s = checked_engine(MEMBERS);
+    let v = s.input_vec(1, &[640, 320])[0];
+    let base = s.reserve_tags(2);
+    let tick1 = s.divpub_vec_tagged(&[v], 256, &[base]);
+    // tick 2 arrives; the mutant reuses tick 1's block
+    let _ = s.divpub_vec_tagged(&tick1, 256, &[base]);
+}
+
+/// Mutant divpub that invents a tag out of thin air instead of going
+/// through `reserve_tags`.
+#[test]
+#[should_panic(expected = "never reserved")]
+fn mutant_divpub_with_invented_tag_is_caught() {
+    let mut s = checked_engine(MEMBERS);
+    let v = s.input_vec(1, &[640])[0];
+    let _ = s.divpub_vec_tagged(&[v], 256, &[77_777]);
+}
+
+/// Mutant fleet shard that installs its stripe but skips the
+/// `clone_into_session` counter hand-off — its first reservation lands
+/// below the stripe base, i.e. inside some other shard's tag space.
+#[test]
+#[should_panic(expected = "escapes the")]
+fn mutant_shard_escaping_its_stripe_is_caught() {
+    let mut s = checked_engine(MEMBERS);
+    let stripe = TagStripe::new(1, 3);
+    s.confine_tags(stripe.base(), stripe.limit());
+    // engine counter still at 0: this reservation belongs to stripe 0
+    let _ = s.reserve_tags(4);
+}
+
+/// Mutant that smuggles a share handle from one session into another —
+/// the id numbers mean nothing across share spaces.
+#[test]
+#[should_panic(expected = "before it was defined")]
+fn mutant_mixing_two_sessions_is_caught() {
+    let mut a = Engine::new(Field::paper(), EngineConfig::new(MEMBERS));
+    // burn a few ids in A so the smuggled handle is unknown to B
+    let foreign = a.input_vec(1, &[1, 2, 3, 4, 5])[4];
+    let mut b = checked_engine(MEMBERS);
+    let local = b.input_vec(1, &[9])[0];
+    let _ = b.mul_vec(&[(local, foreign)]);
+}
+
+/// Accounting drift at pipeline scale: mis-declare the schedule and the
+/// very first vectorized call of real training breaks conservation
+/// against the Tables 2–3 closed forms.
+#[test]
+#[should_panic(expected = "accounting conservation broken")]
+fn mutant_accounting_schedule_lie_is_caught_by_real_training() {
+    let st = Structure::mini_demo();
+    let (counts, rows) = mini_counts(&st, MEMBERS);
+    let mut s = CheckedSession::with_sim_accounting(
+        Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched()),
+        Schedule::PerOp, // lie: the engine batches
+    );
+    let _ = train(&mut s, &st, &counts, rows, &TrainConfig::default());
+}

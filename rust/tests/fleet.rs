@@ -43,6 +43,39 @@ fn mini_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
     (datasets::synth_shard_counts(st, n, st.rows, 5, 21), st.rows as u64)
 }
 
+// Under `--features checked-session` every *fleet* session runs wrapped in
+// the CheckedSession sanitizer while the oracles stay raw (see serve.rs);
+// by default wrap() is the identity. Sever handles are always taken from
+// the raw TcpSession BEFORE wrapping — severing is transport surgery, not
+// a protocol call, and must bypass the sanitizer.
+#[cfg(feature = "checked-session")]
+use spn_mpc::protocols::checked::CheckedSession;
+#[cfg(feature = "checked-session")]
+fn wrap<S: spn_mpc::protocols::MpcSession>(s: S) -> CheckedSession<S> {
+    CheckedSession::new(s)
+}
+#[cfg(not(feature = "checked-session"))]
+fn wrap<S: spn_mpc::protocols::MpcSession>(s: S) -> S {
+    s
+}
+#[cfg(feature = "checked-session")]
+fn wrap_engine(e: Engine) -> CheckedSession<Engine> {
+    let schedule = e.cfg.schedule;
+    CheckedSession::with_sim_accounting(e, schedule)
+}
+#[cfg(not(feature = "checked-session"))]
+fn wrap_engine(e: Engine) -> Engine {
+    e
+}
+#[cfg(feature = "checked-session")]
+fn unwrap_session<S: spn_mpc::protocols::MpcSession>(s: CheckedSession<S>) -> S {
+    s.into_inner()
+}
+#[cfg(not(feature = "checked-session"))]
+fn unwrap_session<S: spn_mpc::protocols::MpcSession>(s: S) -> S {
+    s
+}
+
 /// A deterministic mixed stream (same shape as serve.rs): mostly
 /// single-evidence marginals, every fifth query fully marginalized.
 fn arrival_queries(st: &Structure, total: usize) -> Vec<Query> {
@@ -115,15 +148,17 @@ fn spawn_fleet(
                     let sess =
                         TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(MEMBERS))
                             .unwrap();
+                    // sever handle from the raw session, BEFORE wrapping
                     let sever = sess.sever_handle().unwrap();
                     severs.push(Some(Box::new(move || sever.sever())));
-                    sessions.push(sess);
+                    sessions.push(wrap(sess));
                 }
                 let (report, _) = train_and_serve_fleet(
                     &mut sessions, &st, &counts, rows, &tcfg, &theta, listener, &cfg, severs,
                 )
                 .unwrap();
                 for (s, sess) in sessions.into_iter().enumerate() {
+                    let sess = unwrap_session(sess);
                     if report.per_shard[s].dead {
                         sess.shutdown_lossy();
                     } else {
@@ -133,8 +168,10 @@ fn spawn_fleet(
                 report
             }
             _ => {
-                let mut sessions: Vec<Engine> = (0..shards)
-                    .map(|_| Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched()))
+                let mut sessions: Vec<_> = (0..shards)
+                    .map(|_| {
+                        wrap_engine(Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched()))
+                    })
                     .collect();
                 let (report, _) = train_and_serve_fleet(
                     &mut sessions, &st, &counts, rows, &tcfg, &theta, listener, &cfg, Vec::new(),
@@ -236,7 +273,7 @@ fn mixed_width_ticks_stay_confined_to_each_shards_stripe() {
     let mut all_ranges: Vec<Vec<(u64, u64)>> = Vec::new();
     for s in 0..shards {
         let stripe = TagStripe::new(s, shards);
-        let mut eng = Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched());
+        let mut eng = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched()));
         let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
         let plan = EvalPlan::compile(&st, &theta, model.d);
         let m = plan.divpubs_per_query;

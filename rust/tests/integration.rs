@@ -152,6 +152,39 @@ fn mini_shard_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
     (datasets::synth_shard_counts(st, n, st.rows, 5, 21), st.rows as u64)
 }
 
+// Under `--features checked-session` every session below runs wrapped in
+// the CheckedSession sanitizer (tag freshness, reveal discipline, phase
+// rules — and, for engines, Tables 2–3 conservation); by default wrap()
+// is the identity. The assertions are the same either way: the suite must
+// pass bit-identically under full checking.
+#[cfg(feature = "checked-session")]
+use spn_mpc::protocols::checked::CheckedSession;
+#[cfg(feature = "checked-session")]
+fn wrap<S: spn_mpc::protocols::MpcSession>(s: S) -> CheckedSession<S> {
+    CheckedSession::new(s)
+}
+#[cfg(not(feature = "checked-session"))]
+fn wrap<S: spn_mpc::protocols::MpcSession>(s: S) -> S {
+    s
+}
+#[cfg(feature = "checked-session")]
+fn wrap_engine(e: Engine) -> CheckedSession<Engine> {
+    let schedule = e.cfg.schedule;
+    CheckedSession::with_sim_accounting(e, schedule)
+}
+#[cfg(not(feature = "checked-session"))]
+fn wrap_engine(e: Engine) -> Engine {
+    e
+}
+#[cfg(feature = "checked-session")]
+fn unwrap_session<S: spn_mpc::protocols::MpcSession>(s: CheckedSession<S>) -> S {
+    s.into_inner()
+}
+#[cfg(not(feature = "checked-session"))]
+fn unwrap_session<S: spn_mpc::protocols::MpcSession>(s: S) -> S {
+    s
+}
+
 #[test]
 fn cross_backend_training_byte_identical() {
     let st = mini_structure();
@@ -163,16 +196,17 @@ fn cross_backend_training_byte_identical() {
     for schedule in [Schedule::PerOp, Schedule::Batched] {
         let mut ec = EngineConfig::new(n);
         ec.schedule = schedule;
-        let mut eng = Engine::new(Field::paper(), ec);
+        let mut eng = wrap_engine(Engine::new(Field::paper(), ec));
         let (model, report) = train(&mut eng, &st, &counts, rows, &cfg);
         assert_eq!(report.divisions, 1);
         weights.push(reveal_weights(&mut eng, &model));
     }
-    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let mut sess =
+        wrap(TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap());
     let (model, report) = train(&mut sess, &st, &counts, rows, &cfg);
     assert_eq!(report.divisions, 1);
     weights.push(reveal_weights(&mut sess, &model));
-    sess.shutdown().unwrap();
+    unwrap_session(sess).shutdown().unwrap();
 
     assert_eq!(weights[0], weights[1], "PerOp vs Batched weights must be byte-identical");
     assert_eq!(weights[0], weights[2], "Sim vs TCP weights must be byte-identical");
@@ -193,16 +227,17 @@ fn cross_backend_inference_byte_identical() {
         Query { x: vec![1, 1], marg: vec![false, false] },
     ];
 
-    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let mut eng = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(n).batched()));
     let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
     let sim_roots: Vec<i128> =
         queries.iter().map(|q| private_eval(&mut eng, &st, &model, q, &theta).0).collect();
 
-    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let mut sess =
+        wrap(TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap());
     let (model, _) = train(&mut sess, &st, &counts, rows, &TrainConfig::default());
     let tcp_roots: Vec<i128> =
         queries.iter().map(|q| private_eval(&mut sess, &st, &model, q, &theta).0).collect();
-    sess.shutdown().unwrap();
+    unwrap_session(sess).shutdown().unwrap();
 
     assert_eq!(sim_roots, tcp_roots, "posteriors must be byte-identical across backends");
     // S(∅)·d ≈ d on both
@@ -227,22 +262,23 @@ fn cross_backend_batched_inference_byte_identical() {
         Query { x: vec![0, 0], marg: vec![false, false] },
     ];
 
-    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let mut eng = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(n).batched()));
     let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
     let (sim_roots, _) = private_eval_batch(&mut eng, &st, &model, &queries, &theta);
 
     // sequential on a fresh identically-seeded engine: bit-identical
-    let mut eng2 = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let mut eng2 = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(n).batched()));
     let (model2, _) = train(&mut eng2, &st, &counts, rows, &TrainConfig::default());
     let seq_roots: Vec<i128> =
         queries.iter().map(|q| private_eval(&mut eng2, &st, &model2, q, &theta).0).collect();
     assert_eq!(sim_roots, seq_roots, "batch must equal sequential bit-for-bit");
 
     // and over real TCP members: byte-identical to the simulation
-    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let mut sess =
+        wrap(TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap());
     let (model_tcp, _) = train(&mut sess, &st, &counts, rows, &TrainConfig::default());
     let (tcp_roots, _) = private_eval_batch(&mut sess, &st, &model_tcp, &queries, &theta);
-    sess.shutdown().unwrap();
+    unwrap_session(sess).shutdown().unwrap();
     assert_eq!(sim_roots, tcp_roots, "batched posteriors must match across backends");
 
     // sanity: S(∅)·d ≈ d
@@ -265,7 +301,7 @@ fn cross_backend_conditional_byte_identical() {
         (&[(0, 1)], &[]),
     ];
 
-    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let mut eng = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(n).batched()));
     let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
     let sim: Vec<(f64, u64)> = cases
         .iter()
@@ -275,13 +311,14 @@ fn cross_backend_conditional_byte_identical() {
         })
         .collect();
 
-    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let mut sess =
+        wrap(TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap());
     let (model_tcp, _) = train(&mut sess, &st, &counts, rows, &TrainConfig::default());
     let tcp: Vec<f64> = cases
         .iter()
         .map(|(x, e)| private_conditional(&mut sess, &st, &model_tcp, x, e, &theta).0)
         .collect();
-    sess.shutdown().unwrap();
+    unwrap_session(sess).shutdown().unwrap();
 
     for (i, ((ps, msgs), pt)) in sim.iter().zip(&tcp).enumerate() {
         assert_eq!(
@@ -303,7 +340,7 @@ fn batched_inference_rounds_strictly_sublinear() {
     let n = 3;
     let (counts, rows) = mini_shard_counts(&st, n);
     let theta = learn::default_leaf_theta(&st);
-    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let mut eng = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(n).batched()));
     let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
 
     let q = Query { x: vec![1, 0], marg: vec![false, true] };
@@ -343,12 +380,13 @@ fn cross_backend_kmeans_byte_identical() {
     let init = vec![vec![0, 0], vec![800, 800]];
     let cfg = KmeansConfig { k: 2, iters: 4, division: DivisionConfig::default() };
 
-    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let mut eng = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(n).batched()));
     let sim = private_kmeans(&mut eng, &parties, &init, &cfg);
 
-    let mut sess = TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+    let mut sess =
+        wrap(TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap());
     let tcp = private_kmeans(&mut sess, &parties, &init, &cfg);
-    sess.shutdown().unwrap();
+    unwrap_session(sess).shutdown().unwrap();
 
     assert_eq!(sim.centroids, tcp.centroids, "centroids must be byte-identical");
     assert_eq!(sim.iterations_run, tcp.iterations_run);

@@ -40,6 +40,38 @@ fn mini_counts(st: &Structure, n: usize) -> (Vec<Vec<u64>>, u64) {
     (datasets::synth_shard_counts(st, n, st.rows, 5, 21), st.rows as u64)
 }
 
+// Under `--features checked-session` the *served* sessions run wrapped in
+// the CheckedSession sanitizer while the oracles stay raw — byte-identity
+// of checked serving against an unchecked oracle is the stronger pin.
+// By default wrap() is the identity.
+#[cfg(feature = "checked-session")]
+use spn_mpc::protocols::checked::CheckedSession;
+#[cfg(feature = "checked-session")]
+fn wrap<S: spn_mpc::protocols::MpcSession>(s: S) -> CheckedSession<S> {
+    CheckedSession::new(s)
+}
+#[cfg(not(feature = "checked-session"))]
+fn wrap<S: spn_mpc::protocols::MpcSession>(s: S) -> S {
+    s
+}
+#[cfg(feature = "checked-session")]
+fn wrap_engine(e: Engine) -> CheckedSession<Engine> {
+    let schedule = e.cfg.schedule;
+    CheckedSession::with_sim_accounting(e, schedule)
+}
+#[cfg(not(feature = "checked-session"))]
+fn wrap_engine(e: Engine) -> Engine {
+    e
+}
+#[cfg(feature = "checked-session")]
+fn unwrap_session<S: spn_mpc::protocols::MpcSession>(s: CheckedSession<S>) -> S {
+    s.into_inner()
+}
+#[cfg(not(feature = "checked-session"))]
+fn unwrap_session<S: spn_mpc::protocols::MpcSession>(s: S) -> S {
+    s
+}
+
 /// A deterministic mixed stream: mostly single-evidence marginals, every
 /// fifth query fully marginalized.
 fn arrival_queries(st: &Structure, total: usize) -> Vec<Query> {
@@ -84,17 +116,18 @@ fn spawn_server(
         let tcfg = TrainConfig::default();
         match backend {
             "tcp" => {
-                let mut sess =
-                    TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap();
+                let mut sess = wrap(
+                    TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap(),
+                );
                 let (report, _) =
                     train_and_serve(&mut sess, &st, &counts, rows, &tcfg, &theta, listener, &cfg)
                         .unwrap();
                 // member threads join here: a leak would hang the test
-                sess.shutdown().unwrap();
+                unwrap_session(sess).shutdown().unwrap();
                 report
             }
             _ => {
-                let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+                let mut eng = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(n).batched()));
                 let (report, _) =
                     train_and_serve(&mut eng, &st, &counts, rows, &tcfg, &theta, listener, &cfg)
                         .unwrap();
@@ -228,7 +261,7 @@ fn scheduler_ticks_reserve_disjoint_monotone_tag_ranges() {
     let st = Structure::mini_demo();
     let (counts, rows) = mini_counts(&st, MEMBERS);
     let theta = learn::default_leaf_theta(&st);
-    let mut eng = Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched());
+    let mut eng = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched()));
     let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
     let plan = EvalPlan::compile(&st, &theta, model.d);
     let m = plan.divpubs_per_query;

@@ -1,0 +1,38 @@
+//! Clean fixture: every line here is a decoy for some skip rule — if any
+//! finding lands in this file, `spn-lint --self-check` fails.
+//!
+//! A comment mentioning divpub_vec( must not trip L001, and this resolving
+//! reference must not trip L006: see DESIGN.md §Session API.
+
+struct Sess;
+
+impl Sess {
+    // A definition line is not a call site (L001 skips `fn divpub_vec`).
+    fn divpub_vec(&mut self, us: &[u64], _d: u128) -> Vec<u64> {
+        us.to_vec()
+    }
+
+    fn reserve_tags(&mut self, _count: u64) -> u64 {
+        0
+    }
+}
+
+fn well_behaved(sess: &mut Sess) -> u64 {
+    // Bound result: L002 must not fire.
+    let base = sess.reserve_tags(3);
+    // Suppressed call: the lint:allow machinery is what keeps this clean.
+    let _ = sess.divpub_vec(&[base], 16); // lint:allow(L001)
+    base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Everything below the file's #[cfg(test)] marker is out of scope —
+    // these would both fire if the cutoff rule broke.
+    fn deliberately_bad(sess: &mut Sess) {
+        sess.divpub_vec(&[1], 4);
+        sess.reserve_tags(9);
+    }
+}

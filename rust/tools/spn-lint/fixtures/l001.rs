@@ -1,0 +1,18 @@
+//! L001 fixture: an untagged divpub in a file outside the division core.
+//! Exactly one finding must come from this file (the self-check asserts
+//! the global L001 count is 1, so the decoys double as skip-rule canaries).
+
+fn evaluate(sess: &mut Sess, prods: &[u64]) -> Vec<u64> {
+    // decoy: divpub_vec( in a comment line
+    sess.divpub_vec(prods, 256)
+}
+
+// decoy: a definition, not a call
+fn divpub_vec(us: &[u64], _d: u128) -> Vec<u64> {
+    us.to_vec()
+}
+
+// decoy: the tagged variant is the sanctioned one
+fn tagged(sess: &mut Sess, prods: &[u64]) -> Vec<u64> {
+    sess.divpub_vec_tagged(prods, 256, 0)
+}

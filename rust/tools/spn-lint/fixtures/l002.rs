@@ -1,0 +1,10 @@
+//! L002 fixture: a tag reservation whose base is thrown away.
+
+fn reserve_and_lose(sess: &mut Sess) {
+    sess.reserve_tags(8);
+}
+
+fn reserve_properly(sess: &mut Sess) -> u64 {
+    let base = sess.reserve_tags(8); // decoy: bound, must not fire
+    base
+}

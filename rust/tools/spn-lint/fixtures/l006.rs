@@ -1,0 +1,4 @@
+//! L006 fixture: a design-doc reference that resolves nowhere.
+
+/// The alias map is described in DESIGN.md §Totally Imaginary Section.
+fn documented() {}

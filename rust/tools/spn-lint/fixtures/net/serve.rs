@@ -1,0 +1,11 @@
+//! L004 fixture: a panicking unwrap on a serve-layer lock.
+//! (A comment saying .unwrap() is a decoy and must not fire.)
+
+fn tick(state: &std::sync::Mutex<u64>) -> u64 {
+    *state.lock().unwrap()
+}
+
+fn guarded(state: &std::sync::Mutex<u64>) -> u64 {
+    // lint:allow(L004) — decoy: suppressed by the preceding line
+    *state.lock().unwrap()
+}

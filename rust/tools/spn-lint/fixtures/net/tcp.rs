@@ -1,0 +1,2 @@
+//! L005 fixture, framing module A.
+//! wire-layout: v2 (agrees with wire.rs)

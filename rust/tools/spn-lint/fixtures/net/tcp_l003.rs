@@ -1,0 +1,7 @@
+//! L003 fixture: a hash map creeping into a `net/tcp` data-plane path.
+
+use std::collections::HashMap;
+
+fn store() -> HashMap<u64, u128> { // lint:allow(L003) — decoy: suppressed
+    HashMap::new() // lint:allow(L003)
+}

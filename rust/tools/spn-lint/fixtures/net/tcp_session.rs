@@ -1,0 +1,2 @@
+//! L005 fixture, framing module B — deliberately one version behind.
+//! wire-layout: v1 (disagrees: the self-check expects L005 to fire here)

@@ -1,0 +1,3 @@
+//! L005 fixture: the shared-layout module pinning the version constant.
+
+pub const WIRE_LAYOUT_VERSION: u32 = 2;

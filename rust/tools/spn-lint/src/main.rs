@@ -1,0 +1,505 @@
+//! spn-lint — the protocol-contract source pass (DESIGN.md §Static
+//! analysis).
+//!
+//! The MPC layer has contracts a type checker cannot see: divpub mask
+//! discipline, tag-handle hygiene, the dense-store data-plane rule, the
+//! no-panic rule in the serve layer, wire-layout agreement across the
+//! framing modules, and design-doc references that must keep resolving.
+//! `CheckedSession` enforces the dynamic half at run time; this tool is
+//! the static half — a dependency-free line scanner (no syn, no crates.io)
+//! that runs in CI as a blocking job.
+//!
+//! Lints:
+//!
+//! * **L001** — untagged `divpub_vec(` call outside the division/Newton
+//!   core (and the session/engine/sanitizer plumbing, and k-means, whose
+//!   training-style divisions are stream-ordered by design). Inference
+//!   paths must use `divpub_vec_tagged` so the ±1 rounding is a function
+//!   of the tag, not of evaluation order.
+//! * **L002** — `.reserve_tags(..);` whose returned base is discarded: a
+//!   reservation nobody addresses is either dead traffic or an off-by-one
+//!   waiting to alias someone else's tags.
+//! * **L003** — `HashMap`/`BTreeMap` in the data plane (`protocols/
+//!   engine.rs`, `sharing/shamir.rs`, `net/tcp*`): share stores and
+//!   hot-path scratch are dense slabs (DESIGN.md §Data plane). Memo
+//!   caches may opt out with `lint:allow(L003)`.
+//! * **L004** — `.unwrap()`/`.expect(` in `net/serve.rs`/`net/fleet.rs`:
+//!   a panicking front-end thread poisons locks for every client. Use the
+//!   poison-recovering helpers; invariant-guarded cases take
+//!   `lint:allow(L004)` with a justification.
+//! * **L005** — the `wire-layout: vN` markers in `net/tcp.rs` and
+//!   `net/tcp_session.rs` must agree with each other and with
+//!   `WIRE_LAYOUT_VERSION` in `net/wire.rs`, and both framing modules
+//!   must carry a marker at all.
+//! * **L006** — every `DESIGN.md §X` reference in source comments must
+//!   resolve to a heading in DESIGN.md (prefix-tolerant both ways, so
+//!   line-wrapped refs and trailing words still match).
+//!
+//! Suppression: `lint:allow(L00X)` on the flagged line or the line
+//! immediately above. Lines after a file's literal `#[cfg(test)]` marker
+//! are not scanned (test modules exercise forbidden shapes on purpose);
+//! `#[cfg(any(test, ...))]` mid-file attributes do NOT end the scan.
+//!
+//! `spn-lint [--root DIR]` scans `DIR/rust/src` against `DIR/DESIGN.md`
+//! and exits 1 on findings. `spn-lint --self-check [--root DIR]` scans
+//! the committed fixtures instead and verifies every lint still fires
+//! where it must (and nowhere in `clean.rs`) — the linter's own test.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+#[derive(Clone, Debug)]
+struct Finding {
+    file: String,
+    line: usize,
+    lint: &'static str,
+    msg: String,
+}
+
+/// One `wire-layout: vN` marker or `WIRE_LAYOUT_VERSION` definition.
+#[derive(Clone, Debug)]
+struct WireMark {
+    file: String,
+    line: usize,
+    version: u64,
+}
+
+/// One `DESIGN.md §X` reference found in a source comment.
+#[derive(Clone, Debug)]
+struct DesignRef {
+    file: String,
+    line: usize,
+    section: String,
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+/// Extract `§...` references from a text segment. A reference runs from a
+/// `§` to the first structural stop character (or end of line); trailing
+/// sentence periods are stripped. Headings are matched prefix-tolerantly,
+/// so a reference truncated by a stop char or extended by trailing words
+/// still resolves.
+fn capture_refs(seg: &str) -> Vec<String> {
+    let chars: Vec<char> = seg.chars().collect();
+    let mut refs = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] != '§' {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        let mut buf = String::new();
+        while j < chars.len() {
+            let c = chars[j];
+            if matches!(c, ')' | ',' | ';' | '"' | ']' | '(' | '`' | '§') {
+                break;
+            }
+            buf.push(c);
+            j += 1;
+        }
+        let r = buf.trim().trim_end_matches('.').trim();
+        if !r.is_empty() {
+            refs.push(r.to_string());
+        }
+        i = j.max(i + 1);
+    }
+    refs
+}
+
+/// Strip a comment prefix (`//!`, `///`, `//`, `*`) from a line, for
+/// reading the continuation of a wrapped `DESIGN.md\n§X` reference.
+fn strip_comment_prefix(line: &str) -> &str {
+    let t = line.trim_start();
+    for p in ["//!", "///", "//", "*"] {
+        if let Some(rest) = t.strip_prefix(p) {
+            return rest.trim_start();
+        }
+    }
+    t
+}
+
+/// Parse `DESIGN.md` headings: every markdown heading line containing `§`.
+fn design_headings(text: &str) -> Vec<String> {
+    text.lines()
+        .filter(|l| l.trim_start().starts_with('#'))
+        .filter_map(|l| {
+            let idx = l.find('§')?;
+            let h = l[idx + '§'.len_utf8()..].trim().trim_end_matches('.').trim();
+            if h.is_empty() {
+                None
+            } else {
+                Some(h.to_string())
+            }
+        })
+        .collect()
+}
+
+fn ref_resolves(r: &str, headings: &[String]) -> bool {
+    headings
+        .iter()
+        .any(|h| r == h || r.starts_with(&format!("{h} ")) || h.starts_with(&format!("{r} ")))
+}
+
+fn parse_digits_at(s: &str) -> Option<u64> {
+    let digits: String = s.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// Scan one file: emit per-line findings and collect the cross-file
+/// L005/L006 raw material.
+fn scan_file(
+    disp: &str,
+    text: &str,
+    findings: &mut Vec<Finding>,
+    wire_marks: &mut Vec<WireMark>,
+    design_refs: &mut Vec<DesignRef>,
+) {
+    let lines: Vec<&str> = text.lines().collect();
+    let l001_allowed = ["protocols/division.rs",
+        "protocols/newton.rs",
+        "protocols/session.rs",
+        "protocols/engine.rs",
+        "protocols/checked.rs"]
+    .iter()
+    .any(|s| disp.ends_with(s))
+        || disp.contains("kmeans");
+    let l003_applies = disp.ends_with("protocols/engine.rs")
+        || disp.ends_with("sharing/shamir.rs")
+        || disp.contains("net/tcp");
+    let l004_applies = disp.ends_with("net/serve.rs") || disp.ends_with("net/fleet.rs");
+    let l005_file = disp.ends_with("net/tcp.rs")
+        || disp.ends_with("net/tcp_session.rs")
+        || disp.ends_with("net/wire.rs");
+
+    for (i, &line) in lines.iter().enumerate() {
+        let trimmed = line.trim();
+        if trimmed == "#[cfg(test)]" {
+            break; // the rest of the file is its test module
+        }
+        let lineno = i + 1;
+        let allowed = |lint: &str| {
+            let marker = format!("lint:allow({lint})");
+            line.contains(&marker) || (i > 0 && lines[i - 1].contains(&marker))
+        };
+
+        // L005 markers and L006 references live in comments, so collect
+        // them before the comment-line skip.
+        if l005_file {
+            if let Some(p) = line.find("wire-layout: v") {
+                if let Some(v) = parse_digits_at(&line[p + "wire-layout: v".len()..]) {
+                    wire_marks.push(WireMark { file: disp.to_string(), line: lineno, version: v });
+                }
+            }
+            if let Some(p) = line.find("WIRE_LAYOUT_VERSION: u32 = ") {
+                if let Some(v) =
+                    parse_digits_at(&line[p + "WIRE_LAYOUT_VERSION: u32 = ".len()..])
+                {
+                    wire_marks.push(WireMark { file: disp.to_string(), line: lineno, version: v });
+                }
+            }
+        }
+        if !allowed("L006") {
+            if let Some(p) = line.find("DESIGN.md") {
+                for r in capture_refs(&line[p + "DESIGN.md".len()..]) {
+                    design_refs.push(DesignRef {
+                        file: disp.to_string(),
+                        line: lineno,
+                        section: r,
+                    });
+                }
+            }
+            if trimmed.ends_with("DESIGN.md") && i + 1 < lines.len() {
+                let cont = strip_comment_prefix(lines[i + 1]);
+                if cont.starts_with('§') {
+                    for r in capture_refs(cont) {
+                        design_refs.push(DesignRef {
+                            file: disp.to_string(),
+                            line: lineno + 1,
+                            section: r,
+                        });
+                    }
+                }
+            }
+        }
+
+        if trimmed.starts_with("//") {
+            continue; // code lints don't apply to comment lines
+        }
+
+        if !l001_allowed
+            && line.contains("divpub_vec(")
+            && !line.contains("fn divpub_vec")
+            && !allowed("L001")
+        {
+            findings.push(Finding {
+                file: disp.to_string(),
+                line: lineno,
+                lint: "L001",
+                msg: "untagged divpub_vec outside the division/newton core — inference \
+                      paths must use divpub_vec_tagged (order-invariant masks, \
+                      DESIGN.md §Evaluation Plan)"
+                    .to_string(),
+            });
+        }
+        if line.contains(".reserve_tags(")
+            && trimmed.ends_with(';')
+            && !line.contains("let ")
+            && !line.contains('=')
+            && !allowed("L002")
+        {
+            findings.push(Finding {
+                file: disp.to_string(),
+                line: lineno,
+                lint: "L002",
+                msg: "reserve_tags result discarded — an unaddressed reservation is dead \
+                      tag space or an aliasing bug; bind the returned base"
+                    .to_string(),
+            });
+        }
+        if l003_applies
+            && (line.contains("HashMap") || line.contains("BTreeMap"))
+            && !allowed("L003")
+        {
+            findings.push(Finding {
+                file: disp.to_string(),
+                line: lineno,
+                lint: "L003",
+                msg: "HashMap/BTreeMap in the data plane — share stores and hot-path \
+                      scratch are dense slabs (DESIGN.md §Data plane); memo caches may \
+                      use lint:allow(L003)"
+                    .to_string(),
+            });
+        }
+        if l004_applies
+            && (line.contains(".unwrap()") || line.contains(".expect("))
+            && !allowed("L004")
+        {
+            findings.push(Finding {
+                file: disp.to_string(),
+                line: lineno,
+                lint: "L004",
+                msg: "panicking unwrap/expect in the serve layer — a dead front-end \
+                      thread poisons shared state for every client; use the \
+                      poison-recovering lock helpers or lint:allow(L004) with an \
+                      invariant justification"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Cross-file L005: every scanned framing module must carry a wire-layout
+/// marker and all markers must agree on one version.
+fn check_wire_layout(scanned: &[String], marks: &[WireMark], findings: &mut Vec<Finding>) {
+    for suffix in ["net/tcp.rs", "net/tcp_session.rs", "net/wire.rs"] {
+        for f in scanned.iter().filter(|f| f.ends_with(suffix)) {
+            if !marks.iter().any(|m| &m.file == f) {
+                findings.push(Finding {
+                    file: f.clone(),
+                    line: 1,
+                    lint: "L005",
+                    msg: "framing module carries no wire-layout marker \
+                          (`wire-layout: vN` or WIRE_LAYOUT_VERSION)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    let versions: BTreeSet<u64> = marks.iter().map(|m| m.version).collect();
+    if versions.len() > 1 {
+        let all: Vec<String> = versions.iter().map(|v| format!("v{v}")).collect();
+        for m in marks {
+            findings.push(Finding {
+                file: m.file.clone(),
+                line: m.line,
+                lint: "L005",
+                msg: format!(
+                    "wire-layout v{} disagrees with other framing modules (saw {}) — \
+                     bump every marker and WIRE_LAYOUT_VERSION together",
+                    m.version,
+                    all.join(", ")
+                ),
+            });
+        }
+    }
+}
+
+fn check_design_refs(refs: &[DesignRef], headings: &[String], findings: &mut Vec<Finding>) {
+    for r in refs {
+        if !ref_resolves(&r.section, headings) {
+            findings.push(Finding {
+                file: r.file.clone(),
+                line: r.line,
+                lint: "L006",
+                msg: format!(
+                    "`DESIGN.md §{}` does not resolve to any DESIGN.md heading — \
+                     fix the reference or add the section",
+                    r.section
+                ),
+            });
+        }
+    }
+}
+
+/// Lint every `.rs` file under `dir` against the headings of `design_md`.
+/// Returns the findings and the number of files scanned.
+fn lint_tree(dir: &Path, design_md: &Path) -> (Vec<Finding>, usize) {
+    let mut files = Vec::new();
+    walk(dir, &mut files);
+    let mut findings = Vec::new();
+    let mut wire_marks = Vec::new();
+    let mut design_refs = Vec::new();
+    let mut scanned = Vec::new();
+    for p in &files {
+        let disp = p.to_string_lossy().replace('\\', "/");
+        let Ok(text) = fs::read_to_string(p) else {
+            findings.push(Finding {
+                file: disp.clone(),
+                line: 1,
+                lint: "L000",
+                msg: "unreadable source file".to_string(),
+            });
+            continue;
+        };
+        scanned.push(disp.clone());
+        scan_file(&disp, &text, &mut findings, &mut wire_marks, &mut design_refs);
+    }
+    check_wire_layout(&scanned, &wire_marks, &mut findings);
+    match fs::read_to_string(design_md) {
+        Ok(text) => check_design_refs(&design_refs, &design_headings(&text), &mut findings),
+        Err(_) => {
+            if !design_refs.is_empty() {
+                findings.push(Finding {
+                    file: design_md.to_string_lossy().into_owned(),
+                    line: 1,
+                    lint: "L006",
+                    msg: format!(
+                        "{} DESIGN.md §-references found but DESIGN.md is unreadable",
+                        design_refs.len()
+                    ),
+                });
+            }
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    (findings, scanned.len())
+}
+
+fn print_findings(findings: &[Finding]) {
+    for f in findings {
+        println!("{}:{}: {} {}", f.file, f.line, f.lint, f.msg);
+    }
+}
+
+fn run(root: &Path) -> ExitCode {
+    let (findings, nfiles) = lint_tree(&root.join("rust/src"), &root.join("DESIGN.md"));
+    print_findings(&findings);
+    if findings.is_empty() {
+        println!("spn-lint: {nfiles} files scanned, clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("spn-lint: {} finding(s) in {nfiles} files", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Prove every lint still fires on its committed fixture (and that the
+/// clean fixture stays clean). The fixture tree mimics the path-suffix
+/// rules, so this also pins the applies-to routing.
+fn self_check(root: &Path) -> ExitCode {
+    let fixtures = root.join("rust/tools/spn-lint/fixtures");
+    if !fixtures.is_dir() {
+        eprintln!("spn-lint --self-check: no fixtures at {}", fixtures.display());
+        return ExitCode::FAILURE;
+    }
+    let (findings, nfiles) = lint_tree(&fixtures, &root.join("DESIGN.md"));
+    let mut failed = false;
+    let expect: &[(&str, &str)] = &[
+        ("L001", "l001.rs"),
+        ("L002", "l002.rs"),
+        ("L003", "net/tcp_l003.rs"),
+        ("L004", "net/serve.rs"),
+        ("L005", "net/tcp_session.rs"),
+        ("L006", "l006.rs"),
+    ];
+    for (lint, file) in expect {
+        if !findings.iter().any(|f| f.lint == *lint && f.file.ends_with(file)) {
+            eprintln!("self-check FAIL: {lint} did not fire in fixture {file}");
+            failed = true;
+        }
+    }
+    // clean.rs holds decoys (comments, fn defs, suppressed calls, test-module
+    // code): any finding there means a skip rule broke.
+    for f in findings.iter().filter(|f| f.file.ends_with("clean.rs")) {
+        eprintln!("self-check FAIL: clean fixture flagged: {}:{}: {} {}", f.file, f.line, f.lint, f.msg);
+        failed = true;
+    }
+    // l001.rs also carries decoys; exactly one real call may fire.
+    let l001 = findings.iter().filter(|f| f.lint == "L001").count();
+    if l001 != 1 {
+        eprintln!("self-check FAIL: expected exactly 1 L001 finding, got {l001}");
+        failed = true;
+    }
+    if failed {
+        print_findings(&findings);
+        eprintln!("spn-lint --self-check: FAILED ({nfiles} fixture files)");
+        ExitCode::FAILURE
+    } else {
+        println!(
+            "spn-lint --self-check: all {} lints fire on fixtures, clean fixture clean \
+             ({nfiles} files, {} findings)",
+            expect.len(),
+            findings.len()
+        );
+        ExitCode::SUCCESS
+    }
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut selfcheck = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("--root needs a path");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--self-check" => selfcheck = true,
+            "--help" | "-h" => {
+                println!(
+                    "spn-lint [--root DIR] [--self-check]\n\
+                     lints DIR/rust/src (L001–L006) against DIR/DESIGN.md;\n\
+                     --self-check runs the linter over its committed fixtures instead"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown flag {other} (try --help)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if selfcheck {
+        self_check(&root)
+    } else {
+        run(&root)
+    }
+}
