@@ -7,8 +7,12 @@
 //! schedule: rounds/query should fall ~B× (the per-step round count is
 //! batch-width independent), which is exactly the claim the integration
 //! test `batched_inference_rounds_strictly_sublinear` pins with a 4×
-//! bound. `--json <path>` writes the `{bench, metric, value}` rows that
-//! `make bench-json` commits as BENCH_infer_batch.json.
+//! bound. Since the round scheduler (DESIGN.md §Round scheduler) the
+//! batch path pipelines one coalesced flight per DAG wave; each width also
+//! runs the stream-order sequential executor as the baseline and reports
+//! the round speedup (`pipelined_round_speedup_b*`). `--json <path>`
+//! writes the `{bench, metric, value}` rows that `make bench-json`
+//! commits as BENCH_infer_batch.json.
 
 use spn_mpc::bench::JsonSink;
 use spn_mpc::coordinator::infer::{private_eval_batch, Query};
@@ -18,6 +22,7 @@ use spn_mpc::field::Field;
 use spn_mpc::metrics::render_table;
 use spn_mpc::net::NetStats;
 use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::spn::plan::{EvalPlan, Evaluator};
 use spn_mpc::spn::structure::Structure;
 use spn_mpc::spn::{eval, learn};
 
@@ -49,6 +54,10 @@ fn queries(st: &Structure, bsz: usize) -> Vec<Query> {
 fn run(name: &str, st: &Structure, json: &mut JsonSink, rows: &mut Vec<Vec<String>>) {
     let (mut eng, model) = trained(st);
     let theta = learn::default_leaf_theta(st);
+    // The sequential stream-order executor is the pipelined dimension's
+    // baseline: same session, same model shares, one round-trip per plan
+    // step instead of one flight per DAG wave.
+    let mut seq_ev = Evaluator::new(EvalPlan::compile(st, &theta, model.d));
     let mut per_query_rounds = Vec::new();
     let mut total = NetStats::default();
     for &bsz in &BATCHES {
@@ -58,16 +67,38 @@ fn run(name: &str, st: &Structure, json: &mut JsonSink, rows: &mut Vec<Vec<Strin
         let wall = t0.elapsed().as_secs_f64();
         total = total + stats;
         assert_eq!(roots.len(), bsz);
+        let (sroots, sstats) =
+            seq_ev.eval_batch_sequential(&mut eng, &qs, &model.sum_w, model.leaf_theta.as_deref());
+        assert_eq!(sroots.len(), bsz);
+        assert!(
+            stats.rounds < sstats.rounds,
+            "{name} B={bsz}: pipelined {} rounds must beat sequential {}",
+            stats.rounds,
+            sstats.rounds
+        );
+        let speedup = sstats.rounds as f64 / stats.rounds as f64;
         let rpq = stats.rounds as f64 / bsz as f64;
         let mpq = stats.messages as f64 / bsz as f64;
         per_query_rounds.push(rpq);
         json.push(&format!("infer_batch_{name}"), &format!("rounds_per_query_b{bsz}"), rpq);
         json.push(&format!("infer_batch_{name}"), &format!("messages_per_query_b{bsz}"), mpq);
         json.push(&format!("infer_batch_{name}"), &format!("wall_s_b{bsz}"), wall);
+        json.push(
+            &format!("infer_batch_{name}"),
+            &format!("sequential_rounds_b{bsz}"),
+            sstats.rounds as f64,
+        );
+        json.push(
+            &format!("infer_batch_{name}"),
+            &format!("pipelined_round_speedup_b{bsz}"),
+            speedup,
+        );
         rows.push(vec![
             name.to_string(),
             bsz.to_string(),
             stats.rounds.to_string(),
+            sstats.rounds.to_string(),
+            format!("{speedup:.1}×"),
             format!("{rpq:.1}"),
             format!("{mpq:.1}"),
             format!("{:.2}", stats.virtual_time_s / bsz as f64),
@@ -104,7 +135,17 @@ fn main() {
         "{}",
         render_table(
             "Batched private inference — rounds amortization (Batched schedule)",
-            &["Structure", "B", "rounds", "rounds/q", "msgs/q", "virtual s/q", "wall s"],
+            &[
+                "Structure",
+                "B",
+                "rounds",
+                "seq rounds",
+                "speedup",
+                "rounds/q",
+                "msgs/q",
+                "virtual s/q",
+                "wall s",
+            ],
             &rows
         )
     );

@@ -8,7 +8,10 @@
 //!   no session around it: the data-plane kernel in isolation;
 //! * `mul_vec` / `divpub_vec` — the full secure primitives through the
 //!   `Batched` simulated engine (`sim`) and through real loopback TCP
-//!   member threads (`tcp`).
+//!   member threads (`tcp`);
+//! * `pipelined mul+div` — the same work coalesced into one flight
+//!   (`submit`/`complete`, DESIGN.md §Round scheduler): identical traffic,
+//!   fewer lockstep synchronization points per call.
 //!
 //! Never skips (no artifacts needed). `--json <path>` writes the
 //! `{bench, metric, value}` rows `make bench-json` commits as
@@ -21,6 +24,7 @@ use spn_mpc::field::Field;
 use spn_mpc::metrics::render_table;
 use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
 use spn_mpc::protocols::engine::{DataId, Engine, EngineConfig};
+use spn_mpc::protocols::flight::FlightOp;
 use spn_mpc::protocols::session::MpcSession;
 use spn_mpc::rng::Prng;
 use spn_mpc::sharing::shamir::ShamirCtx;
@@ -89,6 +93,33 @@ fn bench_session<S: MpcSession>(
         s.per_iter_str(),
     ]);
 
+    // Pipelined dimension (DESIGN.md §Round scheduler): the same mul +
+    // truncation work coalesced into ONE flight — one schedule broadcast,
+    // one ordered relay pass — instead of two standalone round-trips. The
+    // traffic is identical; what this row measures is the wall-clock win
+    // of halving the lockstep synchronization points.
+    let s = time_it(wu, it, || {
+        let t0 = sess.reserve_tags(k as u64);
+        let prods = sess.submit(FlightOp::Mul(pairs.clone()));
+        let tags: Vec<u64> = (0..k as u64).map(|i| t0 + i).collect();
+        let outs = sess.submit(FlightOp::DivpubTagged { us: prods, d: 256, tags });
+        sess.complete();
+        outs[0]
+    });
+    let eps = throughput(&s, k as u64);
+    json.push(
+        "mpc_throughput",
+        &format!("pipelined_mul_div_{backend}_n{n}_k{k}_elems_per_s"),
+        eps,
+    );
+    rows.push(vec![
+        format!("pipelined mul+div (n={n})"),
+        backend.to_string(),
+        k.to_string(),
+        fmt_eps(eps),
+        s.per_iter_str(),
+    ]);
+
     // Correctness anchor: the path we just timed must still reveal the
     // right values (mul is exact; divpub is ±1 around avals[0]·bvals[0]/d).
     let prod = sess.mul_vec(&pairs[..1])[0];
@@ -97,6 +128,15 @@ fn bench_session<S: MpcSession>(
     let got = sess.reveal_int(q);
     let want = (avals[0] * bvals[0] / 256) as i128;
     assert!((got - want).abs() <= 1, "{backend} n={n} k={k}: divpub {got} vs {want}");
+
+    // ... and so must the flight path it raced against.
+    let t0 = sess.reserve_tags(1);
+    let fp = sess.submit(FlightOp::Mul(pairs[..1].to_vec()));
+    let fq = sess.submit(FlightOp::DivpubTagged { us: fp.clone(), d: 256, tags: vec![t0] });
+    sess.complete();
+    assert_eq!(sess.reveal_vec(&fp), vec![avals[0] * bvals[0]], "{backend} n={n} k={k} flight");
+    let got = sess.reveal_int(fq[0]);
+    assert!((got - want).abs() <= 1, "{backend} n={n} k={k}: flight divpub {got} vs {want}");
 }
 
 fn main() {

@@ -5,12 +5,13 @@
 //!
 //! Since the compiled-plan refactor the layer wiring is derived **once**
 //! per structure ([`EvalPlan::compile`]) instead of per query, and whole
-//! query batches evaluate simultaneously: [`private_eval_batch`] coalesces
-//! the k-th chain link / sum reduction of *every* query into single
-//! `mul_vec`/`divpub_vec`/`lin_vec` calls, so secure rounds per query
-//! shrink ~B× while each query's revealed value stays **bit-identical** to
-//! a sequential [`private_eval`] (the tagged-divpub invariant — see
-//! `spn::plan` and DESIGN.md §Evaluation Plan). For a standing service,
+//! query batches evaluate simultaneously: [`private_eval_batch`] walks the
+//! plan's dependency-DAG waves and issues each wave's mul/lin/divpub
+//! traffic as one coalesced flight (`submit`/`complete`), so warm rounds
+//! per batch collapse to `6·critical_depth + 9` while every query's
+//! revealed value stays **bit-identical** to a sequential
+//! [`private_eval`] (the tagged-divpub invariant — see `spn::plan` and
+//! DESIGN.md §Round scheduler). For a standing service,
 //! use [`crate::coordinator::serve`] (the `spn-mpc serve` subcommand),
 //! which compiles once and drives one persistent [`Evaluator`] behind a
 //! micro-batching scheduler; the free functions here recompile per call

@@ -142,6 +142,17 @@ impl Field {
     /// Multiply via 64-bit limb decomposition + 2^128-residue fold.
     #[inline]
     pub fn mul(&self, a: u128, b: u128) -> u128 {
+        self.mul_unreduced(a, b) % self.p
+    }
+
+    /// The limb-fold half of [`Field::mul`] **without the final reduction**:
+    /// returns a value `< 2^119` congruent to `a·b (mod p)`. Deferred-
+    /// reduction kernels (the Vandermonde dealing dot product, §Perf
+    /// iteration 6) sum several of these raw folds — a chunk of 8 stays
+    /// below `2^122`, far from `u128` overflow — and pay one `%` per chunk
+    /// instead of one per term.
+    #[inline]
+    pub fn mul_unreduced(&self, a: u128, b: u128) -> u128 {
         debug_assert!(a < self.p && b < self.p);
         let (a0, a1) = (a & 0xFFFF_FFFF_FFFF_FFFF, a >> 64);
         let (b0, b1) = (b & 0xFFFF_FFFF_FFFF_FFFF, b >> 64);
@@ -156,8 +167,7 @@ impl Field {
         let tmid = mid + (ll >> 64); // < 2^76
         let t0 = tmid & 0xFFFF_FFFF; // 32-bit pieces of the 2^64 coefficient
         let t1 = tmid >> 32; // < 2^44
-        let x = hh * self.r128 + t1 * self.r96 + t0 * self.r64 + l0; // < 2^119
-        x % self.p
+        hh * self.r128 + t1 * self.r96 + t0 * self.r64 + l0 // < 2^119
     }
 
     /// Reduce `x` mod p without division (Barrett). §Perf iteration 2 —
@@ -376,6 +386,19 @@ mod tests {
             assert_eq!(f.mul(a, b), f.mul(b, a));
             assert_eq!(f.mul(a, f.add(b, c)), f.add(f.mul(a, b), f.mul(a, c)));
         });
+    }
+
+    #[test]
+    fn prop_mul_unreduced_is_congruent_and_bounded() {
+        for f in [Field::paper(), Field::new(EXAMPLE_P)] {
+            crate::rng::property(256, |rng| {
+                let a = f.rand(rng);
+                let b = f.rand(rng);
+                let raw = f.mul_unreduced(a, b);
+                assert!(raw < 1u128 << 119);
+                assert_eq!(raw % f.p, f.mul(a, b));
+            });
+        }
     }
 
     #[test]

@@ -21,8 +21,10 @@
 //! sessions. [`super::tcp_session::TcpSession`] drives the full
 //! transport-agnostic session vocabulary over these frames.
 //!
-//! wire-layout: v2 (geometry and strides defined in [`super::wire`];
-//! change them there and both sides of the socket move together).
+//! wire-layout: v3 (geometry and strides defined in [`super::wire`];
+//! change them there and both sides of the socket move together — v3
+//! added the coalesced `OP_FLIGHT` container, whose runs reuse the
+//! standalone op-body layouts unchanged).
 
 use std::io::{BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};

@@ -45,10 +45,21 @@
 //! (DESIGN.md §2, §Session API); this module's stats describe the star
 //! deployment as wired.
 //!
-//! wire-layout: v2 (opcodes, frame geometry and stride math live in
+//! Flights (DESIGN.md §Round scheduler): `MpcSession::submit` stages
+//! mul/lin/tagged-divpub runs into one `OP_FLIGHT` frame;
+//! `MpcSession::complete` broadcasts it once and drives each run's relay
+//! phases in order. Members execute the runs in submission order against
+//! the same share slab, so later runs may read earlier runs' outputs
+//! within one flight; with buffered framing on both sides the instruction
+//! frame and the first run's sub-share replies cross the wire
+//! back-to-back (double-buffered send/recv) instead of paying one
+//! broadcast round-trip per op. Traffic accounting stays per-op — a
+//! flight moves latency, not bytes.
+//!
+//! wire-layout: v3 (opcodes, frame geometry and stride math live in
 //! [`super::wire`], shared with `tcp.rs` — the compiler keeps both sides
 //! of the socket in lockstep, and spn-lint L005 keeps these markers
-//! paired).
+//! paired; v3 added the `OP_FLIGHT` container frame).
 
 use std::collections::HashMap; // lint:allow(L003) — d⁻¹ memo, not a share store
 use std::io::{BufReader, BufWriter};
@@ -60,13 +71,15 @@ use anyhow::{anyhow, bail, Error, Result};
 
 use super::tcp::{read_frame, read_frame_into, write_frame_parts, Frame};
 use super::wire::{
-    divpub_q_slot, divpub_r_slot, element_major, party_major, wire_bytes_for, OP_CONST,
-    OP_DIVPUB, OP_DIVPUB_TAGGED, OP_INPUT, OP_LIN, OP_MUL, OP_REVEAL, OP_SHUTDOWN, OP_SQ2PQ,
+    divpub_q_slot, divpub_r_slot, element_major, flight_run_len, party_major, wire_bytes_for,
+    OP_CONST, OP_DIVPUB, OP_DIVPUB_TAGGED, OP_FLIGHT, OP_INPUT, OP_LIN, OP_MUL, OP_REVEAL,
+    OP_SHUTDOWN, OP_SQ2PQ,
 };
 use super::NetStats;
 use crate::field::Field;
-use crate::protocols::divpub::{sample_r, tagged_r};
+use crate::protocols::divpub::{sample_r, tagged_r_many};
 use crate::protocols::engine::{reset_scratch, DataId, ShareStore};
+use crate::protocols::flight::FlightOp;
 use crate::protocols::session::MpcSession;
 use crate::rng::Prng;
 use crate::sharing::shamir::ShamirCtx;
@@ -136,6 +149,9 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
     let mut body2 = Frame::empty(); // second relayed read (divpub z'/w)
     let mut dealt: Vec<u128> = Vec::new(); // outbound sub-share scratch
     let mut vals: Vec<u128> = Vec::new(); // local products / z' shares
+    let mut runs: Vec<(usize, usize)> = Vec::new(); // flight run bounds
+    let mut tag_buf: Vec<u64> = Vec::new(); // Alice: a divpub's tag slice
+    let mut mask_buf: Vec<u128> = Vec::new(); // Alice: its batched PRF masks
 
     let get = |store: &ShareStore, a: u128| -> Result<u128> {
         store.get(a as u64).ok_or_else(|| anyhow!("member {id} missing id {a}"))
@@ -143,7 +159,30 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
 
     loop {
         read_frame_into(&mut r, &mut ex)?;
-        let e = &ex.elems;
+        // Split an OP_FLIGHT container (wire-layout v3) into its runs; a
+        // plain exercise is one run covering the whole frame. Runs execute
+        // in order against the same share slab, which is what lets a later
+        // run read an earlier run's outputs within one flight.
+        let elems = std::mem::take(&mut ex.elems);
+        runs.clear();
+        if elems[0] == OP_FLIGHT {
+            let n_runs = elems[1] as usize;
+            let mut i = 2;
+            for _ in 0..n_runs {
+                let len = flight_run_len(&elems[i..]).ok_or_else(|| {
+                    anyhow!("member {id}: unflightable opcode {} inside a flight", elems[i])
+                })?;
+                runs.push((i, i + len));
+                i += len;
+            }
+            if i != elems.len() {
+                bail!("member {id}: flight frame length {} != runs end {i}", elems.len());
+            }
+        } else {
+            runs.push((0, elems.len()));
+        }
+        for &(lo, hi) in &runs {
+        let e = &elems[lo..hi];
         match e[0] {
             OP_SHUTDOWN => return Ok(()),
             OP_INPUT => {
@@ -229,9 +268,18 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                     // interleaves two deals per element and must match the
                     // engine's divpub_vec / divpub_vec_tagged draw-for-draw.
                     reset_scratch(&mut dealt, 2 * k * n);
+                    if let Some(t) = tags {
+                        // One streamed PRF derivation for the whole tag
+                        // range (bit-identical to the per-element scalar
+                        // calls — see `tagged_r_many`'s contract).
+                        tag_buf.clear();
+                        tag_buf.extend(t.iter().map(|&x| x as u64));
+                        mask_buf.clear();
+                        tagged_r_many(cfg.seed, &tag_buf, cfg.rho_bits, &mut mask_buf);
+                    }
                     for ei in 0..k {
                         let rm = match tags {
-                            Some(t) => tagged_r(cfg.seed, t[ei] as u64, cfg.rho_bits),
+                            Some(_) => mask_buf[ei],
                             None => sample_r(&mut rng, cfg.rho_bits),
                         };
                         let q = rm % d;
@@ -317,6 +365,8 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
             }
             op => bail!("member {id}: unknown opcode {op}"),
         }
+        }
+        ex.elems = elems; // hand the buffer back for the next read
     }
 }
 
@@ -325,6 +375,24 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
 struct Conn {
     r: BufReader<TcpStream>,
     w: BufWriter<TcpStream>,
+}
+
+/// The relay obligation one staged flight run leaves behind: after the
+/// single `OP_FLIGHT` broadcast, the manager drives these in submission
+/// order — exactly the order members execute the runs in.
+enum FlightRelay {
+    Mul { k: usize },
+    Lin, // broadcast-only: no relay phases
+    Divpub { k: usize },
+}
+
+/// A flight being staged between `submit` calls and `complete`:
+/// `elems` accumulates `[OP_FLIGHT, n_runs, run₀.., run₁..]` (the run
+/// count is patched in at launch) and `relays` remembers each run's
+/// relay obligation.
+struct TcpFlight {
+    elems: Vec<u128>,
+    relays: Vec<FlightRelay>,
 }
 
 /// Duplicated handles to a live session's member sockets, obtained via
@@ -355,6 +423,7 @@ pub struct TcpSession {
     next_ex: u64,
     next_id: u64,
     next_tag: u64,
+    flight: Option<TcpFlight>,
     stats: NetStats,
     handles: Vec<JoinHandle<Result<()>>>,
 }
@@ -392,6 +461,7 @@ impl TcpSession {
             next_ex: 0,
             next_id: 0,
             next_tag: 0,
+            flight: None,
             stats: NetStats::default(),
             handles,
         })
@@ -468,6 +538,14 @@ impl TcpSession {
     }
 
     fn broadcast(&mut self, elems: &[u128]) -> Result<()> {
+        // A staged-but-unlaunched flight interleaved with other exercises
+        // would desync the members' run order from the manager's relays.
+        // (`flight_complete` takes the flight out before broadcasting, so
+        // the launch itself passes this guard.)
+        assert!(
+            self.flight.is_none(),
+            "staged flight never launched: call complete() before other exercises"
+        );
         self.next_ex += 1;
         self.stats.exercises += 1;
         for j in 0..self.cfg.n {
@@ -567,10 +645,16 @@ impl TcpSession {
         msg.extend(pairs.iter().map(|p| p.0 .0 as u128));
         msg.extend(pairs.iter().map(|p| p.1 .0 as u128));
         self.broadcast(&msg)?;
-        let dealt = self.gather()?;
-        self.scatter_transposed(&dealt, k)?;
+        self.relay_mul(k)?;
         self.stats.virtual_time_s += t0.elapsed().as_secs_f64();
         Ok(ids)
+    }
+
+    /// Relay phases of one width-`k` mul (everything after the schedule
+    /// broadcast): gather the flat party-major deals, scatter transposed.
+    fn relay_mul(&mut self, k: usize) -> Result<()> {
+        let dealt = self.gather()?;
+        self.scatter_transposed(&dealt, k)
     }
 
     fn op_divpub(&mut self, us: &[DataId], d: u128, tags: Option<&[u64]>) -> Result<Vec<DataId>> {
@@ -589,6 +673,16 @@ impl TcpSession {
             msg.extend(t.iter().map(|&x| x as u128));
         }
         self.broadcast(&msg)?;
+        self.relay_divpub(k)?;
+        self.stats.virtual_time_s += t0.elapsed().as_secs_f64();
+        Ok(ids)
+    }
+
+    /// Relay phases of one width-`k` §3.4 divpub (everything after the
+    /// schedule broadcast): Alice's r‖q deal, the z' opening to Bob, and
+    /// Bob's w deal.
+    fn relay_divpub(&mut self, k: usize) -> Result<()> {
+        let n = self.cfg.n;
         // Phase 1: Alice's dealt [r]‖[q] per element → (rⱼ, qⱼ) per member.
         let alice = self.rx(0)?;
         self.round();
@@ -623,8 +717,7 @@ impl TcpSession {
             self.tx(j, &mine)?;
         }
         self.round();
-        self.stats.virtual_time_s += t0.elapsed().as_secs_f64();
-        Ok(ids)
+        Ok(())
     }
 
     fn op_reveal(&mut self, ids: &[DataId]) -> Result<Vec<u128>> {
@@ -671,6 +764,96 @@ impl TcpSession {
         self.stats.virtual_time_s += t0.elapsed().as_secs_f64();
         Ok(ids)
     }
+
+    // --- flights (DESIGN.md §Round scheduler) -----------------------------
+
+    /// Stage one run into the pending flight, allocating its output ids
+    /// immediately so later same-flight runs can reference them. The run
+    /// body appended to the flight frame is byte-for-byte the standalone
+    /// broadcast body of the op.
+    fn flight_submit(&mut self, op: FlightOp) -> Result<Vec<DataId>> {
+        assert!(!op.is_empty(), "flights stage only non-empty ops");
+        let f = self.field;
+        let fl = self
+            .flight
+            .get_or_insert_with(|| TcpFlight { elems: vec![OP_FLIGHT, 0], relays: Vec::new() });
+        // alloc_vec inlined: `fl` already borrows self mutably.
+        let mut alloc = |next_id: &mut u64, k: usize| -> Vec<DataId> {
+            (0..k)
+                .map(|_| {
+                    *next_id += 1;
+                    DataId(*next_id)
+                })
+                .collect()
+        };
+        match op {
+            FlightOp::Mul(pairs) => {
+                let k = pairs.len();
+                let ids = alloc(&mut self.next_id, k);
+                fl.elems.push(OP_MUL);
+                fl.elems.push(k as u128);
+                fl.elems.extend(ids.iter().map(|id| id.0 as u128));
+                fl.elems.extend(pairs.iter().map(|p| p.0 .0 as u128));
+                fl.elems.extend(pairs.iter().map(|p| p.1 .0 as u128));
+                fl.relays.push(FlightRelay::Mul { k });
+                Ok(ids)
+            }
+            FlightOp::Lin(ops) => {
+                let ids = alloc(&mut self.next_id, ops.len());
+                fl.elems.push(OP_LIN);
+                fl.elems.push(ops.len() as u128);
+                for ((c0, terms), id) in ops.iter().zip(&ids) {
+                    fl.elems.push(id.0 as u128);
+                    fl.elems.push(f.from_i128(*c0));
+                    fl.elems.push(terms.len() as u128);
+                    for &(c, a) in terms {
+                        fl.elems.push(f.from_i128(c));
+                        fl.elems.push(a.0 as u128);
+                    }
+                }
+                fl.relays.push(FlightRelay::Lin);
+                Ok(ids)
+            }
+            FlightOp::DivpubTagged { us, d, tags } => {
+                if d == 0 {
+                    bail!("divpub by zero");
+                }
+                assert_eq!(us.len(), tags.len());
+                let k = us.len();
+                let ids = alloc(&mut self.next_id, k);
+                fl.elems.push(OP_DIVPUB_TAGGED);
+                fl.elems.push(k as u128);
+                fl.elems.push(d);
+                fl.elems.extend(ids.iter().map(|id| id.0 as u128));
+                fl.elems.extend(us.iter().map(|u| u.0 as u128));
+                fl.elems.extend(tags.iter().map(|&t| t as u128));
+                fl.relays.push(FlightRelay::Divpub { k });
+                Ok(ids)
+            }
+        }
+    }
+
+    /// Launch the pending flight: one `OP_FLIGHT` broadcast, then each
+    /// run's relay phases in submission order (the order members execute
+    /// in). No pending flight is a no-op, so `complete()` is always safe
+    /// to call. Each run still counts as one exercise — coalescing moves
+    /// latency, not the accounting unit.
+    fn flight_complete(&mut self) -> Result<()> {
+        let Some(mut fl) = self.flight.take() else { return Ok(()) };
+        let t0 = Instant::now();
+        fl.elems[1] = fl.relays.len() as u128;
+        self.broadcast(&fl.elems)?;
+        self.stats.exercises += fl.relays.len() as u64 - 1;
+        for relay in &fl.relays {
+            match *relay {
+                FlightRelay::Mul { k } => self.relay_mul(k)?,
+                FlightRelay::Lin => {}
+                FlightRelay::Divpub { k } => self.relay_divpub(k)?,
+            }
+        }
+        self.stats.virtual_time_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
 }
 
 impl MpcSession for TcpSession {
@@ -711,6 +894,14 @@ impl MpcSession for TcpSession {
         let base = self.next_tag;
         self.next_tag += count;
         base
+    }
+
+    fn submit(&mut self, op: FlightOp) -> Vec<DataId> {
+        self.flight_submit(op).expect("TcpSession submit")
+    }
+
+    fn complete(&mut self) {
+        self.flight_complete().expect("TcpSession complete")
     }
 
     fn reveal_vec(&mut self, ids: &[DataId]) -> Vec<u128> {
@@ -782,6 +973,50 @@ mod tests {
         tcp.shutdown().unwrap();
         assert!(after.messages > 0 && after.bytes > 0 && after.rounds > 0);
         assert_eq!(after.exercises, 2);
+    }
+
+    #[test]
+    fn one_tcp_flight_matches_sequential_sim_ops() {
+        let field = Field::paper();
+        // Sequential reference on the simulated engine: mul, lin, then a
+        // tagged divpub over the mul outputs.
+        let mut sim = Engine::new(field, EngineConfig::new(3));
+        let want = {
+            let s = &mut sim;
+            let a = s.input_vec(1, &[123, 456]);
+            let b = s.input_vec(2, &[789, 12]);
+            let prods = s.mul_vec(&[(a[0], b[0]), (a[1], b[1])]);
+            let lins = s.lin_vec(&[(7, vec![(2, a[0]), (1, b[1])])]);
+            let base = s.reserve_tags(2);
+            let qs = s.divpub_vec_tagged(&prods, 256, &[base, base + 1]);
+            s.reveal_vec(&[prods[0], prods[1], lins[0], qs[0], qs[1]])
+        };
+
+        // The same three ops as ONE coalesced flight over TCP — the divpub
+        // run reads the mul run's outputs within the same flight.
+        let mut tcp = TcpSession::spawn_local(field, TcpSessionConfig::new(3)).unwrap();
+        let a = tcp.input_vec(1, &[123, 456]);
+        let b = tcp.input_vec(2, &[789, 12]);
+        let before = tcp.stats();
+        let prods = tcp.submit(FlightOp::Mul(vec![(a[0], b[0]), (a[1], b[1])]));
+        let lins = tcp.submit(FlightOp::Lin(vec![(7, vec![(2, a[0]), (1, b[1])])]));
+        let base = tcp.reserve_tags(2);
+        let qs = tcp.submit(FlightOp::DivpubTagged {
+            us: prods.clone(),
+            d: 256,
+            tags: vec![base, base + 1],
+        });
+        tcp.complete();
+        let mid = tcp.stats().delta_since(&before);
+        let got = tcp.reveal_vec(&[prods[0], prods[1], lins[0], qs[0], qs[1]]);
+        tcp.shutdown().unwrap();
+
+        assert_eq!(got, want, "a TCP flight must match sequential sim ops byte-for-byte");
+        assert_eq!(want[0], 123 * 789);
+        // Per-op accounting survives coalescing: 3 exercises. Latency does
+        // not: 1 broadcast round + mul's 2 relay rounds + divpub's 6.
+        assert_eq!(mid.exercises, 3);
+        assert_eq!(mid.rounds, 1 + 2 + 6);
     }
 
     #[test]

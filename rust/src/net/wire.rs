@@ -5,15 +5,16 @@
 //!
 //! Both sides of the wire compile against *these* definitions, so a
 //! layout change is a one-file edit the compiler propagates — and the
-//! paired `wire-layout: v2` comment markers in `tcp.rs`/`tcp_session.rs`
+//! paired `wire-layout: v3` comment markers in `tcp.rs`/`tcp_session.rs`
 //! (checked by spn-lint L005, see DESIGN.md §Static analysis) force the
 //! prose documentation to move together with it.
 
 /// Version of the frame layout. Bump when any constant or stride rule in
-/// this module changes meaning, and update the `wire-layout: v2` markers
+/// this module changes meaning, and update the `wire-layout: v3` markers
 /// in `tcp.rs` and `tcp_session.rs` to match (spn-lint L005 enforces the
-/// pairing).
-pub const WIRE_LAYOUT_VERSION: u32 = 2;
+/// pairing). v3 added the coalesced [`OP_FLIGHT`] container frame of the
+/// pipelined round engine.
+pub const WIRE_LAYOUT_VERSION: u32 = 3;
 
 /// Frame header: `exercise_id: u64 | from: u32 | n_elems: u32`.
 pub const FRAME_HDR_BYTES: usize = 16;
@@ -45,6 +46,38 @@ pub const OP_REVEAL: u128 = 6;
 pub const OP_SQ2PQ: u128 = 7;
 pub const OP_SHUTDOWN: u128 = 8;
 pub const OP_DIVPUB_TAGGED: u128 = 9;
+/// Coalesced multi-op container (wire-layout v3, the pipelined round
+/// engine): `[OP_FLIGHT, n_runs, run₀.., run₁.., ..]` where each *run* is
+/// byte-for-byte a standalone [`OP_MUL`], [`OP_LIN`] or
+/// [`OP_DIVPUB_TAGGED`] broadcast body. Members execute runs in order
+/// (later runs may reference earlier runs' output ids); the manager then
+/// drives each run's relay phases in the same order, so one flight costs
+/// one schedule broadcast however many ops it carries. Only those three
+/// opcodes are flightable — untagged divpub's mask is stream-order-
+/// dependent and must stay a standalone exercise.
+pub const OP_FLIGHT: u128 = 10;
+
+/// Length in elements of one flight run body starting at `e[0]`, or
+/// `None` if `e[0]` is not a flightable opcode. This is the walk both
+/// sides of the socket use to split an [`OP_FLIGHT`] frame back into its
+/// runs, so it lives here with the rest of the layout math.
+pub fn flight_run_len(e: &[u128]) -> Option<usize> {
+    match e[0] {
+        OP_MUL => Some(2 + 3 * e[1] as usize), // [op, k, outs, as, bs]
+        OP_DIVPUB_TAGGED => Some(3 + 3 * e[1] as usize), // [op, k, d, outs, us, tags]
+        OP_LIN => {
+            // [op, k, (out, c0, t, (c, a)×t)×k] — variable, walk the ops
+            let k = e[1] as usize;
+            let mut i = 2;
+            for _ in 0..k {
+                let t = e[i + 2] as usize;
+                i += 3 + 2 * t;
+            }
+            Some(i)
+        }
+        _ => None,
+    }
+}
 
 // --- stride math ------------------------------------------------------------
 // Dealer→manager frames for input/mul/sq2pq are party-major (the flat
@@ -89,6 +122,23 @@ mod tests {
     fn frame_geometry() {
         assert_eq!(wire_bytes_for(0), FRAME_HDR_BYTES);
         assert_eq!(wire_bytes_for(3), 16 + 48);
+    }
+
+    #[test]
+    fn flight_run_len_walks_each_flightable_body() {
+        // [OP_MUL, k=2, outs×2, a×2, b×2] = 8 elements
+        assert_eq!(flight_run_len(&[OP_MUL, 2, 9, 10, 1, 2, 3, 4]), Some(8));
+        // [OP_DIVPUB_TAGGED, k=1, d, out, u, tag] = 6 elements
+        assert_eq!(flight_run_len(&[OP_DIVPUB_TAGGED, 1, 256, 9, 1, 42]), Some(6));
+        // [OP_LIN, k=2, (out, c0, t=1, c, a), (out, c0, t=0)] = 10 elements
+        assert_eq!(
+            flight_run_len(&[OP_LIN, 2, 9, 5, 1, 7, 3, 10, 0, 0]),
+            Some(10)
+        );
+        // untagged divpub and everything else is unflightable
+        assert_eq!(flight_run_len(&[OP_DIVPUB, 1, 256, 9, 1]), None);
+        assert_eq!(flight_run_len(&[OP_REVEAL, 1, 9]), None);
+        assert_eq!(flight_run_len(&[OP_FLIGHT, 0]), None);
     }
 
     #[test]

@@ -31,6 +31,14 @@
 //!   forms behind Tables 2–3 (see [`expected_costs`]). A protocol change
 //!   that silently alters the accounting trips here, next to the call
 //!   that did it, instead of surfacing as a drifted table in a report.
+//! * **Flight hygiene** (DESIGN.md §Round scheduler) — staged
+//!   [`MpcSession::submit`] runs get the same per-op input/tag checks as
+//!   their standalone counterparts, with outputs noted defined
+//!   immediately (later same-flight runs may reference them); under Sim
+//!   accounting, the whole flight's delta at [`MpcSession::complete`]
+//!   must show per-op message/exercise totals (coalescing moves latency,
+//!   not traffic) with rounds collapsed to exactly
+//!   [`sim_flight_rounds`].
 //!
 //! The wrapper is pure bookkeeping: it never touches shares, never adds
 //! traffic, and calls the inner backend exactly once per operation — so a
@@ -45,6 +53,7 @@ use crate::field::Field;
 use crate::net::NetStats;
 
 use super::engine::{DataId, Schedule};
+use super::flight::{sim_flight_rounds, FlightOp};
 use super::session::{MpcSession, SessionPhase};
 
 /// Per-id lifecycle bits in the flag slab (ids are monotone from 1, so a
@@ -99,6 +108,18 @@ struct SimAccounting {
     schedule: Schedule,
 }
 
+/// Accounting expectations accumulated across one staged flight (only
+/// tracked under Sim accounting): the stats snapshot at the first
+/// `submit`, per-op message/exercise sums, and which run kinds are
+/// present — the coalesced round closed form depends only on the latter.
+struct FlightChk {
+    before: NetStats,
+    exp_msgs: u64,
+    exp_slots: u64,
+    has_mul: bool,
+    has_divpub: bool,
+}
+
 /// The sanitizing wrapper. Construct with [`CheckedSession::new`] (any
 /// backend) or [`CheckedSession::with_sim_accounting`] (Sim backend, adds
 /// the conservation check), then use it wherever an [`MpcSession`] goes —
@@ -116,6 +137,8 @@ pub struct CheckedSession<S: MpcSession> {
     /// `Some((lo, hi))` once [`MpcSession::confine_tags`] was installed.
     stripe: Option<(u64, u64)>,
     accounting: Option<SimAccounting>,
+    /// Open flight being staged via `submit` (Sim accounting only).
+    flight: Option<FlightChk>,
 }
 
 impl<S: MpcSession> CheckedSession<S> {
@@ -131,6 +154,7 @@ impl<S: MpcSession> CheckedSession<S> {
             phase: SessionPhase::Training,
             stripe: None,
             accounting: None,
+            flight: None,
         }
     }
 
@@ -212,6 +236,28 @@ impl<S: MpcSession> CheckedSession<S> {
         // search for the last range starting at or before `tag`.
         let i = self.reserved.partition_point(|r| r.0 <= tag);
         i > 0 && tag < self.reserved[i - 1].1
+    }
+
+    /// The §3.4 freshness contract for one tagged divpub's tag slice:
+    /// reserved, inside the stripe when confined, never used before.
+    /// Consumes the tags (marks them used).
+    fn check_fresh_tags(&mut self, tags: &[u64]) {
+        for &t in tags {
+            if !self.tag_reserved(t) {
+                violation!("divpub tag {t} was never reserved via reserve_tags");
+            }
+            if let Some((lo, hi)) = self.stripe {
+                if t < lo || t >= hi {
+                    violation!("divpub tag {t} escapes the confined stripe [{lo}, {hi})");
+                }
+            }
+            if !self.used_tags.insert(t) {
+                violation!(
+                    "divpub tag {t} reused — mask reuse lets Bob difference two \
+                     openings (§3.4 freshness contract)"
+                );
+            }
+        }
     }
 
     /// Run `call` on the inner session; with Sim accounting enabled,
@@ -309,25 +355,85 @@ impl<S: MpcSession> MpcSession for CheckedSession<S> {
 
     fn divpub_vec_tagged(&mut self, us: &[DataId], d: u128, tags: &[u64]) -> Vec<DataId> {
         self.check_inputs(us.iter().copied(), "divpub_vec_tagged");
-        for &t in tags {
-            if !self.tag_reserved(t) {
-                violation!("divpub tag {t} was never reserved via reserve_tags");
-            }
-            if let Some((lo, hi)) = self.stripe {
-                if t < lo || t >= hi {
-                    violation!("divpub tag {t} escapes the confined stripe [{lo}, {hi})");
-                }
-            }
-            if !self.used_tags.insert(t) {
-                violation!(
-                    "divpub tag {t} reused — mask reuse lets Bob difference two \
-                     openings (§3.4 freshness contract)"
-                );
-            }
-        }
+        self.check_fresh_tags(tags);
         let ids = self.counted(Op::Divpub, us.len(), |s| s.divpub_vec_tagged(us, d, tags));
         self.note_defined(&ids, "divpub_vec_tagged");
         ids
+    }
+
+    fn submit(&mut self, op: FlightOp) -> Vec<DataId> {
+        // Same validation as the standalone calls; outputs are noted
+        // defined immediately below, so a later same-flight run may
+        // reference an earlier run's outputs (per-flight DataId hygiene).
+        let (cost_op, k) = match &op {
+            FlightOp::Mul(pairs) => {
+                self.check_inputs(pairs.iter().flat_map(|&(a, b)| [a, b]), "submit(Mul)");
+                (Op::Mesh, pairs.len())
+            }
+            FlightOp::Lin(ops) => {
+                self.check_inputs(
+                    ops.iter().flat_map(|(_, terms)| terms.iter().map(|&(_, a)| a)),
+                    "submit(Lin)",
+                );
+                (Op::Lin, ops.len())
+            }
+            FlightOp::DivpubTagged { us, tags, .. } => {
+                self.check_inputs(us.iter().copied(), "submit(DivpubTagged)");
+                self.check_fresh_tags(tags);
+                (Op::Divpub, us.len())
+            }
+        };
+        if let Some(acc) = &self.accounting {
+            if acc.n >= 2 && k > 0 {
+                let slots = match acc.schedule {
+                    Schedule::PerOp => k as u64,
+                    Schedule::Batched => 1,
+                };
+                let (m1, _) = expected_costs(cost_op, acc.n);
+                if self.flight.is_none() {
+                    self.flight = Some(FlightChk {
+                        before: self.inner.stats(),
+                        exp_msgs: 0,
+                        exp_slots: 0,
+                        has_mul: false,
+                        has_divpub: false,
+                    });
+                }
+                let fl = self.flight.as_mut().expect("just installed");
+                fl.exp_msgs += m1 * slots;
+                fl.exp_slots += slots;
+                match cost_op {
+                    Op::Mesh => fl.has_mul = true,
+                    Op::Divpub => fl.has_divpub = true,
+                    _ => {}
+                }
+            }
+        }
+        let ids = self.inner.submit(op);
+        self.note_defined(&ids, "submit");
+        ids
+    }
+
+    fn complete(&mut self) {
+        self.inner.complete();
+        let Some(fl) = self.flight.take() else { return };
+        // Conservation for the whole flight: per-op message/exercise
+        // totals survive coalescing; rounds collapse to the closed form.
+        let d = self.inner.stats().delta_since(&fl.before);
+        let er = sim_flight_rounds(fl.has_mul, fl.has_divpub);
+        if d.messages != fl.exp_msgs || d.rounds != er || d.exercises != fl.exp_slots {
+            violation!(
+                "accounting conservation broken for a flight (mul={}, divpub={}): \
+                 expected {} msgs / {er} rounds / {} exercises, got {} / {} / {}",
+                fl.has_mul,
+                fl.has_divpub,
+                fl.exp_msgs,
+                fl.exp_slots,
+                d.messages,
+                d.rounds,
+                d.exercises,
+            );
+        }
     }
 
     fn reserve_tags(&mut self, count: u64) -> u64 {
@@ -555,6 +661,50 @@ mod tests {
         // …and the first genuinely vectorized call exposes the lie: one
         // batched exercise where PerOp predicts two.
         let _ = s.mul_vec(&[(a, b), (b, a)]);
+    }
+
+    #[test]
+    fn checked_flight_passes_and_collapses_rounds() {
+        let mut s = checked(5);
+        s.declare_phase(SessionPhase::Inference);
+        let a = s.input_vec(1, &[1000, 2000]);
+        let b = s.input_vec(2, &[3, 5]);
+        let t0 = s.reserve_tags(2);
+        let before = s.stats();
+        let prods = s.submit(FlightOp::Mul(vec![(a[0], b[0]), (a[1], b[1])]));
+        let qs = s.submit(FlightOp::DivpubTagged {
+            us: prods,
+            d: 256,
+            tags: vec![t0, t0 + 1],
+        });
+        s.complete();
+        let d = s.stats().delta_since(&before);
+        assert_eq!(d.rounds, sim_flight_rounds(true, true));
+        s.mark_outputs(&qs);
+        let vals = s.reveal_vec(&qs);
+        let q0 = s.inner().field().to_i128(vals[0]);
+        assert!((q0 - 1000 * 3 / 256).abs() <= 1, "divpub is ±1-exact, got {q0}");
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn flight_tag_reuse_trips() {
+        let mut s = checked(3);
+        let a = s.input_vec(1, &[64, 128]);
+        let t = s.reserve_tags(1);
+        let _ = s.submit(FlightOp::DivpubTagged {
+            us: vec![a[0], a[1]],
+            d: 16,
+            tags: vec![t, t], // same tag twice within one staged run
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn flight_use_before_define_trips() {
+        let mut s = checked(3);
+        let ghost = DataId(999);
+        let _ = s.submit(FlightOp::Mul(vec![(ghost, ghost)]));
     }
 
     #[test]

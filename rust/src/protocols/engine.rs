@@ -196,10 +196,26 @@ pub struct Engine {
     /// Companion scratch (local products for `mul_vec`, `z'` openings for
     /// `divpub_impl`).
     scratch_vals: Vec<u128>,
+    /// Reusable buffer for Alice's batched tag-mask derivation
+    /// ([`super::divpub::tagged_r_many`]) in tagged divpub.
+    scratch_masks: Vec<u128>,
     /// Memoized `d⁻¹ mod p` per public divisor: `Field::inv` is a full
     /// Fermat pow (~74 squarings), and training/inference divide by the
     /// same scale `d` thousands of times per session.
     dinv_cache: HashMap<u128, u128>, // lint:allow(L003)
+    /// Open flight of the pipelined round engine (`None` = no flight in
+    /// progress). See [`Engine::flight_submit`].
+    flight: Option<FlightAcc>,
+}
+
+/// Accounting snapshot of an open flight: staged ops execute eagerly (the
+/// Sim backend *is* the deterministic ready-order executor), and
+/// [`Engine::flight_complete`] re-attributes their rounds to the coalesced
+/// closed form of [`super::flight::sim_flight_rounds`].
+struct FlightAcc {
+    start_rounds: u64,
+    has_mul: bool,
+    has_divpub: bool,
 }
 
 impl Engine {
@@ -228,7 +244,9 @@ impl Engine {
             manager_rng: Prng::seed_from_u64(cfg.seed ^ 0xABCD),
             scratch_dealt: Vec::new(),
             scratch_vals: Vec::new(),
+            scratch_masks: Vec::new(),
             dinv_cache: HashMap::new(), // lint:allow(L003)
+            flight: None,
         }
     }
 
@@ -535,14 +553,24 @@ impl Engine {
         let (r_sh, rest) = scratch.split_at_mut(k * n);
         let (q_sh, w_sh) = rest.split_at_mut(k * n);
 
-        // Phase 1: Alice deals [r], [q = r mod d].
+        // Phase 1: Alice deals [r], [q = r mod d]. Tagged masks come from
+        // the PRF, not Alice's stream, so the whole reserved range derives
+        // in one batched pass (`tagged_r_many`) before the dealing loop —
+        // bit-identical to deriving each inside it, since PRF evaluations
+        // consume no state; the untagged (training) path keeps the scalar
+        // stream draw interleaved with the coefficient draws, whose order
+        // is part of the byte-identity contract.
         {
-            let Engine { shamir, members, .. } = self;
+            let Engine { shamir, members, scratch_masks, .. } = self;
             let deg = shamir.t;
             let m = &mut members[alice];
+            if let Some(t) = tags {
+                scratch_masks.clear();
+                super::divpub::tagged_r_many(seed, t, rho, scratch_masks);
+            }
             for e in 0..k {
                 let r = match tags {
-                    Some(t) => super::divpub::tagged_r(seed, t[e], rho),
+                    Some(_) => scratch_masks[e],
                     None => super::divpub::sample_r(&mut m.rng, rho),
                 };
                 let q = r % d;
@@ -655,6 +683,56 @@ impl Engine {
         self.scratch_dealt = dealt;
         self.finish_exercise(k);
         ids
+    }
+
+    /// Stage one op of a flight — the pipelined round engine's coalescing
+    /// surface (DESIGN.md §Round scheduler). The Sim backend executes the
+    /// op *immediately* in staged order (it is the deterministic
+    /// ready-order executor, so values, messages, bytes and exercises keep
+    /// their exact sequential accounting); [`Engine::flight_complete`]
+    /// then re-attributes the flight's rounds to the coalesced closed form
+    /// [`super::flight::sim_flight_rounds`], since every staged op's
+    /// traffic would share physical rounds on a coalescing transport.
+    pub fn flight_submit(&mut self, op: super::flight::FlightOp) -> Vec<DataId> {
+        use super::flight::FlightOp;
+        assert!(!op.is_empty(), "flights stage only non-empty ops");
+        if self.flight.is_none() {
+            self.flight = Some(FlightAcc {
+                start_rounds: self.net.stats.rounds,
+                has_mul: false,
+                has_divpub: false,
+            });
+        }
+        let acc = self.flight.as_mut().expect("just installed");
+        match &op {
+            FlightOp::Mul(_) => acc.has_mul = true,
+            FlightOp::DivpubTagged { .. } => acc.has_divpub = true,
+            FlightOp::Lin(_) => {}
+        }
+        match op {
+            FlightOp::Mul(pairs) => self.mul_vec(&pairs),
+            FlightOp::Lin(ops) => self.lin_vec(&ops),
+            FlightOp::DivpubTagged { us, d, tags } => self.divpub_vec_tagged(&us, d, &tags),
+        }
+    }
+
+    /// Close the open flight: rounds recorded since the first
+    /// [`Engine::flight_submit`] collapse to
+    /// [`super::flight::sim_flight_rounds`], and the collapsed rounds'
+    /// *latencies* leave virtual time with them. The serialization terms
+    /// (bytes/bandwidth) of every collapsed round stay — coalescing
+    /// removes round trips, not traffic. No-op without an open flight;
+    /// on a degenerate n < 2 session the raw accounting is kept.
+    pub fn flight_complete(&mut self) {
+        let Some(acc) = self.flight.take() else { return };
+        if self.cfg.n < 2 {
+            return;
+        }
+        let seq_rounds = self.net.stats.rounds - acc.start_rounds;
+        let flight_rounds = super::flight::sim_flight_rounds(acc.has_mul, acc.has_divpub);
+        let collapsed = seq_rounds.saturating_sub(flight_rounds);
+        self.net.stats.rounds -= collapsed;
+        self.net.stats.virtual_time_s -= collapsed as f64 * self.net.cfg.latency_s;
     }
 
     /// Test/diagnostic-only: reconstruct without counting traffic.
@@ -854,6 +932,48 @@ mod tests {
         let a = e.input(1, &[5])[0];
         let _ = e.mul(a, a);
         assert!(e.net.stats.virtual_time_s > t0 + 0.04); // several 10ms rounds
+    }
+
+    #[test]
+    fn flight_collapses_rounds_but_not_messages() {
+        use crate::protocols::flight::{sim_flight_rounds, FlightOp};
+        // Two identically-seeded batched engines running the same logical
+        // ops: one sequentially, one as a single flight. Revealed values,
+        // messages, bytes and exercises must match exactly; only rounds
+        // (and their latencies) collapse.
+        let mut seq = Engine::new(Field::paper(), EngineConfig::new(5).batched());
+        let mut fl = Engine::new(Field::paper(), EngineConfig::new(5).batched());
+        let run = |e: &mut Engine, flight: bool| {
+            let a = e.input(1, &[1000, 2000]);
+            let b = e.input(2, &[3, 5]);
+            let tags = {
+                let t0 = e.reserve_tags(2);
+                vec![t0, t0 + 1]
+            };
+            let before = e.net.stats;
+            let pairs = vec![(a[0], b[0]), (a[1], b[1])];
+            let outs = if flight {
+                let prods = e.flight_submit(FlightOp::Mul(pairs));
+                let outs =
+                    e.flight_submit(FlightOp::DivpubTagged { us: prods, d: 256, tags });
+                e.flight_complete();
+                outs
+            } else {
+                let prods = e.mul_vec(&pairs);
+                e.divpub_vec_tagged(&prods, 256, &tags)
+            };
+            let vals: Vec<i128> = outs.iter().map(|&id| e.peek_int(id)).collect();
+            (vals, e.net.stats.delta_since(&before))
+        };
+        let (v_seq, d_seq) = run(&mut seq, false);
+        let (v_fl, d_fl) = run(&mut fl, true);
+        assert_eq!(v_seq, v_fl, "flight regrouping must not change revealed values");
+        assert_eq!(d_fl.messages, d_seq.messages, "coalescing moves latency, not traffic");
+        assert_eq!(d_fl.bytes, d_seq.bytes);
+        assert_eq!(d_fl.exercises, d_seq.exercises);
+        assert_eq!(d_fl.rounds, sim_flight_rounds(true, true));
+        assert!(d_fl.rounds < d_seq.rounds, "{} !< {}", d_fl.rounds, d_seq.rounds);
+        assert!(d_fl.virtual_time_s < d_seq.virtual_time_s);
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! The multi-op *flight* surface of the pipelined round engine
+//! (DESIGN.md §Round scheduler).
+//!
+//! A **flight** is a group of secure operations whose network traffic is
+//! coalesced into one framed message per member per physical round: the
+//! Manager *stages* operations with [`MpcSession::submit`] (which returns
+//! their output [`DataId`]s immediately — ids are Manager-assigned and
+//! need no round trip) and then *launches* the whole group with
+//! [`MpcSession::complete`]. The compiled-plan batch evaluator uses one
+//! flight per dependency-DAG wave, so a batch's secure rounds drop to the
+//! DAG's critical-path depth instead of the plan's step count.
+//!
+//! Only the three inference primitives are flightable — `mul`, `lin` and
+//! *tagged* divpub. Untagged divpub is deliberately absent: its rounding
+//! mask comes from Alice's RNG *stream position*, so reordering or
+//! coalescing it would change revealed values. Tagged divpub's mask is
+//! `PRF(seed, tag)` ([`super::divpub::tagged_r`]), a pure function of the
+//! element's identity, which is exactly what makes a flight's regrouping
+//! of traffic byte-transparent: `mul`/`lin` are value-exact on
+//! reconstruction (share randomness cancels) and every divpub's ±1
+//! rounding is pinned by its tag, not by when its exercise ran.
+//!
+//! Within one flight, a staged op may read the outputs of *earlier* ops in
+//! the same flight (the evaluator's per-wave `Mul → Lin → DivpubTagged`
+//! chain relies on it); both backends execute staged ops in submission
+//! order, so the dataflow resolves without an extra barrier. Ops must be
+//! non-empty — a wave with nothing of some kind simply does not stage that
+//! kind.
+//!
+//! [`MpcSession::submit`]: super::session::MpcSession::submit
+//! [`MpcSession::complete`]: super::session::MpcSession::complete
+
+use super::engine::DataId;
+
+/// One staged operation of a flight. Mirrors the vectorized session
+/// primitives ([`mul_vec`], [`lin_vec`], [`divpub_vec_tagged`]) — a
+/// backend without a coalescing transport executes each exactly as the
+/// corresponding direct call.
+///
+/// [`mul_vec`]: super::session::MpcSession::mul_vec
+/// [`lin_vec`]: super::session::MpcSession::lin_vec
+/// [`divpub_vec_tagged`]: super::session::MpcSession::divpub_vec_tagged
+#[derive(Clone, Debug)]
+pub enum FlightOp {
+    /// Secure multiplications (BGW resharing) for all pairs.
+    Mul(Vec<(DataId, DataId)>),
+    /// Affine exercises `c0 + Σ ck·[ak]` (local math, scheduled exercise).
+    Lin(Vec<(i128, Vec<(i128, DataId)>)>),
+    /// Order-invariant divisions by public `d`, one fresh tag per element.
+    DivpubTagged { us: Vec<DataId>, d: u128, tags: Vec<u64> },
+}
+
+/// The kind of a [`FlightOp`] — what the wire/accounting layers dispatch on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlightOpKind {
+    Mul,
+    Lin,
+    DivpubTagged,
+}
+
+impl FlightOp {
+    /// Number of vector elements (= output ids) the op produces.
+    pub fn len(&self) -> usize {
+        match self {
+            FlightOp::Mul(pairs) => pairs.len(),
+            FlightOp::Lin(ops) => ops.len(),
+            FlightOp::DivpubTagged { us, .. } => us.len(),
+        }
+    }
+
+    /// Whether the op is empty (backends may reject empty ops; the
+    /// evaluator never stages one).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The op's kind.
+    pub fn kind(&self) -> FlightOpKind {
+        match self {
+            FlightOp::Mul(_) => FlightOpKind::Mul,
+            FlightOp::Lin(_) => FlightOpKind::Lin,
+            FlightOp::DivpubTagged { .. } => FlightOpKind::DivpubTagged,
+        }
+    }
+}
+
+/// Secure rounds one coalesced flight costs under the Sim accountant
+/// (per batch, independent of how many ops of each kind were staged):
+///
+/// * a base of **2** — the schedule broadcast and the completion sweep,
+///   what a lone affine exercise already pays (`lin_vec` = 2 rounds);
+/// * **+1** if the flight contains any multiplication — the single mesh
+///   resharing exchange every coalesced `mul` shares;
+/// * **+3** if it contains any tagged divpub — the Alice-deal, z'-opening
+///   and Bob-deal relay trio, shared by every coalesced division
+///   (sequential divpub = 5 rounds = this 3 plus the base 2).
+///
+/// [`Engine::complete`](super::engine::Engine) re-attributes the rounds of
+/// a finished flight to this closed form (messages, bytes and exercises
+/// keep their exact per-op accounting — coalescing moves *latency*, not
+/// traffic); [`CheckedSession`](super::checked::CheckedSession) re-derives
+/// it independently and panics if a backend's accounting drifts.
+pub fn sim_flight_rounds(has_mul: bool, has_divpub: bool) -> u64 {
+    2 + has_mul as u64 + 3 * has_divpub as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flight_op_len_and_kind() {
+        let m = FlightOp::Mul(vec![(DataId(1), DataId(2)), (DataId(3), DataId(4))]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.kind(), FlightOpKind::Mul);
+        assert!(!m.is_empty());
+        let l = FlightOp::Lin(vec![(0, vec![(1, DataId(1))])]);
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.kind(), FlightOpKind::Lin);
+        let d = FlightOp::DivpubTagged { us: vec![], d: 256, tags: vec![] };
+        assert!(d.is_empty());
+        assert_eq!(d.kind(), FlightOpKind::DivpubTagged);
+    }
+
+    #[test]
+    fn flight_rounds_closed_form() {
+        // lone lin flight = a lin exercise; divpub-only = a divpub; the
+        // full mul+divpub wave of the batch evaluator = 6.
+        assert_eq!(sim_flight_rounds(false, false), 2);
+        assert_eq!(sim_flight_rounds(true, false), 3);
+        assert_eq!(sim_flight_rounds(false, true), 5);
+        assert_eq!(sim_flight_rounds(true, true), 6);
+    }
+}

@@ -17,15 +17,21 @@
 //! * [`checked`]  — the [`CheckedSession`] sanitizer: wraps any backend
 //!   and enforces the tag-freshness, reveal, phase and accounting
 //!   contracts at runtime (DESIGN.md §Static analysis).
+//! * [`flight`]   — the multi-op flight surface of the pipelined round
+//!   engine ([`MpcSession::submit`]/[`MpcSession::complete`]): coalesces
+//!   the traffic of independent inference steps into one framed message
+//!   per member per round (DESIGN.md §Round scheduler).
 
 pub mod checked;
 pub mod divpub;
 pub mod division;
 pub mod engine;
+pub mod flight;
 pub mod newton;
 pub mod session;
 
 pub use checked::CheckedSession;
 pub use division::DivisionConfig;
 pub use engine::{DataId, Engine, EngineConfig, Schedule};
+pub use flight::{sim_flight_rounds, FlightOp, FlightOpKind};
 pub use session::{MpcSession, SessionPhase, SimSession};

@@ -28,6 +28,7 @@ use crate::field::Field;
 use crate::net::NetStats;
 
 use super::engine::{DataId, Engine};
+use super::flight::FlightOp;
 
 /// Protocol phase a session is operating in, declared by the coordinator
 /// via [`MpcSession::declare_phase`]. Raw backends ignore it; the
@@ -135,6 +136,34 @@ pub trait MpcSession {
     /// sanitizer turns an escape into a panic instead of silent reuse).
     fn confine_tags(&mut self, _lo: u64, _hi: u64) {}
 
+    // --- the flight surface (pipelined round engine) ---------------------
+    // DESIGN.md §Round scheduler. Defaults make every backend correct out
+    // of the box: `submit` executes the op immediately through the trait's
+    // own vectorized methods and `complete` is a no-op, so a backend
+    // without a coalescing transport pays exactly the sequential cost.
+    // Engine and TcpSession override the pair to coalesce the staged ops'
+    // traffic into one flight per round (Engine: rounds re-attributed to
+    // `flight::sim_flight_rounds`; TCP: one instruction frame per member
+    // for the whole flight, relays driven back-to-back).
+
+    /// Stage one operation into the current flight and return its output
+    /// ids immediately. Ids are Manager-assigned, so a later `submit` in
+    /// the same flight may reference an earlier one's outputs; values are
+    /// only guaranteed computed after [`MpcSession::complete`]. Ops must
+    /// be non-empty.
+    fn submit(&mut self, op: FlightOp) -> Vec<DataId> {
+        match op {
+            FlightOp::Mul(pairs) => self.mul_vec(&pairs),
+            FlightOp::Lin(ops) => self.lin_vec(&ops),
+            FlightOp::DivpubTagged { us, d, tags } => self.divpub_vec_tagged(&us, d, &tags),
+        }
+    }
+
+    /// Launch and drain the current flight: after this returns, every
+    /// staged op's outputs are materialized shares. A barrier — the next
+    /// `submit` starts a new flight. No-op when nothing is staged.
+    fn complete(&mut self) {}
+
     // --- provided scalar conveniences (same delegation as the engine) ----
 
     /// Scalar [`MpcSession::lin_vec`].
@@ -222,6 +251,14 @@ impl MpcSession for Engine {
 
     fn stats(&self) -> NetStats {
         self.net.stats
+    }
+
+    fn submit(&mut self, op: FlightOp) -> Vec<DataId> {
+        Engine::flight_submit(self, op)
+    }
+
+    fn complete(&mut self) {
+        Engine::flight_complete(self)
     }
 }
 

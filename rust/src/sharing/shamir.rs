@@ -104,7 +104,8 @@ impl ShamirCtx {
     /// Polynomial evaluation reads the precomputed Vandermonde power table,
     /// so dealing performs **zero heap allocation per element** (one
     /// reusable coefficient buffer per call) — the §Perf iteration-3 hot
-    /// path (EXPERIMENTS.md).
+    /// path (EXPERIMENTS.md). The per-party dot product itself is the
+    /// deferred-reduction kernel of §Perf iteration 6 ([`Self::eval_row`]).
     pub fn share_batch_into<R: Rng + ?Sized>(
         &self,
         secrets: &[u128],
@@ -125,9 +126,41 @@ impl ShamirCtx {
                 coeffs.push(f.rand(rng));
             }
             for i in 0..n {
-                out[i * k + e] = f.dot(&coeffs, &self.vander[i * n..i * n + deg + 1]);
+                out[i * k + e] = Self::eval_row(f, &coeffs, &self.vander[i * n..i * n + deg + 1]);
             }
         }
+    }
+
+    /// Coefficient/power dot product with **deferred modular reduction**
+    /// (§Perf iteration 6). `Field::dot` reduces every term (a `u128 %`
+    /// plus a compare-and-branch per coefficient); this kernel instead
+    /// walks *fixed-width* chunks of raw [`Field::mul_unreduced`] folds —
+    /// each fold is `< 2^119`, so a chunk of `CHUNK = 8` sums below
+    /// `2^122` with no possibility of `u128` overflow — and reduces once
+    /// per chunk, merging the partial into the running total with a
+    /// branch-free conditional subtract (`acc < 2p` after the add, and
+    /// `(acc >= p) as u128` is 0 or 1). The constant trip count of the
+    /// inner loop is what lets the compiler unroll/vectorize it.
+    ///
+    /// Only *when* reduction happens changes, never the value mod p, and
+    /// the result is kept canonical (`< p`) at every chunk boundary — so
+    /// outputs are bit-identical to `f.dot` and the draw-order contract
+    /// above is untouched (`tests::batch_share_matches_scalar_draw_for_draw`
+    /// still pins the whole path against the legacy Horner reference).
+    #[inline]
+    fn eval_row(f: &Field, coeffs: &[u128], powers: &[u128]) -> u128 {
+        debug_assert_eq!(coeffs.len(), powers.len());
+        const CHUNK: usize = 8; // 8 · 2^119 < 2^122: headroom of 2^6 chunks
+        let mut acc = 0u128;
+        for (cs, ps) in coeffs.chunks(CHUNK).zip(powers.chunks(CHUNK)) {
+            let mut part = 0u128;
+            for (&c, &pw) in cs.iter().zip(ps) {
+                part += f.mul_unreduced(c, pw);
+            }
+            acc += part % f.p;
+            acc -= f.p * ((acc >= f.p) as u128);
+        }
+        acc
     }
 
     /// Deal one secret into `out` (`out[i-1]` = party i's share): the k = 1
@@ -315,6 +348,20 @@ mod tests {
                 r_scalar.next_u64(),
                 "batch and scalar dealing must consume the same number of draws"
             );
+        });
+    }
+
+    #[test]
+    fn eval_row_matches_field_dot_exactly() {
+        // The deferred-reduction kernel is an optimization seam only: for
+        // every length (sub-chunk, exact chunk, multi-chunk) and random
+        // operands it must reproduce Field::dot bit-for-bit.
+        let f = Field::paper();
+        crate::rng::property(128, |rng| {
+            let len = 1 + rng.gen_range_u64(20) as usize;
+            let cs: Vec<u128> = (0..len).map(|_| f.rand(rng)).collect();
+            let ps: Vec<u128> = (0..len).map(|_| f.rand(rng)).collect();
+            assert_eq!(ShamirCtx::eval_row(&f, &cs, &ps), f.dot(&cs, &ps), "len={len}");
         });
     }
 

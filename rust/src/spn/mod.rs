@@ -20,5 +20,5 @@ pub mod learn;
 pub mod plan;
 pub mod structure;
 
-pub use plan::{EvalPlan, Evaluator, PlanStep, Query, Src};
+pub use plan::{DagUnit, EvalPlan, Evaluator, PlanStep, Query, Src};
 pub use structure::{Layer, LayerKind, ParamKind, Structure};

@@ -28,6 +28,22 @@
 //! under any batching. The cross-backend integration tests pin this
 //! bit-identity (Sim = TCP, batch = sequential).
 //!
+//! **Pipelined scheduling (§Round scheduler).** Compilation also derives a
+//! step-dependency DAG over *units* — (product step, chain round) pairs and
+//! sum steps — assigning each unit the earliest **wave** its inputs allow
+//! ([`EvalPlan::waves`]): chain rounds of disjoint subtrees at the same
+//! depth, and steps whose sources are already available, share a wave.
+//! [`Evaluator::eval_batch`] launches one coalesced *flight*
+//! ([`MpcSession::submit`]/[`MpcSession::complete`]) per wave — all ready
+//! muls, then every ready sum's lin-combine, then every unit's tagged
+//! divpub — so a batch pays [`EvalPlan::critical_depth`] waves of secure
+//! rounds instead of one round-trip per [`EvalPlan::chain_rounds`] step.
+//! Message/byte totals are unchanged (coalescing moves latency, not
+//! traffic) and revealed values are byte-identical to the stream-order
+//! executor because per-element tag assignment is wave-invariant.
+//! [`Evaluator::eval_batch_sequential`] keeps the stream-order executor as
+//! the pinned parity reference.
+//!
 //! One [`Evaluator`] is bound to one session and one model: it caches the
 //! session-level constants (public `d`, per-leaf θ and the query-independent
 //! slope `2θ−d`) on first use — [`DataId`]s from another session would be
@@ -35,6 +51,7 @@
 
 use crate::net::NetStats;
 use crate::protocols::engine::DataId;
+use crate::protocols::flight::FlightOp;
 use crate::protocols::session::{MpcSession, SessionPhase};
 use crate::spn::structure::{LayerKind, Structure};
 
@@ -120,6 +137,24 @@ pub enum PlanStep {
     Sum { width: usize, node_edges: Vec<Vec<(usize, Src)>> },
 }
 
+/// One schedulable unit of the step-dependency DAG: a single chain round
+/// of a product step, or a whole sum step. A unit is the granularity at
+/// which traffic coalesces — all of a unit's elements (across every node
+/// it covers and every query in the batch) ride one flight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DagUnit {
+    /// Index into [`EvalPlan::steps`].
+    pub step: usize,
+    /// Chain-round index for a product step; always 0 for a sum step.
+    pub round: usize,
+    /// Per-query divpub offset this unit's first element occupies in the
+    /// *sequential* plan order — precomputed at compile time so the
+    /// pipelined executor hands every divpub the exact tag the stream-order
+    /// executor would (`tag0 + b·m + qoff + j`), which is what makes wave
+    /// regrouping byte-transparent.
+    pub qoff: u64,
+}
+
 /// A [`Structure`] compiled for repeated private evaluation.
 #[derive(Clone, Debug)]
 pub struct EvalPlan {
@@ -138,6 +173,19 @@ pub struct EvalPlan {
     /// Divpub elements one query consumes — the tag stride that keeps
     /// batched and sequential evaluation bit-identical.
     pub divpubs_per_query: u64,
+    /// The dependency-DAG schedule: `waves[w]` lists the units whose every
+    /// input is available after wave `w` has run (leaf values count as
+    /// wave 0). Units within a wave are in plan order — the deterministic
+    /// ready-order both backends execute. `waves.len()` is the DAG's
+    /// critical-path depth.
+    pub waves: Vec<Vec<DagUnit>>,
+    /// Per step, per node: `Some(src)` iff the node is a degree-1 product
+    /// pass-through — it owns no chain round, its output *is* its `first`
+    /// seed. The pipelined executor never materializes such nodes; reads
+    /// resolve through the alias (at most one hop: the alias target is a
+    /// sum node or a leaf, both always materialized, by the layer-
+    /// alternation rule of [`Structure::validate`]).
+    pub pass_through: Vec<Vec<Option<Src>>>,
 }
 
 impl EvalPlan {
@@ -191,6 +239,99 @@ impl EvalPlan {
                 }
             }
         }
+        // ---- dependency-DAG schedule (DESIGN.md §Round scheduler) --------
+        // Walk the finished steps in plan order assigning every unit the
+        // earliest wave its inputs allow. `node_ready[s][i]` is the wave at
+        // which step s's node i output exists (0 = before any wave: leaves
+        // and pass-through aliases of leaves).
+        let mut node_ready: Vec<Vec<usize>> = Vec::with_capacity(steps.len());
+        let mut pass_through: Vec<Vec<Option<Src>>> = Vec::with_capacity(steps.len());
+        let mut units: Vec<(DagUnit, usize)> = Vec::new(); // (unit, wave)
+        let mut qoff = 0u64;
+        for (s, step) in steps.iter().enumerate() {
+            // A source is ready when its producing node is; `node_ready`
+            // already folds pass-through aliasing in, so one lookup suffices.
+            let src_wave = |c: Src, node_ready: &Vec<Vec<usize>>| match c {
+                Src::Leaf(_) => 0,
+                Src::Prev(i) => node_ready[s - 1][i],
+            };
+            match step {
+                PlanStep::Product { width, first, rounds } => {
+                    let mut deg = vec![1usize; *width];
+                    for round in rounds {
+                        for &(n, _) in round {
+                            deg[n] += 1;
+                        }
+                    }
+                    let mut ready = vec![0usize; *width];
+                    let mut alias = vec![None; *width];
+                    for i in 0..*width {
+                        if deg[i] == 1 {
+                            // Pass-through: output = the first seed itself.
+                            alias[i] = Some(first[i]);
+                            ready[i] = src_wave(first[i], &node_ready);
+                            if let Src::Prev(j) = first[i] {
+                                debug_assert!(
+                                    pass_through[s - 1][j].is_none(),
+                                    "alias chains longer than one hop need \
+                                     non-alternating layers, which validate() rejects"
+                                );
+                            }
+                        }
+                    }
+                    let mut prev_wave = 0usize;
+                    for (k, round) in rounds.iter().enumerate() {
+                        // Round k of a chain reads round k-1's accumulators
+                        // (round-0 reads the first seeds) plus this round's
+                        // children; it runs one wave after the latest.
+                        let mut w = if k == 0 {
+                            round
+                                .iter()
+                                .map(|&(n, _)| src_wave(first[n], &node_ready))
+                                .max()
+                                .unwrap_or(0)
+                        } else {
+                            prev_wave
+                        };
+                        for &(_, child) in round {
+                            w = w.max(src_wave(child, &node_ready));
+                        }
+                        let w = w + 1;
+                        units.push((DagUnit { step: s, round: k, qoff }, w));
+                        qoff += round.len() as u64;
+                        prev_wave = w;
+                        for &(n, _) in round {
+                            // a node's output exists after its last round
+                            if deg[n] == k + 2 {
+                                ready[n] = w;
+                            }
+                        }
+                    }
+                    node_ready.push(ready);
+                    pass_through.push(alias);
+                }
+                PlanStep::Sum { width, node_edges } => {
+                    let mut w = 0usize;
+                    for edges in node_edges {
+                        for &(_, child) in edges {
+                            w = w.max(src_wave(child, &node_ready));
+                        }
+                    }
+                    let w = w + 1;
+                    units.push((DagUnit { step: s, round: 0, qoff }, w));
+                    qoff += *width as u64;
+                    node_ready.push(vec![w; *width]);
+                    pass_through.push(vec![None; *width]);
+                }
+            }
+        }
+        debug_assert_eq!(qoff, divpubs, "unit qoffs must tile the divpub space");
+        let depth = units.iter().map(|&(_, w)| w).max().unwrap_or(0);
+        let mut waves: Vec<Vec<DagUnit>> = vec![Vec::new(); depth];
+        for (u, w) in units {
+            waves[w - 1].push(u); // plan order within a wave (stable push)
+        }
+
         EvalPlan {
             name: st.name.clone(),
             d,
@@ -200,6 +341,8 @@ impl EvalPlan {
             leaf_theta_fixed,
             steps,
             divpubs_per_query: divpubs,
+            waves,
+            pass_through,
         }
     }
 
@@ -214,6 +357,26 @@ impl EvalPlan {
                 PlanStep::Sum { .. } => 1,
             })
             .sum()
+    }
+
+    /// Critical-path depth of the step-dependency DAG — the number of
+    /// coalesced waves the pipelined executor pays per batch. At most
+    /// [`EvalPlan::chain_rounds`] (every unit in its own wave), and
+    /// strictly less whenever independent subtrees let units share one.
+    pub fn critical_depth(&self) -> usize {
+        self.waves.len()
+    }
+
+    /// Closed-form secure rounds one **warm** pipelined batch costs under
+    /// the Sim accountant, for the non-degenerate case of at least one
+    /// live (query, leaf) pair: the client-input star (3) + the leaf
+    /// mul+lin flight (3) + 6 per wave (every wave flights a mul, possibly
+    /// a lin, and a tagged divpub — `sim_flight_rounds(true, true) = 6`)
+    /// + the root reveal star (3). The first batch on a fresh evaluator
+    /// adds 2 (the one-time slope `lin_vec` of the constant cache); the
+    /// rounds-equal-critical-path tests warm the cache first.
+    pub fn pipelined_sim_rounds(&self) -> u64 {
+        6 * self.critical_depth() as u64 + 9
     }
 }
 
@@ -260,6 +423,41 @@ fn resolve(s: Src, b: usize, prev: &[DataId], leaf_vals: &[DataId], bsz: usize) 
     match s {
         Src::Prev(i) => prev[i * bsz + b],
         Src::Leaf(l) => leaf_vals[l * bsz + b],
+    }
+}
+
+/// Pipelined-executor read of step `step`'s node `i` for query `b` out of
+/// the per-step materialized tables, following at most one pass-through
+/// hop (see [`EvalPlan::pass_through`] for why one hop suffices).
+fn node_out(
+    step: usize,
+    i: usize,
+    b: usize,
+    vals: &[Vec<DataId>],
+    leaf_vals: &[DataId],
+    pass_through: &[Vec<Option<Src>>],
+    bsz: usize,
+) -> DataId {
+    match pass_through[step][i] {
+        None => vals[step][i * bsz + b],
+        Some(Src::Leaf(l)) => leaf_vals[l * bsz + b],
+        Some(Src::Prev(j)) => vals[step - 1][j * bsz + b],
+    }
+}
+
+/// [`node_out`] through a step-input [`Src`] of `consuming_step`.
+fn resolve_dag(
+    s: Src,
+    consuming_step: usize,
+    b: usize,
+    vals: &[Vec<DataId>],
+    leaf_vals: &[DataId],
+    pass_through: &[Vec<Option<Src>>],
+    bsz: usize,
+) -> DataId {
+    match s {
+        Src::Leaf(l) => leaf_vals[l * bsz + b],
+        Src::Prev(i) => node_out(consuming_step - 1, i, b, vals, leaf_vals, pass_through, bsz),
     }
 }
 
@@ -366,22 +564,20 @@ impl Evaluator {
         }
     }
 
-    /// Evaluate all `queries` simultaneously; returns the revealed d-scaled
-    /// root value per query (same order) and the traffic spent. Bit-
-    /// identical to evaluating them one `eval_batch(&[q])` at a time on the
-    /// same evaluator/session state (see the module docs for why).
-    pub fn eval_batch<S: MpcSession>(
+    /// Shared front half of both executors: phase/tag bookkeeping, the
+    /// constant cache, the client-input star and the leaf layer. Returns
+    /// the batch's tag-block base and the (leaf × query) value table. With
+    /// `pipelined` the leaf mul+lin ride one coalesced flight (3 rounds
+    /// instead of 5); either way the values and the tag ledger are
+    /// identical.
+    fn batch_prologue<S: MpcSession>(
         &mut self,
         sess: &mut S,
         queries: &[Query],
-        sum_w: &[DataId],
         learned_theta: Option<&[DataId]>,
-    ) -> (Vec<i128>, NetStats) {
-        let before = sess.stats();
+        pipelined: bool,
+    ) -> (u64, Vec<DataId>) {
         let bsz = queries.len();
-        if bsz == 0 {
-            return (Vec::new(), sess.stats().delta_since(&before));
-        }
         for q in queries {
             assert_eq!(q.x.len(), self.plan.num_vars, "query width");
             assert_eq!(q.marg.len(), self.plan.num_vars, "marginal mask width");
@@ -438,7 +634,8 @@ impl Evaluator {
                 .iter()
                 .map(|&(leaf, b)| (x_ids[b * p.num_vars + p.leaf_var[leaf]], cache.slope[leaf]))
                 .collect();
-            let prods = sess.mul_vec(&pairs);
+            let prods =
+                if pipelined { sess.submit(FlightOp::Mul(pairs)) } else { sess.mul_vec(&pairs) };
             let val_ops: Vec<(i128, Vec<(i128, DataId)>)> = live
                 .iter()
                 .zip(&prods)
@@ -446,11 +643,215 @@ impl Evaluator {
                     (p.d as i128, vec![(1, pr), (-1, cache.theta[leaf])])
                 })
                 .collect();
-            let vals = sess.lin_vec(&val_ops);
+            let vals = if pipelined {
+                let v = sess.submit(FlightOp::Lin(val_ops));
+                sess.complete();
+                v
+            } else {
+                sess.lin_vec(&val_ops)
+            };
             for (&(leaf, b), &val) in live.iter().zip(&vals) {
                 leaf_vals[leaf * bsz + b] = val;
             }
         }
+        (tag0, leaf_vals)
+    }
+
+    /// Evaluate all `queries` simultaneously over the compiled dependency
+    /// DAG, one coalesced flight per wave: each wave stages every ready
+    /// unit's multiplications, then every ready sum's lin-combines, then
+    /// every unit's tagged truncation, and launches the lot as one framed
+    /// message per member per physical round. Returns the revealed d-scaled
+    /// root value per query (same order) and the traffic spent.
+    ///
+    /// Byte-identical to [`Evaluator::eval_batch_sequential`] (and to
+    /// evaluating the queries one `eval_batch(&[q])` at a time): mul/lin
+    /// are value-exact on reconstruction, and every divpub carries the
+    /// exact tag the stream-order executor assigns (the precomputed
+    /// [`DagUnit::qoff`]), so its ±1 rounding is identical. Message, byte
+    /// and exercise totals match the sequential path under the per-op
+    /// accounting schedule; only rounds (and therefore virtual latency)
+    /// shrink — to [`EvalPlan::critical_depth`] waves
+    /// ([`EvalPlan::pipelined_sim_rounds`] in total).
+    pub fn eval_batch<S: MpcSession>(
+        &mut self,
+        sess: &mut S,
+        queries: &[Query],
+        sum_w: &[DataId],
+        learned_theta: Option<&[DataId]>,
+    ) -> (Vec<i128>, NetStats) {
+        let before = sess.stats();
+        let bsz = queries.len();
+        if bsz == 0 {
+            return (Vec::new(), sess.stats().delta_since(&before));
+        }
+        let (tag0, leaf_vals) = self.batch_prologue(sess, queries, learned_theta, true);
+        let p = &self.plan;
+        let m = p.divpubs_per_query;
+
+        // Materialized (node × query) values per step; pass-through nodes
+        // stay unmaterialized (reads alias through `p.pass_through`). The
+        // placeholder id is never handed to the session: the wave order
+        // guarantees every slot a unit reads was scattered by an earlier
+        // wave (or earlier unit of the same flight).
+        let mut vals: Vec<Vec<DataId>> = p
+            .steps
+            .iter()
+            .map(|s| match s {
+                PlanStep::Product { width, .. } | PlanStep::Sum { width, .. } => {
+                    vec![DataId(u64::MAX); width * bsz]
+                }
+            })
+            .collect();
+
+        for wave in &p.waves {
+            // Pass 1 — stage every unit's multiplications, wave-unit order.
+            let mut mul_offs = Vec::with_capacity(wave.len());
+            let mut pairs: Vec<(DataId, DataId)> = Vec::new();
+            for u in wave {
+                mul_offs.push(pairs.len());
+                match &p.steps[u.step] {
+                    PlanStep::Product { first, rounds, .. } => {
+                        for &(node, child) in &rounds[u.round] {
+                            for b in 0..bsz {
+                                let acc = if u.round == 0 {
+                                    resolve_dag(
+                                        first[node], u.step, b, &vals, &leaf_vals,
+                                        &p.pass_through, bsz,
+                                    )
+                                } else {
+                                    vals[u.step][node * bsz + b]
+                                };
+                                let ch = resolve_dag(
+                                    child, u.step, b, &vals, &leaf_vals, &p.pass_through, bsz,
+                                );
+                                pairs.push((acc, ch));
+                            }
+                        }
+                    }
+                    PlanStep::Sum { node_edges, .. } => {
+                        for edges in node_edges {
+                            for &(pidx, child) in edges {
+                                for b in 0..bsz {
+                                    let ch = resolve_dag(
+                                        child, u.step, b, &vals, &leaf_vals, &p.pass_through,
+                                        bsz,
+                                    );
+                                    pairs.push((sum_w[pidx], ch));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Every wave multiplies: product rounds by definition, sum
+            // units on their (≥ 1 by validate()) weight×child edges.
+            let prods = sess.submit(FlightOp::Mul(pairs));
+
+            // Pass 2 — stage the per-node lin sums of the wave's sum units.
+            let mut lin_offs = Vec::with_capacity(wave.len());
+            let mut ops: Vec<(i128, Vec<(i128, DataId)>)> = Vec::new();
+            for (ui, u) in wave.iter().enumerate() {
+                lin_offs.push(ops.len());
+                if let PlanStep::Sum { node_edges, .. } = &p.steps[u.step] {
+                    let mut off = mul_offs[ui];
+                    for edges in node_edges {
+                        for b in 0..bsz {
+                            let terms: Vec<(i128, DataId)> = (0..edges.len())
+                                .map(|e| (1, prods[off + e * bsz + b]))
+                                .collect();
+                            ops.push((0, terms));
+                        }
+                        off += edges.len() * bsz;
+                    }
+                }
+            }
+            let sums = if ops.is_empty() { Vec::new() } else { sess.submit(FlightOp::Lin(ops)) };
+
+            // Pass 3 — stage every unit's tagged truncation with the exact
+            // sequential tag (`tag0 + b·m + qoff + element`).
+            let mut div_offs = Vec::with_capacity(wave.len());
+            let mut us: Vec<DataId> = Vec::new();
+            let mut tags: Vec<u64> = Vec::new();
+            for (ui, u) in wave.iter().enumerate() {
+                div_offs.push(us.len());
+                match &p.steps[u.step] {
+                    PlanStep::Product { rounds, .. } => {
+                        for j in 0..rounds[u.round].len() {
+                            for b in 0..bsz {
+                                us.push(prods[mul_offs[ui] + j * bsz + b]);
+                                tags.push(tag0 + b as u64 * m + u.qoff + j as u64);
+                            }
+                        }
+                    }
+                    PlanStep::Sum { width, .. } => {
+                        for i in 0..*width {
+                            for b in 0..bsz {
+                                us.push(sums[lin_offs[ui] + i * bsz + b]);
+                                tags.push(tag0 + b as u64 * m + u.qoff + i as u64);
+                            }
+                        }
+                    }
+                }
+            }
+            let outs = sess.submit(FlightOp::DivpubTagged { us, d: p.d, tags });
+            sess.complete();
+
+            // Pass 4 — scatter the truncated values into the step tables.
+            for (ui, u) in wave.iter().enumerate() {
+                match &p.steps[u.step] {
+                    PlanStep::Product { rounds, .. } => {
+                        for (j, &(node, _)) in rounds[u.round].iter().enumerate() {
+                            for b in 0..bsz {
+                                vals[u.step][node * bsz + b] = outs[div_offs[ui] + j * bsz + b];
+                            }
+                        }
+                    }
+                    PlanStep::Sum { width, .. } => {
+                        for i in 0..*width {
+                            for b in 0..bsz {
+                                vals[u.step][i * bsz + b] = outs[div_offs[ui] + i * bsz + b];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- reveal every root to the client -------------------------------
+        let last = p.steps.len() - 1;
+        let roots: Vec<DataId> = (0..bsz)
+            .map(|b| node_out(last, 0, b, &vals, &leaf_vals, &p.pass_through, bsz))
+            .collect();
+        sess.mark_outputs(&roots); // the posteriors ARE the functionality
+        let revealed = sess.reveal_vec(&roots);
+        let f = sess.field();
+        let out: Vec<i128> = revealed.into_iter().map(|v| f.to_i128(v)).collect();
+        (out, sess.stats().delta_since(&before))
+    }
+
+    /// The stream-order reference executor: one `mul_vec`/`lin_vec`/
+    /// `divpub_vec_tagged` round-trip per plan step, exactly as every
+    /// backend ran before the round scheduler existed. Kept (not as a
+    /// fallback but as a *pinned contract*) so the cross-backend tests can
+    /// assert the pipelined path reveals byte-identical values while
+    /// spending the same messages under per-op accounting — and as the
+    /// honest baseline the §Perf round-count tables compare against.
+    pub fn eval_batch_sequential<S: MpcSession>(
+        &mut self,
+        sess: &mut S,
+        queries: &[Query],
+        sum_w: &[DataId],
+        learned_theta: Option<&[DataId]>,
+    ) -> (Vec<i128>, NetStats) {
+        let before = sess.stats();
+        let bsz = queries.len();
+        if bsz == 0 {
+            return (Vec::new(), sess.stats().delta_since(&before));
+        }
+        let (tag0, leaf_vals) = self.batch_prologue(sess, queries, learned_theta, false);
+        let p = &self.plan;
+        let m = p.divpubs_per_query;
 
         // --- layered steps (node-major × query-inner layout) ---------------
         let mut prev: Vec<DataId> = Vec::new();
@@ -571,6 +972,115 @@ mod tests {
         // 2 chain-link divpubs + 1 sum divpub per query
         assert_eq!(plan.divpubs_per_query, 3);
         assert_eq!(plan.chain_rounds(), 2);
+        // dependency DAG: the product round (qoff 0) must finish before the
+        // sum that consumes it (qoff 2) — two waves, no pass-throughs
+        assert_eq!(plan.critical_depth(), 2);
+        assert_eq!(plan.waves[0], vec![DagUnit { step: 0, round: 0, qoff: 0 }]);
+        assert_eq!(plan.waves[1], vec![DagUnit { step: 1, round: 0, qoff: 2 }]);
+        assert!(plan.pass_through.iter().flatten().all(|a| a.is_none()));
+        assert_eq!(plan.pipelined_sim_rounds(), 6 * 2 + 9);
+    }
+
+    #[test]
+    fn waves_tile_the_divpub_space_on_toy() {
+        let Some(st) = toy() else { return };
+        let theta = crate::spn::learn::default_leaf_theta(&st);
+        let plan = EvalPlan::compile(&st, &theta, 256);
+        // every unit appears in exactly one wave, in plan (= qoff) order,
+        // and unit element counts tile [0, divpubs_per_query) exactly
+        let mut units: Vec<DagUnit> = plan.waves.iter().flatten().copied().collect();
+        units.sort_by_key(|u| u.qoff);
+        let mut expect = 0u64;
+        for u in &units {
+            assert_eq!(u.qoff, expect, "units must tile the sequential tag layout");
+            expect += match &plan.steps[u.step] {
+                PlanStep::Product { rounds, .. } => rounds[u.round].len() as u64,
+                PlanStep::Sum { width, .. } => *width as u64,
+            };
+        }
+        assert_eq!(expect, plan.divpubs_per_query);
+        // the critical path can never exceed the sequential step count and
+        // every plan has at least one wave (the root sum)
+        assert!(plan.critical_depth() >= 1);
+        assert!(plan.critical_depth() <= plan.chain_rounds());
+        // Causality: a unit may only read node values materialized by a
+        // *strictly earlier* wave. Replay the schedule against a defined-
+        // set, checking every read against the state as of the previous
+        // wave's end (writes of the current wave are invisible to reads —
+        // exactly how the executor's vals tables behave).
+        let mut defined: Vec<Vec<bool>> = plan
+            .steps
+            .iter()
+            .map(|s| match s {
+                PlanStep::Product { width, .. } | PlanStep::Sum { width, .. } => {
+                    vec![false; *width]
+                }
+            })
+            .collect();
+        let mut acc_rounds: Vec<Vec<usize>> = defined.iter().map(|d| vec![0; d.len()]).collect();
+        // chain degree per product node: output exists after the LAST round
+        let deg: Vec<Vec<usize>> = plan
+            .steps
+            .iter()
+            .map(|s| match s {
+                PlanStep::Product { width, rounds, .. } => {
+                    let mut d = vec![1usize; *width];
+                    for round in rounds {
+                        for &(n, _) in round {
+                            d[n] += 1;
+                        }
+                    }
+                    d
+                }
+                PlanStep::Sum { .. } => Vec::new(),
+            })
+            .collect();
+        for wave in &plan.waves {
+            let snap = defined.clone();
+            let snap_acc = acc_rounds.clone();
+            let avail = |s: usize, c: Src| match c {
+                Src::Leaf(_) => true,
+                Src::Prev(i) => match plan.pass_through[s - 1][i] {
+                    None => snap[s - 1][i],
+                    Some(Src::Leaf(_)) => true,
+                    Some(Src::Prev(j)) => snap[s - 2][j],
+                },
+            };
+            for u in wave {
+                match &plan.steps[u.step] {
+                    PlanStep::Product { first, rounds, .. } => {
+                        for &(node, child) in &rounds[u.round] {
+                            assert!(avail(u.step, child), "child read before materialized");
+                            if u.round == 0 {
+                                assert!(avail(u.step, first[node]), "seed read early");
+                            } else {
+                                assert_eq!(
+                                    snap_acc[u.step][node],
+                                    u.round,
+                                    "accumulator must hold exactly the prior rounds"
+                                );
+                            }
+                        }
+                        for &(node, _) in &rounds[u.round] {
+                            acc_rounds[u.step][node] = u.round + 1;
+                            if u.round + 2 == deg[u.step][node] {
+                                defined[u.step][node] = true;
+                            }
+                        }
+                    }
+                    PlanStep::Sum { width, node_edges } => {
+                        for edges in node_edges {
+                            for &(_, child) in edges {
+                                assert!(avail(u.step, child), "sum child read early");
+                            }
+                        }
+                        for i in 0..*width {
+                            defined[u.step][i] = true;
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

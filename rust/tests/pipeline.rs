@@ -1,0 +1,298 @@
+//! Pipelined round engine tests (DESIGN.md §Round scheduler).
+//!
+//! Pins the two contracts of the dependency-DAG scheduler at once, across
+//! backends:
+//!
+//! 1. **Byte identity** — [`Evaluator::eval_batch`] (one coalesced flight
+//!    per DAG wave) reveals exactly what the stream-order
+//!    [`Evaluator::eval_batch_sequential`] reveals, on `SimSession` and on
+//!    real `TcpSession` members, for `mini_demo` and a deeper synthetic
+//!    ladder with a long product chain and a pass-through node.
+//! 2. **Rounds collapse to the critical path** — under the batched sim
+//!    accounting schedule a warm batch costs exactly
+//!    [`EvalPlan::pipelined_sim_rounds`] = `6·critical_depth + 9` rounds,
+//!    while message/byte/exercise totals under per-op accounting are
+//!    unchanged from the sequential executor (coalescing moves latency,
+//!    not traffic).
+//!
+//! Under `--features checked-session` every session here runs wrapped in
+//! the CheckedSession sanitizer, which additionally holds each flight to
+//! the Tables 2–3 conservation law and per-flight DataId/tag hygiene.
+
+use spn_mpc::field::Field;
+use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
+use spn_mpc::protocols::engine::{Engine, EngineConfig};
+use spn_mpc::protocols::MpcSession;
+use spn_mpc::spn::{
+    EvalPlan, Evaluator, Layer, LayerKind, ParamKind, Query, Src, Structure,
+};
+use spn_mpc::spn::structure::Stats;
+
+#[cfg(feature = "checked-session")]
+use spn_mpc::protocols::checked::CheckedSession;
+#[cfg(feature = "checked-session")]
+fn wrap<S: MpcSession>(s: S) -> CheckedSession<S> {
+    CheckedSession::new(s)
+}
+#[cfg(not(feature = "checked-session"))]
+fn wrap<S: MpcSession>(s: S) -> S {
+    s
+}
+#[cfg(feature = "checked-session")]
+fn wrap_engine(e: Engine) -> CheckedSession<Engine> {
+    let schedule = e.cfg.schedule;
+    CheckedSession::with_sim_accounting(e, schedule)
+}
+#[cfg(not(feature = "checked-session"))]
+fn wrap_engine(e: Engine) -> Engine {
+    e
+}
+#[cfg(feature = "checked-session")]
+fn unwrap_session<S: MpcSession>(s: CheckedSession<S>) -> S {
+    s.into_inner()
+}
+#[cfg(not(feature = "checked-session"))]
+fn unwrap_session<S: MpcSession>(s: S) -> S {
+    s
+}
+
+/// A synthetic 4-layer "ladder": deeper than `mini_demo` in exactly the
+/// ways the scheduler must handle — a 5-child product whose chain spans 3
+/// DAG waves and consumes its sum input *last*, plus a degree-1 product
+/// node (a pass-through the pipelined executor never materializes).
+///
+/// ```text
+///   root = w₂·(L4·L5·L6·(w₀·(L0·L1) + w₁·(L2·L3))) + w₃·L7
+/// ```
+fn ladder_structure() -> Structure {
+    let st = Structure {
+        name: "ladder".into(),
+        num_vars: 8,
+        rows: 240,
+        leaf_var: (0..8).collect(),
+        leaf_claim: vec![-1; 8], // plain Bernoulli leaves
+        layer_widths: vec![8, 2, 1, 2, 1],
+        layer_offset: vec![0, 8, 10, 11, 13],
+        total_nodes: 14,
+        layers: vec![
+            Layer {
+                kind: LayerKind::Product,
+                width: 2,
+                in_width: 8,
+                rows: vec![0, 0, 1, 1],
+                cols: vec![0, 1, 2, 3],
+                param: vec![-1; 4],
+            },
+            Layer {
+                kind: LayerKind::Sum,
+                width: 1,
+                in_width: 10,
+                rows: vec![0, 0],
+                cols: vec![0, 1],
+                param: vec![0, 1],
+            },
+            Layer {
+                // node 0: leaves 4,5,6 then the sum (col 0) LAST — a
+                // 3-round chain whose final link waits on the sum wave;
+                // node 1: single child leaf 7 — a pass-through.
+                kind: LayerKind::Product,
+                width: 2,
+                in_width: 9,
+                rows: vec![0, 0, 0, 0, 1],
+                cols: vec![5, 6, 7, 0, 8],
+                param: vec![-1; 5],
+            },
+            Layer {
+                kind: LayerKind::Sum,
+                width: 1,
+                in_width: 10,
+                rows: vec![0, 0],
+                cols: vec![0, 1],
+                param: vec![2, 3],
+            },
+        ],
+        num_params: 4,
+        num_sum_edges: 4,
+        param_kind: vec![ParamKind::SumEdge; 4],
+        param_num: vec![8, 9, 11, 12],
+        param_den: vec![10, 10, 13, 13],
+        sum_groups: vec![vec![0, 1], vec![2, 3]],
+        stats: Stats { sum: 2, product: 4, leaf: 8, params: 4, edges: 11, layers: 4 },
+    };
+    st.validate().expect("ladder structure must validate");
+    st
+}
+
+/// d-scaled sum weights per param id; each group sums to exactly d = 256
+/// so an all-marginal query evaluates to exactly d (no divpub rounding).
+fn weights_for(st: &Structure) -> Vec<u128> {
+    match st.num_sum_edges {
+        2 => vec![64, 192],
+        4 => vec![64, 192, 128, 128],
+        n => panic!("no test weights for {n} sum edges"),
+    }
+}
+
+fn queries_for(nv: usize) -> Vec<Query> {
+    vec![
+        Query { x: vec![0; nv], marg: vec![false; nv] },
+        Query { x: vec![1; nv], marg: vec![false; nv] },
+        Query {
+            x: (0..nv).map(|i| (i % 2) as u8).collect(),
+            marg: (0..nv).map(|i| i % 3 == 0).collect(),
+        },
+        Query { x: vec![0; nv], marg: vec![true; nv] },
+    ]
+}
+
+fn plan_for(st: &Structure) -> EvalPlan {
+    EvalPlan::compile(st, &vec![0.5; st.num_leaves()], 256)
+}
+
+fn both_structures() -> Vec<Structure> {
+    vec![Structure::mini_demo(), ladder_structure()]
+}
+
+#[test]
+fn ladder_compiles_with_expected_dag() {
+    let st = ladder_structure();
+    let plan = plan_for(&st);
+    // divpubs: 2 (layer-0 chain links) + 1 (sum) + 3 (ladder chain links;
+    // the pass-through node truncates nothing) + 1 (root sum)
+    assert_eq!(plan.divpubs_per_query, 7);
+    // sequential executor: 1 + 1 + 3 + 1 round-trips
+    assert_eq!(plan.chain_rounds(), 6);
+    // the DAG overlaps the two product chains: leaf-fed rounds of the
+    // ladder run concurrently with layer 0 and the first sum, so the
+    // critical path is 4, not 6
+    assert_eq!(plan.critical_depth(), 4);
+    assert_eq!(plan.pipelined_sim_rounds(), 6 * 4 + 9);
+    // the degree-1 product node is an unmaterialized alias to its leaf
+    assert_eq!(plan.pass_through[2][1], Some(Src::Leaf(7)));
+    assert_eq!(plan.pass_through[2][0], None);
+}
+
+#[test]
+fn pipelined_equals_sequential_bit_exact_on_sim() {
+    for st in both_structures() {
+        let plan = plan_for(&st);
+        let qs = queries_for(st.num_vars);
+        let w = weights_for(&st);
+
+        let mut a = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(3).batched()));
+        let wa = a.input_vec(1, &w);
+        let (pipe, _) = Evaluator::new(plan.clone()).eval_batch(&mut a, &qs, &wa, None);
+
+        let mut b = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(3).batched()));
+        let wb = b.input_vec(1, &w);
+        let (seq, _) =
+            Evaluator::new(plan.clone()).eval_batch_sequential(&mut b, &qs, &wb, None);
+
+        assert_eq!(pipe, seq, "{}: pipelined must equal sequential bit-for-bit", st.name);
+        // group weights sum to d exactly, so the all-marginal query is
+        // rounding-free: S(∅)·d = d on the nose
+        assert_eq!(pipe[3], 256, "{}: S(∅)·d", st.name);
+    }
+}
+
+#[test]
+fn pipelined_message_and_exercise_totals_match_perop() {
+    // Coalescing moves latency, not traffic: under per-op accounting the
+    // flight path spends exactly the sequential messages/bytes/exercises,
+    // and strictly fewer rounds.
+    for st in both_structures() {
+        let plan = plan_for(&st);
+        let qs = queries_for(st.num_vars);
+        let w = weights_for(&st);
+
+        let mut a = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(3)));
+        let wa = a.input_vec(1, &w);
+        let (pipe, sa) = Evaluator::new(plan.clone()).eval_batch(&mut a, &qs, &wa, None);
+
+        let mut b = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(3)));
+        let wb = b.input_vec(1, &w);
+        let (seq, sb) =
+            Evaluator::new(plan.clone()).eval_batch_sequential(&mut b, &qs, &wb, None);
+
+        assert_eq!(pipe, seq, "{}", st.name);
+        assert_eq!(sa.messages, sb.messages, "{}: message totals must not change", st.name);
+        assert_eq!(sa.bytes, sb.bytes, "{}: byte totals must not change", st.name);
+        assert_eq!(sa.exercises, sb.exercises, "{}: exercise totals must not change", st.name);
+        assert!(
+            sa.rounds < sb.rounds,
+            "{}: pipelined {} rounds must beat sequential {}",
+            st.name,
+            sa.rounds,
+            sb.rounds
+        );
+    }
+}
+
+#[test]
+fn warm_pipelined_rounds_equal_six_depth_plus_nine() {
+    // The acceptance bound of the round scheduler: a warm batch (slope
+    // cache built) costs exactly the closed form — input star 3 + leaf
+    // flight 3 + 6 per DAG wave + reveal 3 — under batched accounting.
+    for st in both_structures() {
+        let plan = plan_for(&st);
+        let qs = queries_for(st.num_vars);
+        let w = weights_for(&st);
+
+        let mut sess = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(3).batched()));
+        let ws = sess.input_vec(1, &w);
+        let mut ev = Evaluator::new(plan);
+        let (_, cold) = ev.eval_batch(&mut sess, &qs, &ws, None);
+        let (_, warm) = ev.eval_batch(&mut sess, &qs, &ws, None);
+
+        let want = ev.plan().pipelined_sim_rounds();
+        assert_eq!(want, 6 * ev.plan().critical_depth() as u64 + 9, "{}", st.name);
+        assert_eq!(
+            warm.rounds, want,
+            "{}: warm batch rounds must equal the DAG critical path",
+            st.name
+        );
+        // the cold batch additionally pays the query-independent slope lin
+        assert_eq!(cold.rounds, want + 2, "{}: cold batch = warm + slope", st.name);
+    }
+}
+
+#[test]
+fn pipelined_tcp_byte_identical_to_sim_and_fewer_round_trips() {
+    // The same flights over real sockets: one OP_FLIGHT frame per member
+    // per wave, answers byte-identical to the simulation's (and to the
+    // sequential TCP executor on an identically-seeded fresh session,
+    // which consumes the same tag block and hence the same PRF masks).
+    for st in both_structures() {
+        let plan = plan_for(&st);
+        let qs = queries_for(st.num_vars);
+        let w = weights_for(&st);
+        let n = 3;
+
+        let mut sim = wrap_engine(Engine::new(Field::paper(), EngineConfig::new(n).batched()));
+        let wsim = sim.input_vec(1, &w);
+        let (sim_roots, _) = Evaluator::new(plan.clone()).eval_batch(&mut sim, &qs, &wsim, None);
+
+        let mut tp =
+            wrap(TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap());
+        let wtp = tp.input_vec(1, &w);
+        let (tcp_pipe, sp) = Evaluator::new(plan.clone()).eval_batch(&mut tp, &qs, &wtp, None);
+        unwrap_session(tp).shutdown().unwrap();
+
+        let mut ts =
+            wrap(TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n)).unwrap());
+        let wts = ts.input_vec(1, &w);
+        let (tcp_seq, ss) =
+            Evaluator::new(plan.clone()).eval_batch_sequential(&mut ts, &qs, &wts, None);
+        unwrap_session(ts).shutdown().unwrap();
+
+        assert_eq!(tcp_pipe, sim_roots, "{}: TCP flights must match the sim", st.name);
+        assert_eq!(tcp_pipe, tcp_seq, "{}: TCP flights must match sequential TCP", st.name);
+        assert!(
+            sp.rounds < ss.rounds,
+            "{}: coalesced TCP rounds {} must beat sequential {}",
+            st.name,
+            sp.rounds,
+            ss.rounds
+        );
+    }
+}

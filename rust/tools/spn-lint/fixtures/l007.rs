@@ -1,0 +1,10 @@
+//! L007 fixture: plan-step internals re-derived outside spn/plan.rs.
+// A comment naming PlanStep::Product is a decoy and must not fire.
+
+fn reschedule(step: &PlanStep) -> usize {
+    match step {
+        PlanStep::Product { rounds, .. } => rounds.len(),
+        // lint:allow(L007) — suppressed decoy, must not fire
+        PlanStep::Sum { width, .. } => *width,
+    }
+}

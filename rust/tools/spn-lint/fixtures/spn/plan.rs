@@ -1,0 +1,9 @@
+//! Path-routing decoy: this file ends in `spn/plan.rs`, the one place
+//! PlanStep internals are legal — nothing here may fire L007.
+
+fn compile_step(step: &PlanStep) -> usize {
+    match step {
+        PlanStep::Product { rounds, .. } => rounds.len(),
+        PlanStep::Sum { width, .. } => *width,
+    }
+}

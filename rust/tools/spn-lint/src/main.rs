@@ -34,6 +34,12 @@
 //! * **L006** — every `DESIGN.md §X` reference in source comments must
 //!   resolve to a heading in DESIGN.md (prefix-tolerant both ways, so
 //!   line-wrapped refs and trailing words still match).
+//! * **L007** — `PlanStep::` matched or constructed outside `spn/plan.rs`:
+//!   the step-dependency DAG (waves, qoffs, pass-through aliases) is
+//!   compiled once and executed through the plan's own schedule; code that
+//!   re-derives scheduling from raw plan internals elsewhere will silently
+//!   disagree with the wave order the round scheduler and the tag ledger
+//!   rely on (DESIGN.md §Round scheduler).
 //!
 //! Suppression: `lint:allow(L00X)` on the flagged line or the line
 //! immediately above. Lines after a file's literal `#[cfg(test)]` marker
@@ -181,6 +187,7 @@ fn scan_file(
         || disp.ends_with("sharing/shamir.rs")
         || disp.contains("net/tcp");
     let l004_applies = disp.ends_with("net/serve.rs") || disp.ends_with("net/fleet.rs");
+    let l007_allowed = disp.ends_with("spn/plan.rs");
     let l005_file = disp.ends_with("net/tcp.rs")
         || disp.ends_with("net/tcp_session.rs")
         || disp.ends_with("net/wire.rs");
@@ -281,6 +288,18 @@ fn scan_file(
                 msg: "HashMap/BTreeMap in the data plane — share stores and hot-path \
                       scratch are dense slabs (DESIGN.md §Data plane); memo caches may \
                       use lint:allow(L003)"
+                    .to_string(),
+            });
+        }
+        if !l007_allowed && line.contains("PlanStep::") && !allowed("L007") {
+            findings.push(Finding {
+                file: disp.to_string(),
+                line: lineno,
+                lint: "L007",
+                msg: "PlanStep internals used outside spn/plan.rs — execute through the \
+                      compiled schedule (waves, qoffs, pass-through aliases); re-deriving \
+                      scheduling elsewhere desyncs from the round scheduler and the tag \
+                      ledger (DESIGN.md §Round scheduler)"
                     .to_string(),
             });
         }
@@ -435,6 +454,7 @@ fn self_check(root: &Path) -> ExitCode {
         ("L004", "net/serve.rs"),
         ("L005", "net/tcp_session.rs"),
         ("L006", "l006.rs"),
+        ("L007", "l007.rs"),
     ];
     for (lint, file) in expect {
         if !findings.iter().any(|f| f.lint == *lint && f.file.ends_with(file)) {
@@ -452,6 +472,14 @@ fn self_check(root: &Path) -> ExitCode {
     let l001 = findings.iter().filter(|f| f.lint == "L001").count();
     if l001 != 1 {
         eprintln!("self-check FAIL: expected exactly 1 L001 finding, got {l001}");
+        failed = true;
+    }
+    // l007.rs carries a comment decoy and a suppressed arm, and
+    // fixtures/spn/plan.rs is the allowed path: exactly one L007 total
+    // proves both the suppression and the path routing.
+    let l007 = findings.iter().filter(|f| f.lint == "L007").count();
+    if l007 != 1 {
+        eprintln!("self-check FAIL: expected exactly 1 L007 finding, got {l007}");
         failed = true;
     }
     if failed {
@@ -486,7 +514,7 @@ fn main() -> ExitCode {
             "--help" | "-h" => {
                 println!(
                     "spn-lint [--root DIR] [--self-check]\n\
-                     lints DIR/rust/src (L001–L006) against DIR/DESIGN.md;\n\
+                     lints DIR/rust/src (L001–L007) against DIR/DESIGN.md;\n\
                      --self-check runs the linter over its committed fixtures instead"
                 );
                 return ExitCode::SUCCESS;
