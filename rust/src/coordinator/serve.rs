@@ -18,17 +18,45 @@
 //! manager would let it reconstruct the secrets). Each shard's evaluator
 //! is then confined to its [`TagStripe`] and the fleet front-end
 //! ([`crate::net::fleet::serve_fleet`]) routes queries across them.
+//!
+//! The same replay contract powers **respawn** (DESIGN.md §Fleet): a
+//! [`RespawnBuilder`] turns "make me a fresh session for shard s" into a
+//! full [`RespawnFactory`] by re-running the identical training schedule
+//! on the new session and confining its evaluator to the next
+//! *generation* of the shard's tag stripe — so a revived shard's shares
+//! match the fleet byte-for-byte while its divpub tags can never collide
+//! with the dead generation's burned ones.
 
 use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::train::{train, SharedModel, TrainConfig, TrainReport};
-use crate::net::fleet::{serve_fleet, FleetReport, FleetShard, ShardSever};
+use crate::net::fault::FaultPlan;
+use crate::net::fleet::{
+    serve_fleet, FleetOptions, FleetReport, FleetShard, RespawnFactory, RespawnShard, ShardSever,
+};
 use crate::net::serve::{serve, ServeConfig, ServeReport};
 use crate::protocols::session::MpcSession;
 use crate::spn::plan::{EvalPlan, Evaluator, TagStripe};
 use crate::spn::structure::Structure;
+
+/// How to rebuild one shard of the fleet from scratch: the
+/// transport-specific half of respawn. [`train_and_serve_fleet`] supplies
+/// the training-replay half, turning this into a [`RespawnFactory`].
+pub struct RespawnBuilder<'f, S: MpcSession> {
+    /// Build a fresh, untrained session (plus its `kill-shard` transport
+    /// switch, if any) for shard `s`. Called on the dead shard's
+    /// scheduler thread while survivors keep serving.
+    pub build: Box<dyn Fn(usize) -> Result<(S, Option<ShardSever>)> + Send + Sync + 'f>,
+    /// Teardown for replacement sessions; `dead = true` means the
+    /// replacement itself died, so reap lossily. `Arc` (not `Box`):
+    /// one clone rides inside every [`RespawnShard`] as its `reap` hook,
+    /// which must own its callee.
+    pub reap: Arc<dyn Fn(S, bool) + Send + Sync>,
+}
 
 /// Serve an already-trained model: compile its plan, build the persistent
 /// [`Evaluator`], and run the scheduler until shutdown. The session stays
@@ -71,9 +99,18 @@ pub fn train_and_serve<S: MpcSession>(
 /// transport switch (TCP fleets pass `TcpSession::sever_handle` closures;
 /// Sim fleets pass an empty vec). The sessions stay alive afterwards: the
 /// caller shuts each down, using `TcpSession::shutdown_lossy` for shards
-/// the returned [`FleetReport`] marks dead.
+/// the returned [`FleetReport`] marks dead **or respawned** (a respawn
+/// orphans the original session's transport).
+///
+/// `respawn`, when present, arms self-healing: each death triggers a
+/// fresh `build(s)` + identical training replay + evaluator confinement
+/// to the next generation sub-stripe. `probe_interval` arms idle health
+/// probes; `fault_plan` injects a deterministic chaos schedule.
+// `S: 'static`: the per-instance reap hook rides inside `RespawnShard`
+// as a `Box<dyn FnOnce(S, bool) + Send>` (an owning, `'static` box), so
+// the session type itself must not borrow.
 #[allow(clippy::too_many_arguments)]
-pub fn train_and_serve_fleet<S: MpcSession + Send>(
+pub fn train_and_serve_fleet<S: MpcSession + Send + 'static>(
     sessions: &mut [S],
     st: &Structure,
     shard_counts: &[Vec<u64>],
@@ -83,6 +120,9 @@ pub fn train_and_serve_fleet<S: MpcSession + Send>(
     listener: TcpListener,
     cfg: &ServeConfig,
     severs: Vec<Option<ShardSever>>,
+    respawn: Option<RespawnBuilder<'_, S>>,
+    probe_interval: Option<Duration>,
+    fault_plan: Option<FaultPlan>,
 ) -> Result<(FleetReport, TrainReport)> {
     let nshards = sessions.len();
     if nshards == 0 {
@@ -118,6 +158,28 @@ pub fn train_and_serve_fleet<S: MpcSession + Send>(
             sever,
         });
     }
-    let report = serve_fleet(shards, listener, cfg)?;
+    // The respawn factory: transport-specific build, then the same
+    // deterministic replay the gen-0 sessions got, confined to the
+    // generation sub-stripe the supervisor hands us.
+    let proto_ref = &proto;
+    let factory: Option<RespawnFactory<'_, S>> = respawn.map(|rb| {
+        let f: RespawnFactory<'_, S> = Box::new(move |s: usize, stripe: TagStripe| {
+            let (mut sess, sever) = (rb.build)(s)?;
+            let (model, _) = train(&mut sess, st, shard_counts, rows_total, tcfg);
+            let ev = proto_ref.clone_into_session(&mut sess, stripe);
+            let reap = rb.reap.clone();
+            Ok(RespawnShard {
+                sess,
+                ev,
+                sum_w: model.sum_w,
+                learned_theta: model.leaf_theta,
+                sever,
+                reap: Box::new(move |sess, dead| reap(sess, dead)),
+            })
+        });
+        f
+    });
+    let opts = FleetOptions { probe_interval, respawn: factory, fault_plan };
+    let report = serve_fleet(shards, listener, cfg, opts)?;
     Ok((report, treport.expect("nshards ≥ 1")))
 }

@@ -15,12 +15,16 @@
 //!           compiled evaluation plan)
 //!   serve   [--dataset <name>] [--members N] [--backend sim|tcp] [--port P]
 //!           [--shards S] [--max-batch B] [--max-wait-ms T] [--max-queries Q]
+//!           [--respawn] [--probe-interval-ms T] [--fault-plan SPEC]
 //!           — train, then run the persistent private-inference service:
 //!           concurrent TCP clients, micro-batched over one MPC session
-//!           (or a fleet of S sessions with `--shards S`)
+//!           (or a fleet of S sessions with `--shards S`; `--respawn`
+//!           revives dead shards into fresh tag-stripe generations,
+//!           `--probe-interval-ms` arms idle health probes, and
+//!           `--fault-plan` injects a deterministic chaos schedule)
 //!   client  --addr host:port [--queries FILE.jsonl | --evidence v=b,...]
 //!           [--repeat R] [--concurrency C] [--kill-shard N] [--shutdown]
-//!           — drive (or stop) a running serve instance
+//!           [--no-retry] — drive (or stop) a running serve instance
 //!   kmeans  [--members N] [--k K] [--points P] [--backend sim|tcp]
 //!           — private clustering demo
 //!   tables  [--members N] — reproduce the paper's Tables 1–3 rows
@@ -36,7 +40,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use spn_mpc::coordinator::infer::{private_conditional, private_eval_batch, Query};
-use spn_mpc::coordinator::serve::{train_and_serve, train_and_serve_fleet};
+use spn_mpc::coordinator::serve::{train_and_serve, train_and_serve_fleet, RespawnBuilder};
+use spn_mpc::net::fault::FaultPlan;
 use spn_mpc::net::fleet::ShardSever;
 use spn_mpc::json::Json;
 use spn_mpc::net::serve::{query_from_json, Response, ServeClient, ServeConfig};
@@ -520,7 +525,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     std::io::stdout().flush()?;
 
-    if shards > 1 {
+    // Self-healing knobs force the fleet path even at --shards 1: a
+    // single-shard fleet with respawn is the minimal self-healing server.
+    let fleet_mode = shards > 1
+        || args.has("respawn")
+        || args.usize_or("probe-interval-ms", 0) > 0
+        || args.get("fault-plan").is_some();
+    if fleet_mode {
         return serve_fleet_cli(args, &st, n, shards, &counts, rows, &tcfg, &theta, listener, &cfg);
     }
     let checked = args.has("checked");
@@ -593,6 +604,17 @@ fn serve_fleet_cli(
     cfg: &ServeConfig,
 ) -> Result<()> {
     let checked = args.has("checked");
+    let want_respawn = args.has("respawn");
+    let probe_ms = args.usize_or("probe-interval-ms", 0);
+    let probe = (probe_ms > 0).then(|| Duration::from_millis(probe_ms as u64));
+    let fault_plan = match args.get("fault-plan") {
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec, shards)?;
+            eprintln!("[fleet] fault plan armed: {}", plan.summary());
+            Some(plan)
+        }
+        None => None,
+    };
     let report = match backend(args)? {
         "tcp" => {
             let mut raw = Vec::with_capacity(shards);
@@ -609,21 +631,57 @@ fn serve_fleet_cli(
             let (report, shutdowns) = if checked {
                 let mut sessions: Vec<CheckedSession<TcpSession>> =
                     raw.into_iter().map(CheckedSession::new).collect();
+                let respawn = want_respawn.then(|| RespawnBuilder {
+                    build: Box::new(move |_s| {
+                        let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+                        let h = sess.sever_handle()?;
+                        let sever: ShardSever = Box::new(move || h.sever());
+                        Ok((CheckedSession::new(sess), Some(sever)))
+                    }),
+                    reap: Arc::new(|cs: CheckedSession<TcpSession>, dead: bool| {
+                        let sess = cs.into_inner();
+                        if dead {
+                            sess.shutdown_lossy();
+                        } else if let Err(e) = sess.shutdown() {
+                            eprintln!("[fleet] replacement shutdown: {e}");
+                        }
+                    }),
+                });
                 let (report, _) = train_and_serve_fleet(
                     &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, severs,
+                    respawn, probe, fault_plan,
                 )?;
                 let inner: Vec<TcpSession> =
                     sessions.into_iter().map(CheckedSession::into_inner).collect();
                 (report, inner)
             } else {
                 let mut sessions = raw;
+                let respawn = want_respawn.then(|| RespawnBuilder {
+                    build: Box::new(move |_s| {
+                        let sess = TcpSession::spawn_local(Field::paper(), tcp_config(args, n))?;
+                        let h = sess.sever_handle()?;
+                        let sever: ShardSever = Box::new(move || h.sever());
+                        Ok((sess, Some(sever)))
+                    }),
+                    reap: Arc::new(|sess: TcpSession, dead: bool| {
+                        if dead {
+                            sess.shutdown_lossy();
+                        } else if let Err(e) = sess.shutdown() {
+                            eprintln!("[fleet] replacement shutdown: {e}");
+                        }
+                    }),
+                });
                 let (report, _) = train_and_serve_fleet(
                     &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, severs,
+                    respawn, probe, fault_plan,
                 )?;
                 (report, sessions)
             };
             for (s, sess) in shutdowns.into_iter().enumerate() {
-                if report.per_shard[s].dead {
+                // A shard that died OR respawned orphaned its gen-0
+                // transport — only the lossy teardown is safe for it.
+                let ps = &report.per_shard[s];
+                if ps.dead || ps.respawns > 0 {
                     sess.shutdown_lossy();
                 } else {
                     sess.shutdown()?;
@@ -633,7 +691,7 @@ fn serve_fleet_cli(
             report
         }
         _ => {
-            let build = |_: usize| {
+            let build = move |_: usize| {
                 let mut ec = engine_config(args, n);
                 ec.schedule = Schedule::Batched;
                 (Engine::new(Field::paper(), ec), ec.schedule)
@@ -645,14 +703,27 @@ fn serve_fleet_cli(
                         CheckedSession::with_sim_accounting(eng, sched)
                     })
                     .collect();
+                let respawn = want_respawn.then(|| RespawnBuilder {
+                    build: Box::new(move |s| {
+                        let (eng, sched) = build(s);
+                        Ok((CheckedSession::with_sim_accounting(eng, sched), None))
+                    }),
+                    reap: Arc::new(|_sess: CheckedSession<Engine>, _dead: bool| {}),
+                });
                 let (report, _) = train_and_serve_fleet(
                     &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, Vec::new(),
+                    respawn, probe, fault_plan,
                 )?;
                 report
             } else {
                 let mut sessions: Vec<Engine> = (0..shards).map(|s| build(s).0).collect();
+                let respawn = want_respawn.then(|| RespawnBuilder {
+                    build: Box::new(move |s| Ok((build(s).0, None))),
+                    reap: Arc::new(|_sess: Engine, _dead: bool| {}),
+                });
                 let (report, _) = train_and_serve_fleet(
                     &mut sessions, st, counts, rows as u64, tcfg, theta, listener, cfg, Vec::new(),
+                    respawn, probe, fault_plan,
                 )?;
                 report
             }
@@ -661,9 +732,11 @@ fn serve_fleet_cli(
     if checked {
         println!("[checked] CheckedSession sanitizer active: no contract violations");
     }
+    let probes: u64 = report.per_shard.iter().map(|r| r.probes).sum();
     println!(
         "serve: clean shutdown — {} queries from {} client(s) in {} batches (max tick {}), \
-         {} messages / {} rounds total, {} shard(s) ({} dead, {} re-dispatched)",
+         {} messages / {} rounds total, {} shard(s) ({} dead, {} re-dispatched), \
+         {} respawn(s), {} probe(s)",
         report.queries,
         report.clients,
         report.batches,
@@ -672,14 +745,66 @@ fn serve_fleet_cli(
         report.stats.rounds,
         report.shards,
         report.dead_shards,
-        report.redispatched
+        report.redispatched,
+        report.respawns,
+        probes
     );
+    for (s, ps) in report.per_shard.iter().enumerate() {
+        if ps.dead || ps.respawns > 0 || ps.panic_msg.is_some() {
+            println!(
+                "  shard {s}: {}, {} respawn(s){}{}",
+                if ps.dead { "dead" } else { "revived" },
+                ps.respawns,
+                match &ps.panic_msg {
+                    Some(m) => format!(" — last death: {m}"),
+                    None => String::new(),
+                },
+                if ps.links.is_empty() {
+                    String::new()
+                } else {
+                    format!(" — links {:?}", ps.links)
+                }
+            );
+        }
+    }
     Ok(())
+}
+
+/// Is this error reply a transient fleet condition — a shard died with
+/// the query aboard, or a respawn window briefly left no live shard —
+/// that a retry can outwait? Transport errors (connection gone) are NOT
+/// transient: the fleet front-end outlives its shards, so a dead socket
+/// means the server itself went away.
+fn is_transient_fleet_error(e: &anyhow::Error) -> bool {
+    let s = e.to_string();
+    s.contains("server error")
+        && (s.contains("died") || s.contains("no live shards") || s.contains("no surviving shards"))
+}
+
+/// One query with capped doubling backoff on transient fleet errors
+/// (shard death, respawn in progress) — the `client` default; `--no-retry`
+/// restores fail-fast. Worst case ~20 attempts over ~6 s, which covers a
+/// mini-demo respawn retrain with generous margin.
+fn query_with_retry(c: &mut ServeClient, q: &Query, retry: bool) -> Result<Response> {
+    let mut delay = Duration::from_millis(10);
+    for _ in 0..20 {
+        match c.query(q) {
+            Ok(r) => return Ok(r),
+            Err(e) if retry && is_transient_fleet_error(&e) => {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(400));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    c.query(q)
 }
 
 /// `client`: drive a running `serve` instance — single queries from
 /// `--evidence`, whole JSONL files, repeated and spread over concurrent
-/// connections, or `--shutdown` to stop the server.
+/// connections, or `--shutdown` to stop the server. Transient fleet
+/// errors (a shard died holding the query) are retried with backoff
+/// unless `--no-retry` is given.
 fn cmd_client(args: &Args) -> Result<()> {
     let addr =
         args.get("addr").ok_or_else(|| anyhow!("client needs --addr host:port"))?.to_string();
@@ -719,6 +844,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     let repeat = args.usize_or("repeat", 1).max(1);
     let queries: Vec<Query> = (0..repeat).flat_map(|_| base.iter().cloned()).collect();
     let conc = args.usize_or("concurrency", 1).clamp(1, queries.len());
+    let retry = !args.has("no-retry");
 
     let t0 = Instant::now();
     let mut results: Vec<(usize, Response, f64)> = Vec::with_capacity(queries.len());
@@ -726,7 +852,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         let mut c = probe;
         for (i, q) in queries.iter().enumerate() {
             let tq = Instant::now();
-            let resp = c.query(q)?;
+            let resp = query_with_retry(&mut c, q, retry)?;
             results.push((i, resp, tq.elapsed().as_secs_f64()));
         }
     } else {
@@ -742,7 +868,7 @@ fn cmd_client(args: &Args) -> Result<()> {
                 let mut i = t;
                 while i < queries.len() {
                     let tq = Instant::now();
-                    let resp = c.query(&queries[i])?;
+                    let resp = query_with_retry(&mut c, &queries[i], retry)?;
                     out.push((i, resp, tq.elapsed().as_secs_f64()));
                     i += conc;
                 }
@@ -963,8 +1089,17 @@ fn main() -> Result<()> {
                  \t--max-wait-ms T --max-queries Q (trains, then serves concurrent\n\
                  \t    clients from one persistent MPC session: queued queries\n\
                  \t    coalesce into one compiled-plan batch per scheduler tick)\n\
+                 \t--shards S (fleet of S replicated sessions behind one front-end)\n\
+                 \t--respawn (self-heal: a dead shard is retrained by deterministic\n\
+                 \t    replay into a fresh tag-stripe generation and re-admitted)\n\
+                 \t--probe-interval-ms T (idle health probes: a no-op secure round\n\
+                 \t    quarantines a dead shard before real queries reach it; 0 = off)\n\
+                 \t--fault-plan SPEC (deterministic chaos schedule, comma-separated:\n\
+                 \t    sever:S@W | delay:S@W:MS | panic:S@W | seeded:SEED[:HORIZON])\n\
                  client flags: --addr host:port [--queries FILE.jsonl | --evidence v=b,...]\n\
                  \t--repeat R --concurrency C --shutdown (stop the server)\n\
+                 \t--kill-shard N (chaos: sever shard N) --no-retry (fail fast\n\
+                 \t    instead of backing off on shard-death error replies)\n\
                  kmeans flags: --k K --points P"
             );
             Ok(())

@@ -1,0 +1,116 @@
+//! Capped, deterministically-jittered backoff — the one sanctioned sleep
+//! site in the `net/` layer (DESIGN.md §Fleet).
+//!
+//! Every retry loop in the transport and fleet code (member reconnects,
+//! accept-loop breathers, fault-plan delays) waits through this module
+//! instead of calling `thread::sleep` directly, for two reasons:
+//!
+//! * **Thundering-herd hygiene.** A fleet that loses a member loses every
+//!   shard's connection to it at once; naked fixed-interval retries then
+//!   hammer the listener in lockstep. [`Backoff`] doubles the wait per
+//!   attempt up to a cap and adds *deterministic* jitter (a [`Prng`] draw
+//!   keyed by seed and attempt number) so retries spread out — yet two
+//!   runs with the same seed wait the same schedule, keeping chaos tests
+//!   reproducible.
+//! * **Lintability.** spn-lint L008 flags any bare `thread::sleep` in
+//!   `net/` outside this file, so un-jittered waits cannot creep back in.
+//!
+//! [`pause`] is the raw escape hatch for fixed waits that are genuinely
+//! not retries (e.g. a fault-plan's scheduled frame delay); it exists so
+//! callers go through a named, greppable chokepoint rather than an
+//! anonymous sleep.
+
+use std::time::Duration;
+
+use crate::rng::{Prng, Rng};
+
+/// Exponential backoff with a cap and deterministic jitter.
+///
+/// The wait before attempt `k` (0-based) is drawn uniformly from
+/// `[base·2^k / 2, base·2^k)`, clamped to `cap` — the standard
+/// "equal jitter" scheme, with the jitter coming from a seeded [`Prng`]
+/// so the schedule is a pure function of `(seed, attempt)`.
+#[derive(Debug)]
+pub struct Backoff {
+    attempt: u32,
+    base: Duration,
+    cap: Duration,
+    seed: u64,
+}
+
+impl Backoff {
+    /// A schedule starting at `base` and never exceeding `cap`.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff { attempt: 0, base, cap, seed }
+    }
+
+    /// How many waits this schedule has served so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// The next wait in the schedule, without sleeping. Advances the
+    /// attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let shift = self.attempt.min(20); // 2^20 · base already dwarfs any cap
+        self.attempt += 1;
+        let full = self
+            .base
+            .saturating_mul(1u32 << shift)
+            .min(self.cap)
+            .max(Duration::from_micros(1));
+        let full_us = full.as_micros() as u64;
+        // equal jitter: [full/2, full), deterministic in (seed, attempt)
+        let mut rng = Prng::seed_from_u64(self.seed ^ (self.attempt as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let jittered_us = full_us / 2 + rng.gen_range_u64((full_us / 2).max(1));
+        Duration::from_micros(jittered_us)
+    }
+
+    /// Sleep for the next wait in the schedule.
+    pub fn wait(&mut self) {
+        let d = self.next_delay();
+        pause(d);
+    }
+
+    /// Restart the schedule (after a success).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// The `net/` layer's single raw sleep: a named chokepoint for fixed,
+/// non-retry waits (fault-plan delays, accept-loop breathers). Everything
+/// retry-shaped should use [`Backoff`] instead.
+pub fn pause(d: Duration) {
+    std::thread::sleep(d);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(400);
+        let mut a = Backoff::new(base, cap, 7);
+        let mut b = Backoff::new(base, cap, 7);
+        let delays: Vec<Duration> = (0..12).map(|_| a.next_delay()).collect();
+        let again: Vec<Duration> = (0..12).map(|_| b.next_delay()).collect();
+        assert_eq!(delays, again, "same seed, same schedule");
+        for (k, d) in delays.iter().enumerate() {
+            assert!(*d < cap, "attempt {k} exceeds the cap: {d:?}");
+            assert!(*d >= base / 2, "attempt {k} under the jitter floor: {d:?}");
+        }
+        // the tail is cap-bound: jitter keeps it in [cap/2, cap)
+        assert!(delays[11] >= cap / 2);
+        // a different seed gives a different schedule (jitter is live)
+        let mut c = Backoff::new(base, cap, 8);
+        let other: Vec<Duration> = (0..12).map(|_| c.next_delay()).collect();
+        assert_ne!(delays, other, "jitter must depend on the seed");
+        // reset restarts from the base
+        a.reset();
+        assert_eq!(a.attempts(), 0);
+        assert!(a.next_delay() <= base);
+    }
+}

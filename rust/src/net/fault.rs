@@ -1,0 +1,223 @@
+//! Deterministic fault injection for the serve fleet (DESIGN.md §Fleet).
+//!
+//! Chaos testing a fleet with ad-hoc kill commands is racy: whether a
+//! query lands before or after the kill depends on thread scheduling, so
+//! a failure seen once may never reproduce. A [`FaultPlan`] instead pins
+//! every injected fault to a *logical* instant — the per-shard **wake
+//! counter**, which increments once per scheduler wake (a query tick or a
+//! health probe) and persists across respawned generations. Two runs of
+//! the same plan against the same query schedule inject at the same
+//! logical points, making the chaos acceptance tests replayable.
+//!
+//! Three fault kinds cover the failure modes the self-healing layer must
+//! survive:
+//!
+//! * [`FaultKind::Sever`] — cut the shard's member sockets (the transport
+//!   failure a crashed member causes); the next secure round errors and
+//!   the shard dies, exercising quarantine + respawn.
+//! * [`FaultKind::Delay`] — stall the scheduler before the wake executes,
+//!   modelling a hung peer; read deadlines and probes must cope.
+//! * [`FaultKind::Panic`] — panic inside the shard scheduler's guarded
+//!   section, modelling a protocol-level crash; the panic payload must
+//!   surface in the [`ShardReport`](crate::net::fleet::ShardReport)
+//!   instead of being swallowed.
+//!
+//! Plans come from the `--fault-plan` CLI flag (see [`FaultPlan::parse`])
+//! or are built directly in tests ([`FaultPlan::new`] /
+//! [`FaultPlan::seeded`]).
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::rng::{Prng, Rng};
+
+/// What to inject when an event matures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Sever the shard's member sockets via its registered sever handle.
+    Sever,
+    /// Stall the scheduler for this many milliseconds before the wake.
+    Delay(u64),
+    /// Panic inside the shard scheduler's guarded section.
+    Panic,
+}
+
+/// One scheduled fault: `kind` fires at the first wake of `shard` whose
+/// wake counter has reached `wake`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub shard: usize,
+    pub wake: u64,
+    pub kind: FaultKind,
+}
+
+/// A seeded, replayable schedule of fault events. Interior-mutable so the
+/// fleet's scheduler threads can consume events through a shared `&self`.
+pub struct FaultPlan {
+    seed: u64,
+    /// `(event, fired)` — each event injects at most once.
+    events: Mutex<Vec<(FaultEvent, bool)>>,
+}
+
+impl FaultPlan {
+    /// A plan from an explicit event list (the test API).
+    pub fn new(events: Vec<FaultEvent>) -> FaultPlan {
+        FaultPlan { seed: 0, events: Mutex::new(events.into_iter().map(|e| (e, false)).collect()) }
+    }
+
+    /// The canonical chaos schedule: every shard severed exactly once, at
+    /// a wake drawn deterministically from `[0, horizon)` by `seed`.
+    pub fn seeded(seed: u64, shards: usize, horizon: u64) -> FaultPlan {
+        let mut rng = Prng::seed_from_u64(seed);
+        let events = (0..shards)
+            .map(|s| {
+                let wake = rng.gen_range_u64(horizon.max(1));
+                (FaultEvent { shard: s, wake, kind: FaultKind::Sever }, false)
+            })
+            .collect();
+        FaultPlan { seed, events: Mutex::new(events) }
+    }
+
+    /// Parse a `--fault-plan` spec: comma-separated events
+    /// `sever:SHARD@WAKE`, `delay:SHARD@WAKE:MS`, `panic:SHARD@WAKE`, or
+    /// the shorthand `seeded:SEED[:HORIZON]` (every shard severed once at
+    /// a seed-drawn wake below HORIZON, default 8).
+    pub fn parse(spec: &str, shards: usize) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = match item.split_once(':') {
+                Some(kr) => kr,
+                None => bail!("fault-plan item {item:?}: expected KIND:ARGS"),
+            };
+            if kind == "seeded" {
+                let (seed_s, horizon_s) = match rest.split_once(':') {
+                    Some((a, b)) => (a, b),
+                    None => (rest, "8"),
+                };
+                let seed: u64 = seed_s.parse().map_err(|_| {
+                    anyhow::anyhow!("fault-plan seeded seed {seed_s:?} is not a u64")
+                })?;
+                let horizon: u64 = horizon_s.parse().map_err(|_| {
+                    anyhow::anyhow!("fault-plan seeded horizon {horizon_s:?} is not a u64")
+                })?;
+                let seeded = FaultPlan::seeded(seed, shards, horizon);
+                events.extend(seeded.events.into_inner().expect("fresh mutex").into_iter().map(|(e, _)| e));
+                continue;
+            }
+            let (shard_s, tail) = match rest.split_once('@') {
+                Some(st) => st,
+                None => bail!("fault-plan item {item:?}: expected {kind}:SHARD@WAKE"),
+            };
+            let shard: usize = shard_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault-plan shard {shard_s:?} is not an index"))?;
+            if shard >= shards {
+                bail!("fault-plan targets shard {shard} of a {shards}-shard fleet");
+            }
+            let (wake_s, ms_s) = match tail.split_once(':') {
+                Some(wm) => (wm.0, Some(wm.1)),
+                None => (tail, None),
+            };
+            let wake: u64 = wake_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault-plan wake {wake_s:?} is not a u64"))?;
+            let fk = match (kind, ms_s) {
+                ("sever", None) => FaultKind::Sever,
+                ("panic", None) => FaultKind::Panic,
+                ("delay", Some(ms)) => FaultKind::Delay(ms.parse().map_err(|_| {
+                    anyhow::anyhow!("fault-plan delay ms {ms:?} is not a u64")
+                })?),
+                ("delay", None) => bail!("fault-plan delay needs delay:SHARD@WAKE:MS"),
+                _ => bail!("fault-plan kind {kind:?}: expected sever, delay, panic or seeded"),
+            };
+            events.push(FaultEvent { shard, wake, kind: fk });
+        }
+        if events.is_empty() {
+            bail!("fault-plan {spec:?} contains no events");
+        }
+        Ok(FaultPlan::new(events))
+    }
+
+    /// Consume (at most) one matured event for `shard` at wake counter
+    /// `wake`: the first unfired event whose trigger wake has been
+    /// reached. Returns its kind, or `None` when nothing is due.
+    pub fn take(&self, shard: usize, wake: u64) -> Option<FaultKind> {
+        let mut ev = self.events.lock().expect("fault-plan events poisoned");
+        for (e, fired) in ev.iter_mut() {
+            if !*fired && e.shard == shard && wake >= e.wake {
+                *fired = true;
+                return Some(e.kind);
+            }
+        }
+        None
+    }
+
+    /// Human-readable schedule for the SERVE banner and logs.
+    pub fn summary(&self) -> String {
+        let ev = self.events.lock().expect("fault-plan events poisoned");
+        let items: Vec<String> = ev
+            .iter()
+            .map(|(e, _)| match e.kind {
+                FaultKind::Sever => format!("sever:{}@{}", e.shard, e.wake),
+                FaultKind::Delay(ms) => format!("delay:{}@{}:{ms}", e.shard, e.wake),
+                FaultKind::Panic => format!("panic:{}@{}", e.shard, e.wake),
+            })
+            .collect();
+        format!("seed={} [{}]", self.seed, items.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_replay_and_fire_once() {
+        let a = FaultPlan::seeded(42, 3, 8);
+        let b = FaultPlan::seeded(42, 3, 8);
+        for s in 0..3 {
+            // walk both plans through the same wakes: identical schedules
+            let mut hits = Vec::new();
+            for w in 0..16 {
+                let ka = a.take(s, w);
+                let kb = b.take(s, w);
+                assert_eq!(ka, kb, "same seed, same schedule");
+                if let Some(k) = ka {
+                    assert_eq!(k, FaultKind::Sever);
+                    hits.push(w);
+                }
+            }
+            assert_eq!(hits.len(), 1, "each shard severed exactly once, got {hits:?}");
+            assert!(hits[0] < 8, "sever wake respects the horizon");
+        }
+        // a different seed moves at least one event
+        let c = FaultPlan::seeded(43, 3, 1 << 20);
+        assert_ne!(a.summary(), c.summary());
+    }
+
+    #[test]
+    fn parse_round_trips_all_kinds() {
+        let p = FaultPlan::parse("sever:0@3, delay:1@2:250, panic:2@0", 3).expect("valid spec");
+        assert_eq!(p.take(0, 2), None, "wake 2 is before the trigger");
+        assert_eq!(p.take(0, 3), Some(FaultKind::Sever));
+        assert_eq!(p.take(0, 4), None, "events fire once");
+        assert_eq!(p.take(1, 7), Some(FaultKind::Delay(250)), "matured events fire late");
+        assert_eq!(p.take(2, 0), Some(FaultKind::Panic));
+
+        assert!(FaultPlan::parse("sever:5@0", 3).is_err(), "out-of-range shard rejected");
+        assert!(FaultPlan::parse("freeze:0@0", 3).is_err(), "unknown kind rejected");
+        assert!(FaultPlan::parse("delay:0@0", 3).is_err(), "delay needs ms");
+        assert!(FaultPlan::parse("", 3).is_err(), "empty plan rejected");
+        let s = FaultPlan::parse("seeded:9", 4).expect("seeded shorthand");
+        let mut count = 0;
+        for sh in 0..4 {
+            for w in 0..8 {
+                if s.take(sh, w).is_some() {
+                    count += 1;
+                }
+            }
+        }
+        assert_eq!(count, 4, "seeded shorthand severs every shard once");
+    }
+}

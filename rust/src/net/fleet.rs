@@ -42,6 +42,32 @@
 //! stripe-local tags. With zero survivors the front-end answers errors
 //! but keeps accepting connections, so `{"cmd":"shutdown"}` still drains
 //! and the clean-shutdown teardown still runs.
+//!
+//! ## Self-healing (DESIGN.md §Fleet)
+//!
+//! With [`FleetOptions::respawn`] set, death is not final: the dead
+//! shard's scheduler thread doubles as its supervisor. It calls the
+//! respawn factory, which trains a replacement session by deterministic
+//! replay (same seed, same training schedule — the
+//! [`Evaluator::clone_into_session`] contract) confined to the **next
+//! generation** of the shard's tag stripe ([`TagStripe::generation`]):
+//! tags burned by the dead generation are never reissued, so divpub
+//! freshness survives any number of respawns. The revived shard is
+//! re-admitted to dispatch (survivors keep answering throughout), and
+//! each replacement session is handed back to the factory's `reap` hook
+//! when it in turn dies or the fleet drains. A `kill-shard` that lands
+//! inside the respawn window may be absorbed by the revival — the chaos
+//! command guarantees at least one death, not a permanent one.
+//!
+//! [`FleetOptions::probe_interval`] arms a per-shard health probe: an
+//! idle scheduler periodically runs a one-element `mul_vec` over two
+//! dummy constants (defined once per generation, never revealed, no
+//! divpub tags — CheckedSession-legal) so a shard whose members died is
+//! quarantined *before* a real client query is dispatched to it.
+//! [`FleetOptions::fault_plan`] injects a seeded, deterministic schedule
+//! of transport severs, stalls, and panics keyed on per-shard wake
+//! counters ([`FaultPlan`]), so the chaos tests replay identical failure
+//! schedules across engines and runs.
 
 use std::collections::VecDeque;
 use std::io::BufReader;
@@ -54,11 +80,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::backoff;
+use super::fault::{FaultKind, FaultPlan};
 use super::serve::{
     cv_wait, cv_wait_timeout, json_escape, lock, query_from_json, read_json_msg,
     render_response, reply, reply_error, ConnShared, ServeConfig,
 };
-use super::NetStats;
+use super::{MemberLinkState, NetStats};
 use crate::json::Json;
 use crate::protocols::engine::DataId;
 use crate::protocols::session::MpcSession;
@@ -87,8 +115,56 @@ pub struct FleetShard<'a, S: MpcSession> {
     pub sever: Option<ShardSever>,
 }
 
+/// A replacement shard built by a [`RespawnFactory`]: the same shape as
+/// [`FleetShard`] but *owning* its session (the scheduler thread that
+/// revives a shard keeps the replacement alive until the next death or
+/// the drain), plus a `reap` hook that takes the session back for
+/// teardown — `reap(sess, dead)` with `dead = true` when the replacement
+/// itself died (its transport may be gone, so reap lossily).
+pub struct RespawnShard<S: MpcSession> {
+    /// The replacement session (trained by deterministic replay).
+    pub sess: S,
+    /// Evaluator confined to the replacement's *generation* sub-stripe.
+    pub ev: Evaluator,
+    /// Sum-weight share handles in `sess`.
+    pub sum_w: Vec<DataId>,
+    /// Learned leaf-θ share handles in `sess` (None = public defaults).
+    pub learned_theta: Option<Vec<DataId>>,
+    /// Transport kill switch for the replacement (installed fleet-wide so
+    /// `kill-shard` keeps working across generations).
+    pub sever: Option<ShardSever>,
+    /// Teardown hook: `reap(sess, dead)`.
+    pub reap: Box<dyn FnOnce(S, bool) + Send>,
+}
+
+/// Builds generation `gen ≥ 1` of shard `s`: called as
+/// `factory(s, TagStripe::generation(s, nshards, gen))` on the dead
+/// shard's scheduler thread. Must reproduce the fleet's trained model by
+/// deterministic replay into a fresh session confined to the given
+/// stripe (see [`crate::coordinator::serve::RespawnBuilder`]).
+pub type RespawnFactory<'f, S> =
+    Box<dyn Fn(usize, TagStripe) -> Result<RespawnShard<S>> + Send + Sync + 'f>;
+
+/// Self-healing knobs for [`serve_fleet`]. The default (`None`
+/// everywhere) reproduces the degrade-don't-crash fleet exactly: no
+/// probes, no respawn, no injected faults.
+pub struct FleetOptions<'f, S: MpcSession> {
+    /// Probe an idle shard with a no-op secure round at this interval.
+    pub probe_interval: Option<Duration>,
+    /// Revive dead shards into fresh tag-stripe generations.
+    pub respawn: Option<RespawnFactory<'f, S>>,
+    /// Deterministic fault schedule (chaos testing).
+    pub fault_plan: Option<FaultPlan>,
+}
+
+impl<S: MpcSession> Default for FleetOptions<'_, S> {
+    fn default() -> Self {
+        FleetOptions { probe_interval: None, respawn: None, fault_plan: None }
+    }
+}
+
 /// What one shard did, inside a [`FleetReport`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct ShardReport {
     /// Queries this shard answered.
     pub queries: u64,
@@ -98,8 +174,18 @@ pub struct ShardReport {
     pub max_tick: usize,
     /// Σ of this shard's per-tick [`NetStats`] deltas.
     pub stats: NetStats,
-    /// Did this shard die (session panic or kill-shard)?
+    /// Health probes this shard answered (idle no-op secure rounds).
+    pub probes: u64,
+    /// Times this shard died and was revived into a fresh generation.
+    pub respawns: u64,
+    /// Did this shard die (session panic or kill-shard) and *stay* dead?
     pub dead: bool,
+    /// Panic payload of this shard's most recent death (kept even when a
+    /// respawn revived it), or the reason a respawn was refused.
+    pub panic_msg: Option<String>,
+    /// Last observed per-member transport link states (empty for Sim
+    /// shards — they have no transport).
+    pub links: Vec<MemberLinkState>,
 }
 
 /// What a fleet did, returned by [`serve_fleet`] after the drain.
@@ -121,6 +207,8 @@ pub struct FleetReport {
     pub dead_shards: usize,
     /// Queries moved off a dying shard onto survivors.
     pub redispatched: u64,
+    /// Shard revivals across the fleet (Σ per-shard `respawns`).
+    pub respawns: u64,
     /// Per-shard breakdown, indexed by shard.
     pub per_shard: Vec<ShardReport>,
 }
@@ -165,8 +253,10 @@ struct FleetState {
 struct FleetShared {
     state: Mutex<FleetState>,
     cvar: Condvar,
-    /// Per-shard transport kill switches (`None` for Sim shards).
-    severs: Vec<Option<ShardSever>>,
+    /// Per-shard transport kill switches (`None` for Sim shards). Behind
+    /// its own lock (never nested with `state`) because a respawned
+    /// generation installs its replacement's sever.
+    severs: Mutex<Vec<Option<ShardSever>>>,
     nshards: usize,
 }
 
@@ -216,18 +306,34 @@ fn steal_from(q: &mut VecDeque<FPending>, max_batch: usize, victim: usize) -> Ve
     got
 }
 
-/// Next tick for shard `s`: its own queue under the single-session flush
-/// rules, else stolen work, else block. `Some(vec![])` signals a pending
-/// kill (the scheduler panics into the death path); `None` means drained
-/// shutdown.
-fn next_fleet_tick(shared: &FleetShared, s: usize, cfg: &ServeConfig) -> Option<Vec<FPending>> {
+/// What a shard scheduler woke up to do.
+enum Wake {
+    /// A coalesced tick of queries to evaluate.
+    Tick(Vec<FPending>),
+    /// Idle past the probe interval: run a health probe round.
+    Probe,
+    /// `kill-shard` pending: take the death path.
+    Killed,
+    /// Drained shutdown (or the shard is marked dead): stop serving.
+    Drained,
+}
+
+/// Next wake-up for shard `s`: its own queue under the single-session
+/// flush rules, else stolen work, else block — with a probe timeout when
+/// the fleet runs health probes.
+fn next_wake(
+    shared: &FleetShared,
+    s: usize,
+    cfg: &ServeConfig,
+    probe_interval: Option<Duration>,
+) -> Wake {
     let mut st = lock(&shared.state);
     loop {
         if st.shards[s].dead {
-            return None;
+            return Wake::Drained;
         }
         if st.shards[s].killed {
-            return Some(Vec::new());
+            return Wake::Killed;
         }
         if !st.shards[s].queue.is_empty() {
             break;
@@ -236,13 +342,22 @@ fn next_fleet_tick(shared: &FleetShared, s: usize, cfg: &ServeConfig) -> Option<
             let stolen = steal_from(&mut st.shards[v].queue, cfg.max_batch, v);
             if !stolen.is_empty() {
                 st.shards[s].in_flight = stolen.len();
-                return Some(stolen);
+                return Wake::Tick(stolen);
             }
         }
         if st.shutdown {
-            return None;
+            return Wake::Drained;
         }
-        st = cv_wait(&shared.cvar, st);
+        match probe_interval {
+            Some(iv) => {
+                let (g, to) = cv_wait_timeout(&shared.cvar, st, iv);
+                st = g;
+                if to.timed_out() {
+                    return Wake::Probe;
+                }
+            }
+            None => st = cv_wait(&shared.cvar, st),
+        }
     }
     // coalesce arrivals exactly like the single-session scheduler
     // lint:allow(L004) — the loop above guarantees the queue is non-empty
@@ -261,102 +376,320 @@ fn next_fleet_tick(shared: &FleetShared, s: usize, cfg: &ServeConfig) -> Option<
     let take = st.shards[s].queue.len().min(cfg.max_batch);
     let tick: Vec<FPending> = st.shards[s].queue.drain(..take).collect();
     st.shards[s].in_flight = tick.len();
-    Some(tick)
+    Wake::Tick(tick)
 }
 
-/// One shard's scheduler: owns the session, serves ticks until drained
-/// shutdown or death. Runs on a scoped thread inside [`serve_fleet`].
+/// Best-effort text of a panic payload (`&str` and `String` payloads,
+/// which is what `panic!` produces; anything else gets a placeholder).
+fn panic_payload_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Apply a scheduled fault before a wake executes. `Sever` cuts the
+/// shard's transport via its installed sever; a Sim shard has none, so
+/// the sever degrades to an injected panic (the shard must still die on
+/// schedule for chaos plans to be engine-agnostic). `Delay` stalls the
+/// scheduler in place. `Panic` (and a degraded sever) is returned as a
+/// flag so the caller fires it *inside* its unwind region.
+fn apply_fault(s: usize, fault: Option<FaultKind>, shared: &FleetShared) -> bool {
+    match fault {
+        None => false,
+        Some(FaultKind::Sever) => {
+            let sv = lock(&shared.severs);
+            match &sv[s] {
+                Some(f) => {
+                    f();
+                    false
+                }
+                None => true,
+            }
+        }
+        Some(FaultKind::Delay(ms)) => {
+            backoff::pause(Duration::from_millis(ms));
+            false
+        }
+        Some(FaultKind::Panic) => true,
+    }
+}
+
+/// The shard-death path: mark shard `s` dead (quarantined from routing)
+/// and move every query it owed — the interrupted tick plus its queue —
+/// to survivors. The tick's reserved tags are burned unrevealed
+/// (freshness only forbids reuse); survivors answer with their own
+/// stripe-local tags. Queries with no surviving shard to run on get an
+/// error reply (retryable — see `client --repeat`, which backs off and
+/// resends while a respawn is in flight).
+fn shard_death(s: usize, tick: Vec<FPending>, shared: &FleetShared) {
+    let mut lost = Vec::new();
+    {
+        let mut st = lock(&shared.state);
+        st.shards[s].dead = true;
+        st.shards[s].in_flight = 0;
+        let mut orphans = tick;
+        orphans.extend(st.shards[s].queue.drain(..));
+        st.redispatched += orphans.len() as u64;
+        for mut p in orphans {
+            if p.pin == Some(s) {
+                p.pin = None;
+            }
+            match route(&st, p.pin) {
+                Some(t) => st.shards[t].queue.push_back(p),
+                None => lost.push(p),
+            }
+        }
+        shared.cvar.notify_all();
+    }
+    for p in lost {
+        reply_error(&p.conn, Some(p.seq), &format!("shard {s} died with no surviving shards"));
+    }
+}
+
+/// How one generation of a shard ended.
+enum GenEnd {
+    /// Drained shutdown: the generation served to completion.
+    Drained,
+    /// The session died (transport gone, kill-shard, or injected fault).
+    Died,
+}
+
+/// Serve one *generation* of shard `s` — one session's lifetime — until
+/// drained shutdown or death. Responses carry `(shard, gen, snum)` where
+/// `snum` is the query's index in this generation's served order: with
+/// the per-query divpub-tag layout of `Evaluator::batch_prologue`, snum
+/// alone pins the tag block a query consumed, so the byte-identity
+/// oracle can replay any generation independently of tick boundaries.
+#[allow(clippy::too_many_arguments)]
+fn serve_generation<S: MpcSession>(
+    s: usize,
+    gen: u64,
+    sess: &mut S,
+    ev: &mut Evaluator,
+    sum_w: &[DataId],
+    learned_theta: Option<&[DataId]>,
+    shared: &FleetShared,
+    cfg: &ServeConfig,
+    d: u128,
+    opts: &FleetOptions<'_, S>,
+    rep: &mut ShardReport,
+    wake_no: &mut u64,
+) -> GenEnd {
+    let mut snum: u64 = 0;
+    // Probe operands, built lazily once per generation: two public
+    // constants whose product is computed (a real secure round through
+    // every member) but never revealed and never tagged.
+    let mut probe_ids: Option<(DataId, DataId)> = None;
+    loop {
+        match next_wake(shared, s, cfg, opts.probe_interval) {
+            Wake::Drained => {
+                rep.links = sess.link_states();
+                return GenEnd::Drained;
+            }
+            Wake::Killed => {
+                rep.panic_msg = Some(format!("shard {s} killed by command"));
+                rep.links = sess.link_states();
+                shard_death(s, Vec::new(), shared);
+                return GenEnd::Died;
+            }
+            Wake::Probe => {
+                let fault = opts.fault_plan.as_ref().and_then(|p| p.take(s, *wake_no));
+                let wake = *wake_no;
+                *wake_no += 1;
+                let inject_panic = apply_fault(s, fault, shared);
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if inject_panic {
+                        panic!("shard {s} gen {gen}: injected fault at wake {wake}");
+                    }
+                    let (a, b) = match probe_ids {
+                        Some(ids) => ids,
+                        None => {
+                            let ids = (sess.constant(1), sess.constant(1));
+                            probe_ids = Some(ids);
+                            ids
+                        }
+                    };
+                    let _ = sess.mul_vec(&[(a, b)]);
+                }));
+                match outcome {
+                    Ok(()) => rep.probes += 1,
+                    Err(e) => {
+                        rep.panic_msg = Some(panic_payload_msg(&*e));
+                        rep.links = sess.link_states();
+                        shard_death(s, Vec::new(), shared);
+                        return GenEnd::Died;
+                    }
+                }
+            }
+            Wake::Tick(tick) => {
+                let fault = opts.fault_plan.as_ref().and_then(|p| p.take(s, *wake_no));
+                let wake = *wake_no;
+                *wake_no += 1;
+                let inject_panic = apply_fault(s, fault, shared);
+                let queries: Vec<Query> = tick.iter().map(|p| p.query.clone()).collect();
+                // Read the kill flag *outside* the unwind region: panicking
+                // while holding the state lock would poison it fleet-wide.
+                let killed = { lock(&shared.state).shards[s].killed };
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if killed {
+                        panic!("shard {s} killed by command");
+                    }
+                    if inject_panic {
+                        panic!("shard {s} gen {gen}: injected fault at wake {wake}");
+                    }
+                    ev.eval_batch(sess, &queries, sum_w, learned_theta)
+                }));
+                match outcome {
+                    Ok((roots, delta)) => {
+                        rep.queries += tick.len() as u64;
+                        rep.batches += 1;
+                        rep.stats = rep.stats + delta;
+                        rep.max_tick = rep.max_tick.max(tick.len());
+                        // bill the tick delta once per distinct client
+                        let mut seen: Vec<u64> = Vec::new();
+                        for p in &tick {
+                            if !seen.contains(&p.conn.id) {
+                                seen.push(p.conn.id);
+                                let mut t = lock(&p.conn.total);
+                                *t = *t + delta;
+                            }
+                        }
+                        for (i, (p, &root)) in tick.iter().zip(&roots).enumerate() {
+                            let total = *lock(&p.conn.total);
+                            let msg = render_response(
+                                p.seq,
+                                root,
+                                d,
+                                tick.len(),
+                                &delta,
+                                &total,
+                                Some((s, gen, snum + i as u64)),
+                            );
+                            reply(&p.conn, &msg);
+                        }
+                        snum += tick.len() as u64;
+                        let mut st = lock(&shared.state);
+                        st.shards[s].in_flight = 0;
+                        st.answered += tick.len() as u64;
+                        if let Some(maxq) = cfg.max_queries {
+                            if st.answered >= maxq {
+                                st.shutdown = true;
+                            }
+                        }
+                        shared.cvar.notify_all();
+                    }
+                    Err(e) => {
+                        rep.panic_msg = Some(panic_payload_msg(&*e));
+                        rep.links = sess.link_states();
+                        shard_death(s, tick, shared);
+                        return GenEnd::Died;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One shard's scheduler: serves its gen-0 session to death or drain,
+/// and — when a respawn factory is armed — doubles as the shard's
+/// supervisor, reviving it into successive tag-stripe generations. Runs
+/// on a scoped thread inside [`serve_fleet`].
 fn shard_scheduler<S: MpcSession>(
     s: usize,
     shard: &mut FleetShard<'_, S>,
     shared: &FleetShared,
     cfg: &ServeConfig,
     d: u128,
+    opts: &FleetOptions<'_, S>,
 ) -> ShardReport {
     let mut rep = ShardReport::default();
-    while let Some(tick) = next_fleet_tick(shared, s, cfg) {
-        let queries: Vec<Query> = tick.iter().map(|p| p.query.clone()).collect();
-        // Read the kill flag *outside* the unwind region: panicking while
-        // holding the state lock would poison it for the whole front-end.
-        let killed = { lock(&shared.state).shards[s].killed };
-        let outcome = catch_unwind(AssertUnwindSafe(|| {
-            if killed {
-                panic!("shard {s} killed by command");
-            }
-            shard.ev.eval_batch(
-                shard.sess,
-                &queries,
+    // The fault-plan wake counter spans generations: a plan can schedule
+    // a second fault for the respawned shard.
+    let mut wake_no: u64 = 0;
+    let mut gen: u64 = 0;
+    // Replacement sessions are owned here; `None` while serving the
+    // caller's borrowed gen-0 session.
+    let mut owned: Option<RespawnShard<S>> = None;
+    loop {
+        let end = match owned.as_mut() {
+            None => serve_generation(
+                s,
+                gen,
+                &mut *shard.sess,
+                &mut shard.ev,
                 &shard.sum_w,
                 shard.learned_theta.as_deref(),
-            )
-        }));
-        match outcome {
-            Ok((roots, delta)) => {
-                rep.queries += tick.len() as u64;
-                rep.batches += 1;
-                rep.stats = rep.stats + delta;
-                rep.max_tick = rep.max_tick.max(tick.len());
-                // bill the tick delta once per distinct client in the tick
-                let mut seen: Vec<u64> = Vec::new();
-                for p in &tick {
-                    if !seen.contains(&p.conn.id) {
-                        seen.push(p.conn.id);
-                        let mut t = lock(&p.conn.total);
-                        *t = *t + delta;
-                    }
+                shared,
+                cfg,
+                d,
+                opts,
+                &mut rep,
+                &mut wake_no,
+            ),
+            Some(r) => serve_generation(
+                s,
+                gen,
+                &mut r.sess,
+                &mut r.ev,
+                &r.sum_w,
+                r.learned_theta.as_deref(),
+                shared,
+                cfg,
+                d,
+                opts,
+                &mut rep,
+                &mut wake_no,
+            ),
+        };
+        if matches!(end, GenEnd::Drained) {
+            break;
+        }
+        // Death. Without a factory this is final (degrade, don't crash);
+        // with one, train a replacement and re-admit the shard.
+        let Some(factory) = &opts.respawn else {
+            rep.dead = true;
+            break;
+        };
+        if gen + 1 >= TagStripe::GENERATIONS {
+            rep.dead = true;
+            rep.panic_msg = Some(format!(
+                "shard {s} exhausted its {} tag-stripe generations",
+                TagStripe::GENERATIONS
+            ));
+            break;
+        }
+        match factory(s, TagStripe::generation(s, shared.nshards, gen + 1)) {
+            Ok(mut fresh) => {
+                // Hand the kill switch over to the new transport before
+                // re-admission, so `kill-shard` targets the live session.
+                {
+                    let mut sv = lock(&shared.severs);
+                    sv[s] = fresh.sever.take();
                 }
-                for (p, &root) in tick.iter().zip(&roots) {
-                    let total = *lock(&p.conn.total);
-                    let msg =
-                        render_response(p.seq, root, d, tick.len(), &delta, &total, Some(s));
-                    reply(&p.conn, &msg);
+                if let Some(prev) = owned.take() {
+                    (prev.reap)(prev.sess, true);
                 }
+                owned = Some(fresh);
+                gen += 1;
+                rep.respawns += 1;
                 let mut st = lock(&shared.state);
-                st.shards[s].in_flight = 0;
-                st.answered += tick.len() as u64;
-                if let Some(maxq) = cfg.max_queries {
-                    if st.answered >= maxq {
-                        st.shutdown = true;
-                    }
-                }
+                st.shards[s].dead = false;
+                st.shards[s].killed = false;
                 shared.cvar.notify_all();
             }
-            Err(_) => {
-                // The session is gone mid-tick. Mark the shard dead and
-                // move every query it owed — the interrupted tick plus its
-                // queue — to survivors. The tick's reserved tags are
-                // burned unrevealed (freshness only forbids reuse);
-                // survivors answer with their own stripe-local tags.
-                let mut lost = Vec::new();
-                {
-                    let mut st = lock(&shared.state);
-                    st.shards[s].dead = true;
-                    st.shards[s].in_flight = 0;
-                    let mut orphans = tick;
-                    orphans.extend(st.shards[s].queue.drain(..));
-                    st.redispatched += orphans.len() as u64;
-                    for mut p in orphans {
-                        if p.pin == Some(s) {
-                            p.pin = None;
-                        }
-                        match route(&st, p.pin) {
-                            Some(t) => st.shards[t].queue.push_back(p),
-                            None => lost.push(p),
-                        }
-                    }
-                    shared.cvar.notify_all();
-                }
-                for p in lost {
-                    reply_error(
-                        &p.conn,
-                        Some(p.seq),
-                        &format!("shard {s} died with no surviving shards"),
-                    );
-                }
+            Err(e) => {
                 rep.dead = true;
+                rep.panic_msg = Some(format!("shard {s} respawn failed: {e}"));
                 break;
             }
         }
+    }
+    if let Some(r) = owned.take() {
+        (r.reap)(r.sess, rep.dead);
     }
     rep
 }
@@ -413,9 +746,13 @@ fn fleet_reader_session(conn: &Arc<ConnShared>, shared: &FleetShared, hello: &st
                             st.shards[t].killed = true;
                             shared.cvar.notify_all();
                         }
-                        // sever outside the lock: closing sockets can block
-                        if let Some(f) = &shared.severs[t] {
-                            f();
+                        // sever outside the state lock: closing sockets
+                        // can block (the severs lock is leaf-level)
+                        {
+                            let sv = lock(&shared.severs);
+                            if let Some(f) = &sv[t] {
+                                f();
+                            }
                         }
                         if !reply(conn, &format!("{{\"ok\":true,\"killed\":{t}}}")) {
                             return;
@@ -515,7 +852,7 @@ fn fleet_listener_loop(
                 if lock(&shared.state).shutdown {
                     return;
                 }
-                std::thread::sleep(Duration::from_millis(50));
+                backoff::pause(Duration::from_millis(50));
                 continue;
             }
         };
@@ -536,17 +873,21 @@ fn fleet_listener_loop(
 /// Run a serve fleet: accept clients on `listener` and micro-batch their
 /// queries across the `shards` — one scheduler thread per shard, each
 /// exclusively owning its session. Returns after a drained shutdown with
-/// every spawned thread joined; the sessions outlive the call (the caller
-/// shuts them down, using their lossy path for dead shards).
+/// every spawned thread joined; the gen-0 sessions outlive the call (the
+/// caller shuts them down, using their lossy path for shards that died
+/// **or respawned** — a respawn orphans the gen-0 transport). Replacement
+/// sessions built by `opts.respawn` are reaped inside the fleet.
 ///
-/// Every shard must serve the same compiled plan; each shard's answers
-/// are byte-identical to a direct `private_eval_batch` of the queries it
-/// served, in its served order, on a session with the same seed, training
-/// replay, and [`TagStripe`] (pinned by `rust/tests/fleet.rs`).
+/// Every shard must serve the same compiled plan; each generation's
+/// answers are byte-identical to a direct `private_eval_batch` of the
+/// queries it served, in its served (`snum`) order, on a session with the
+/// same seed, training replay, and generation [`TagStripe`] (pinned by
+/// `rust/tests/fleet.rs`).
 pub fn serve_fleet<S: MpcSession + Send>(
     mut shards: Vec<FleetShard<'_, S>>,
     listener: TcpListener,
     cfg: &ServeConfig,
+    opts: FleetOptions<'_, S>,
 ) -> Result<FleetReport> {
     if cfg.max_batch == 0 {
         bail!("serve_fleet needs max_batch ≥ 1");
@@ -586,7 +927,7 @@ pub fn serve_fleet<S: MpcSession + Send>(
             ..FleetState::default()
         }),
         cvar: Condvar::new(),
-        severs,
+        severs: Mutex::new(severs),
         nshards,
     });
     let ls = shared.clone();
@@ -598,7 +939,8 @@ pub fn serve_fleet<S: MpcSession + Send>(
         let mut handles = Vec::with_capacity(nshards);
         for (s, shard) in shards.iter_mut().enumerate() {
             let sh: &FleetShared = &shared;
-            handles.push(scope.spawn(move || shard_scheduler(s, shard, sh, cfg, d)));
+            let op: &FleetOptions<'_, S> = &opts;
+            handles.push(scope.spawn(move || shard_scheduler(s, shard, sh, cfg, d, op)));
         }
         // Hold the front door open until shutdown even if every scheduler
         // died: readers keep answering errors and the shutdown command
@@ -610,8 +952,14 @@ pub fn serve_fleet<S: MpcSession + Send>(
             }
         }
         for h in handles {
-            per_shard
-                .push(h.join().unwrap_or(ShardReport { dead: true, ..ShardReport::default() }));
+            // A scheduler that panicked outside its unwind regions still
+            // reports: dead, with the panic payload preserved (not
+            // silently swallowed into a default report).
+            per_shard.push(h.join().unwrap_or_else(|e| ShardReport {
+                dead: true,
+                panic_msg: Some(panic_payload_msg(&*e)),
+                ..ShardReport::default()
+            }));
         }
     });
     // graceful teardown, exactly like the single-session server
@@ -646,6 +994,7 @@ pub fn serve_fleet<S: MpcSession + Send>(
         report.stats = report.stats + r.stats;
         report.max_tick = report.max_tick.max(r.max_tick);
         report.dead_shards += r.dead as usize;
+        report.respawns += r.respawns;
     }
     Ok(report)
 }

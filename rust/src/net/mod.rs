@@ -20,11 +20,32 @@
 //! [`MpcSession`](crate::protocols::session::MpcSession), byte-identical to
 //! the simulation under the same seed.
 
+pub mod backoff;
+pub mod fault;
 pub mod fleet;
 pub mod serve;
 pub mod tcp;
 pub mod tcp_session;
 pub mod wire;
+
+/// Health of one manager↔member link, as observed by the transport
+/// (DESIGN.md §Fleet). [`tcp_session::TcpSession`] tracks one per member:
+/// a reply slower than the soft threshold marks the link `Degraded`; an
+/// I/O error (including a tripped read/write deadline) marks it `Down`.
+/// Surfaced per shard through
+/// [`MpcSession::link_states`](crate::protocols::session::MpcSession::link_states)
+/// into [`fleet::ShardReport`] and the serve status line. The Sim backend
+/// has no links and reports an empty vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MemberLinkState {
+    /// Replies arrive within the soft latency threshold.
+    #[default]
+    Up,
+    /// Recent replies were slow — the member may be about to fail.
+    Degraded,
+    /// An I/O error or deadline expiry ended the link.
+    Down,
+}
 
 /// Wire/latency model. Defaults reproduce the paper's setting.
 #[derive(Clone, Copy, Debug)]

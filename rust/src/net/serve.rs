@@ -67,8 +67,11 @@
 //! [`serve`] owns exactly one session; [`crate::net::fleet`] puts the
 //! same wire protocol in front of S independent sessions for one model
 //! (per-shard FIFO queues, least-loaded dispatch, work stealing, shard
-//! death tolerance). Fleet responses additionally carry a `"shard"`
-//! field, and the fleet hello reports `"shards"`.
+//! death tolerance, respawn). Fleet responses additionally carry
+//! `"shard"`, `"gen"` (the serving incarnation's generation — see
+//! `TagStripe::generation`) and `"snum"` (the query's generation-local
+//! serve index, which pins its tag block for oracle replay); the fleet
+//! hello reports `"shards"`.
 
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -230,9 +233,11 @@ pub fn stats_from_json(j: &Json) -> Result<NetStats> {
     })
 }
 
-/// Render one query response. `shard` is `Some` only on fleet servers
-/// ([`crate::net::fleet`]): clients of a single-session [`serve`] see the
-/// exact PR-5 wire format.
+/// Render one query response. `shard` is `Some((shard, gen, snum))` only
+/// on fleet servers ([`crate::net::fleet`]) — the serving shard, its
+/// generation (respawn incarnation) and the query's generation-local
+/// serve index; clients of a single-session [`serve`] see the exact PR-5
+/// wire format.
 pub(crate) fn render_response(
     seq: u64,
     root: i128,
@@ -240,11 +245,11 @@ pub(crate) fn render_response(
     batch: usize,
     stats: &NetStats,
     total: &NetStats,
-    shard: Option<usize>,
+    shard: Option<(usize, u64, u64)>,
 ) -> String {
     let p = root.max(0) as f64 / d as f64;
     let shard_field = match shard {
-        Some(s) => format!("\"shard\":{s},"),
+        Some((s, g, k)) => format!("\"shard\":{s},\"gen\":{g},\"snum\":{k},"),
         None => String::new(),
     };
     format!(
@@ -473,7 +478,7 @@ fn listener_loop(
                 }
                 // transient accept failure (e.g. fd exhaustion): back off
                 // instead of spinning a core on the hot Err path
-                std::thread::sleep(Duration::from_millis(50));
+                super::backoff::pause(Duration::from_millis(50));
                 continue;
             }
         };
@@ -649,6 +654,14 @@ pub struct Response {
     /// [`serve`] server). Fleet responses can interleave across shards, so
     /// pipelining clients attribute replies by `seq`.
     pub shard: Option<usize>,
+    /// The serving shard's generation (respawn incarnation; `None` from a
+    /// single-session server, `Some(0)` until a fleet shard respawns).
+    pub gen: Option<u64>,
+    /// Generation-local serve index: queries a shard incarnation served,
+    /// numbered in dispatch order. Together with `gen`, pins the tag
+    /// block the query used — the chaos tests sort by `snum` to replay a
+    /// shard's served order on an oracle session.
+    pub snum: Option<u64>,
 }
 
 /// A client connection to a [`serve`] session: blocking, with split
@@ -720,6 +733,14 @@ impl ServeClient {
             total: stats_from_json(j.opt("total").context("response lacks total")?)?,
             shard: match j.opt("shard") {
                 Some(Json::Num(n)) => Some(*n as usize),
+                _ => None,
+            },
+            gen: match j.opt("gen") {
+                Some(Json::Num(n)) => Some(*n as u64),
+                _ => None,
+            },
+            snum: match j.opt("snum") {
+                Some(Json::Num(n)) => Some(*n as u64),
                 _ => None,
             },
         })
@@ -830,10 +851,14 @@ mod tests {
         assert!((j.get("p").as_f64() - 249.0 / 256.0).abs() < 1e-12);
         assert_eq!(stats_from_json(j.get("total")).unwrap().messages, 14);
         assert!(j.opt("shard").is_none(), "single-session responses carry no shard");
-        // fleet responses name the serving shard
-        let ftxt = render_response(5, 249, 256, 4, &stats, &total, Some(2));
+        assert!(j.opt("gen").is_none(), "single-session responses carry no gen");
+        // fleet responses name the serving shard, its generation and the
+        // generation-local serve index
+        let ftxt = render_response(5, 249, 256, 4, &stats, &total, Some((2, 1, 37)));
         let fj = Json::parse(&ftxt).unwrap();
         assert_eq!(fj.get("shard").as_usize(), 2);
+        assert_eq!(fj.get("gen").as_usize(), 1);
+        assert_eq!(fj.get("snum").as_usize(), 37);
     }
 
     #[test]

@@ -117,6 +117,17 @@ pub fn read_frame<R: Read>(s: &mut R) -> Result<Frame> {
     Ok(fr)
 }
 
+/// Install (or clear, with `None`) matching read and write deadlines on a
+/// stream — the transport-hardening primitive behind
+/// [`super::tcp_session::TcpSessionConfig::io_deadline_ms`]: blocking I/O
+/// against a hung peer becomes a timely `WouldBlock`/`TimedOut` error the
+/// session layer can treat as member death.
+pub fn set_io_deadlines(s: &TcpStream, deadline: Option<std::time::Duration>) -> Result<()> {
+    s.set_read_timeout(deadline)?;
+    s.set_write_timeout(deadline)?;
+    Ok(())
+}
+
 /// "Reveal to manager" over real sockets: accept `n` member connections,
 /// sum the first element of each frame mod `p`, reply with the sum.
 pub fn reveal_server_on(listener: TcpListener, n: usize, p: u128) -> Result<u128> {

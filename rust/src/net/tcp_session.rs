@@ -39,6 +39,16 @@
 //! operation named. The fallible building blocks ([`TcpSession::spawn_local`],
 //! [`TcpSession::shutdown`], the internal op drivers) use `Result`.
 //!
+//! Transport hardening (DESIGN.md §Fleet): the manager's member sockets
+//! carry read/write deadlines ([`TcpSessionConfig::io_deadline_ms`]), so a
+//! hung or killed member turns into a timely error instead of a silent
+//! stall; members reconnect with capped jittered backoff
+//! ([`super::backoff::Backoff`]) during session setup. Per-member link
+//! health ([`MemberLinkState`](super::MemberLinkState)) is tracked from
+//! observed reply latency and surfaced through
+//! [`MpcSession::link_states`]. Deterministic member-side faults for chaos
+//! tests inject via [`TcpSessionConfig::fault`].
+//!
 //! Accounting: [`TcpSession`] counts the frames and bytes it actually
 //! relays and accumulates real elapsed seconds in `virtual_time_s`. The
 //! simulated engine remains **authoritative** for the Tables 2–3 numbers
@@ -65,17 +75,18 @@ use std::collections::HashMap; // lint:allow(L003) — d⁻¹ memo, not a share 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Error, Result};
 
-use super::tcp::{read_frame, read_frame_into, write_frame_parts, Frame};
+use super::backoff::{self, Backoff};
+use super::tcp::{read_frame, read_frame_into, set_io_deadlines, write_frame_parts, Frame};
 use super::wire::{
     divpub_q_slot, divpub_r_slot, element_major, flight_run_len, party_major, wire_bytes_for,
     OP_CONST, OP_DIVPUB, OP_DIVPUB_TAGGED, OP_FLIGHT, OP_INPUT, OP_LIN, OP_MUL, OP_REVEAL,
     OP_SHUTDOWN, OP_SQ2PQ,
 };
-use super::NetStats;
+use super::{MemberLinkState, NetStats};
 use crate::field::Field;
 use crate::protocols::divpub::{sample_r, tagged_r_many};
 use crate::protocols::engine::{reset_scratch, DataId, ShareStore};
@@ -87,6 +98,37 @@ use crate::sharing::shamir::ShamirCtx;
 /// Buffered-framing capacity on both sides of every socket: large enough
 /// that a typical vectorized exercise frame flushes in one write.
 const FRAME_BUF: usize = 1 << 16;
+
+/// A reply slower than this marks its link [`MemberLinkState::Degraded`]:
+/// loopback/LAN relay phases complete in microseconds, so hundreds of
+/// milliseconds means the member (or its path) is struggling even if the
+/// hard deadline hasn't tripped yet.
+const DEGRADED_AFTER: Duration = Duration::from_millis(500);
+
+/// How a deterministically-injected member fault manifests
+/// ([`TcpSessionConfig::fault`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberFaultKind {
+    /// The member thread panics — the manager's next read on that link
+    /// blocks until the io deadline trips (how deadlines + probes detect
+    /// member death).
+    Panic,
+    /// The member stalls this long before processing the frame, driving
+    /// the link to `Degraded` (or `Down` if it exceeds the deadline).
+    DelayMs(u64),
+}
+
+/// A chaos-test fault injected into one member's event loop after it has
+/// processed `after_frames` exercise frames. Deterministic: frame counts,
+/// not wall clocks, decide when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemberFault {
+    /// 1-based member id the fault targets.
+    pub member: usize,
+    /// Fire when this many exercise frames have been processed.
+    pub after_frames: u64,
+    pub kind: MemberFaultKind,
+}
 
 /// Session parameters, mirroring the protocol-relevant subset of
 /// `EngineConfig` (no schedule — the wire protocol is always vectorized —
@@ -103,13 +145,35 @@ pub struct TcpSessionConfig {
     /// like `Engine::new` (`seed ^ id·0x9E3779B97F4A7C15`), which is what
     /// makes a TCP run byte-identical to a simulated run.
     pub seed: u64,
+    /// Manager-side read/write deadline per member socket, in
+    /// milliseconds; `0` keeps the old fully-blocking behavior. A tripped
+    /// deadline errors the op (the fleet catches it as shard death) and
+    /// marks the link [`MemberLinkState::Down`].
+    pub io_deadline_ms: u64,
+    /// Deterministic member-side fault for chaos tests; `None` in
+    /// production.
+    pub fault: Option<MemberFault>,
 }
 
 impl TcpSessionConfig {
     /// Defaults matching `EngineConfig::new(n)`: honest-majority
-    /// threshold, ρ = 64, the same fixed seed.
+    /// threshold, ρ = 64, the same fixed seed, a 10 s io deadline and no
+    /// injected fault.
     pub fn new(n: usize) -> Self {
-        TcpSessionConfig { n, threshold: None, rho_bits: 64, seed: 0xC0FFEE }
+        TcpSessionConfig {
+            n,
+            threshold: None,
+            rho_bits: 64,
+            seed: 0xC0FFEE,
+            io_deadline_ms: 10_000,
+            fault: None,
+        }
+    }
+
+    /// The configured deadline as the `Option<Duration>` the socket API
+    /// wants (`None` = blocking).
+    fn io_deadline(&self) -> Option<Duration> {
+        (self.io_deadline_ms > 0).then(|| Duration::from_millis(self.io_deadline_ms))
     }
 }
 
@@ -135,12 +199,36 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
     // Per-divisor d⁻¹ memo (a handful of entries), not a per-element
     // data-plane store; the share slab stays dense.
     let mut dinv_cache: HashMap<u128, u128> = HashMap::new(); // lint:allow(L003)
-    let stream = TcpStream::connect(&addr)?;
+    // Connect with capped jittered backoff: during a fleet respawn the
+    // manager's accept loop may lag the member spawns, and a fixed retry
+    // interval would have every member of the new generation hammering
+    // the listener in lockstep. Deterministic per (seed, member, attempt).
+    let mut retry = Backoff::new(
+        Duration::from_millis(10),
+        Duration::from_millis(500),
+        cfg.seed ^ (id as u64).rotate_left(17),
+    );
+    let stream = loop {
+        match TcpStream::connect(&addr) {
+            Ok(s) => break s,
+            Err(e) if retry.attempts() < 12 => {
+                let _ = e; // transient: refused/unreachable while spawning
+                retry.wait();
+            }
+            Err(e) => return Err(e.into()),
+        }
+    };
     stream.set_nodelay(true)?;
+    // Members keep blocking *reads* (an idle serve legitimately leaves
+    // them waiting for the next exercise indefinitely) but bound writes:
+    // a wedged manager must not absorb a member thread forever.
+    stream.set_write_timeout(cfg.io_deadline())?;
     let mut w = BufWriter::with_capacity(FRAME_BUF, stream.try_clone()?);
     let mut r = BufReader::with_capacity(FRAME_BUF, stream);
     write_frame_parts(&mut w, 0, id as u32, &[])?;
     w.flush()?;
+    let mut frames_seen: u64 = 0;
+    let mut fault_armed = cfg.fault;
 
     // Reusable buffers: the event loop performs no per-frame heap
     // allocation once these reach their steady-state sizes.
@@ -159,6 +247,21 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
 
     loop {
         read_frame_into(&mut r, &mut ex)?;
+        // Injected chaos fault: fires once, when the frame counter
+        // matures. Frame counts (not wall clocks) decide, so runs replay
+        // exactly.
+        if let Some(fault) = fault_armed {
+            if fault.member == id && frames_seen >= fault.after_frames {
+                fault_armed = None;
+                match fault.kind {
+                    MemberFaultKind::Panic => {
+                        panic!("member {id}: injected fault after {frames_seen} frames")
+                    }
+                    MemberFaultKind::DelayMs(ms) => backoff::pause(Duration::from_millis(ms)),
+                }
+            }
+        }
+        frames_seen += 1;
         // Split an OP_FLIGHT container (wire-layout v3) into its runs; a
         // plain exercise is one run covering the whole frame. Runs execute
         // in order against the same share slab, which is what lets a later
@@ -425,6 +528,9 @@ pub struct TcpSession {
     next_tag: u64,
     flight: Option<TcpFlight>,
     stats: NetStats,
+    /// Observed health per member link (index j = member j+1), updated by
+    /// every `tx`/`rx` — see [`MemberLinkState`].
+    links: Vec<MemberLinkState>,
     handles: Vec<JoinHandle<Result<()>>>,
 }
 
@@ -447,6 +553,10 @@ impl TcpSession {
         for _ in 0..cfg.n {
             let (s, _) = listener.accept()?;
             s.set_nodelay(true)?;
+            // Read/write deadlines replace silent blocking I/O: a member
+            // that dies mid-exercise turns into a timely op error here
+            // instead of wedging the manager (and its shard) forever.
+            set_io_deadlines(&s, cfg.io_deadline())?;
             let mut r = BufReader::with_capacity(FRAME_BUF, s.try_clone()?);
             let hello = read_frame(&mut r)?;
             let w = BufWriter::with_capacity(FRAME_BUF, s);
@@ -463,6 +573,7 @@ impl TcpSession {
             next_tag: 0,
             flight: None,
             stats: NetStats::default(),
+            links: vec![MemberLinkState::Up; cfg.n],
             handles,
         })
     }
@@ -502,6 +613,12 @@ impl TcpSession {
         Ok(SessionSever { streams })
     }
 
+    /// Current per-member link health (index j = member j+1) — the data
+    /// behind [`MpcSession::link_states`].
+    pub fn link_states_snapshot(&self) -> &[MemberLinkState] {
+        &self.links
+    }
+
     // --- relay plumbing ---------------------------------------------------
 
     fn alloc_vec(&mut self, k: usize) -> Vec<DataId> {
@@ -514,20 +631,39 @@ impl TcpSession {
     }
 
     /// Send one frame to member j+1 (write + flush: with `TCP_NODELAY` the
-    /// frame leaves as one segment train immediately).
+    /// frame leaves as one segment train immediately). A failed or
+    /// deadline-expired write marks the link [`MemberLinkState::Down`].
     fn tx(&mut self, j: usize, elems: &[u128]) -> Result<()> {
         self.stats.messages += 1;
         self.stats.bytes += wire_bytes_for(elems.len()) as u64;
         let ex = self.next_ex;
         let c = &mut self.conns[j];
-        write_frame_parts(&mut c.w, ex, u32::MAX, elems)
+        let res = write_frame_parts(&mut c.w, ex, u32::MAX, elems)
             .and_then(|()| c.w.flush().map_err(Error::from))
-            .map_err(|e| e.context(format!("send to member {}", j + 1)))
+            .map_err(|e| e.context(format!("send to member {}", j + 1)));
+        if res.is_err() {
+            self.links[j] = MemberLinkState::Down;
+        }
+        res
     }
 
+    /// Receive one frame from member j+1, grading the link from the
+    /// observed wait: error/deadline → `Down`, slower than
+    /// [`DEGRADED_AFTER`] → `Degraded`, otherwise back to `Up`.
     fn rx(&mut self, j: usize) -> Result<Vec<u128>> {
-        let fr = read_frame(&mut self.conns[j].r)
-            .map_err(|e| e.context(format!("recv from member {}", j + 1)))?;
+        let t0 = Instant::now();
+        let fr = match read_frame(&mut self.conns[j].r) {
+            Ok(fr) => fr,
+            Err(e) => {
+                self.links[j] = MemberLinkState::Down;
+                return Err(e.context(format!("recv from member {}", j + 1)));
+            }
+        };
+        self.links[j] = if t0.elapsed() >= DEGRADED_AFTER {
+            MemberLinkState::Degraded
+        } else {
+            MemberLinkState::Up
+        };
         self.stats.messages += 1;
         self.stats.bytes += fr.wire_bytes() as u64;
         Ok(fr.elems)
@@ -915,6 +1051,10 @@ impl MpcSession for TcpSession {
     fn stats(&self) -> NetStats {
         self.stats
     }
+
+    fn link_states(&self) -> Vec<MemberLinkState> {
+        self.links.clone()
+    }
 }
 
 #[cfg(test)]
@@ -1048,5 +1188,48 @@ mod tests {
         for i in 0..k {
             assert_eq!(want[i], avals[i] * bvals[i]);
         }
+    }
+
+    #[test]
+    fn slow_member_grades_its_link_degraded_then_recovers() {
+        let mut cfg = TcpSessionConfig::new(3);
+        // Member 3 stalls 1.5 s (≫ DEGRADED_AFTER, < the deadline) before
+        // its first exercise frame.
+        cfg.fault = Some(MemberFault {
+            member: 3,
+            after_frames: 0,
+            kind: MemberFaultKind::DelayMs(1500),
+        });
+        let mut tcp = TcpSession::spawn_local(Field::paper(), cfg).unwrap();
+        assert_eq!(tcp.link_states(), vec![MemberLinkState::Up; 3]);
+        let a = tcp.input_vec(1, &[5])[0]; // member 3 sleeping: no rx from it here
+        let vals = tcp.reveal_vec(&[a]); // gather waits ~1.5 s on member 3
+        assert_eq!(vals[0], 5);
+        assert_eq!(tcp.link_states()[2], MemberLinkState::Degraded, "slow reply noticed");
+        let vals = tcp.reveal_vec(&[a]); // prompt now: the link recovers
+        assert_eq!(vals[0], 5);
+        assert_eq!(tcp.link_states(), vec![MemberLinkState::Up; 3]);
+        tcp.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dead_member_downs_its_link_and_errors_the_op() {
+        let mut cfg = TcpSessionConfig::new(3);
+        // Fire after the input frame, on the reveal frame: the input's
+        // provisioning writes all land before the member dies, so only
+        // the reveal's gather observes the closed socket.
+        cfg.fault =
+            Some(MemberFault { member: 3, after_frames: 1, kind: MemberFaultKind::Panic });
+        let mut tcp = TcpSession::spawn_local(Field::paper(), cfg).unwrap();
+        let a = tcp.input_vec(1, &[7])[0];
+        // Member 3 panics on the reveal exercise frame; the gather hits a
+        // closed socket and the infallible trait surface aborts via panic
+        // — which a fleet catches as shard death.
+        let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = tcp.reveal_vec(&[a]);
+        }));
+        assert!(died.is_err(), "an op over a dead member must abort");
+        assert_eq!(tcp.link_states()[2], MemberLinkState::Down, "dead link graded Down");
+        tcp.shutdown_lossy();
     }
 }

@@ -488,6 +488,11 @@ impl<S: MpcSession> MpcSession for CheckedSession<S> {
         self.inner.stats()
     }
 
+    fn link_states(&self) -> Vec<crate::net::MemberLinkState> {
+        // Pure observation — no shares, no traffic, nothing to validate.
+        self.inner.link_states()
+    }
+
     fn declare_phase(&mut self, phase: SessionPhase) {
         self.phase = phase;
         self.counted(Op::Local, 0, |s| s.declare_phase(phase));
@@ -705,6 +710,44 @@ mod tests {
         let mut s = checked(3);
         let ghost = DataId(999);
         let _ = s.submit(FlightOp::Mul(vec![(ghost, ghost)]));
+    }
+
+    /// The respawn handoff: a replacement session confined to a *later
+    /// generation* of the same shard may only reserve inside its
+    /// sub-stripe — a reservation reaching back into the dead
+    /// incarnation's generation-0 tags is a violation, which is the
+    /// sanitizer-level statement of the "burned tags are never reused
+    /// across generations" contract (DESIGN.md §Fleet).
+    #[test]
+    fn respawned_generation_cannot_reach_burned_tags() {
+        use crate::spn::plan::TagStripe;
+        let gen0 = TagStripe::new(0, 2);
+        let gen1 = TagStripe::generation(0, 2, 1);
+        // gen 1 of shard 0 starts exactly where gen 0 ends
+        assert_eq!(gen0.limit(), gen1.base());
+
+        // a fresh replacement session confined to gen 1 reserves fine…
+        let mut s = checked(3);
+        let a = s.input_vec(1, &[640])[0];
+        let burn = s.reserve_tags(gen1.base());
+        assert_eq!(burn, 0, "replacement sessions start with a fresh tag space");
+        s.confine_tags(gen1.base(), gen1.limit());
+        let t = s.reserve_tags(1);
+        assert_eq!(t, gen1.base());
+        let _ = s.divpub_vec_tagged(&[a], 16, &[t]);
+    }
+
+    #[test]
+    #[should_panic(expected = "CheckedSession violation")]
+    fn respawned_generation_stripe_escape_trips() {
+        use crate::spn::plan::TagStripe;
+        let gen1 = TagStripe::generation(0, 2, 1);
+        let mut s = checked(3);
+        // counter only burned up to *inside* gen 0: the first reservation
+        // after confinement lands below gen 1's base and must trip
+        let _ = s.reserve_tags(gen1.base() - 10);
+        s.confine_tags(gen1.base(), gen1.limit());
+        let _ = s.reserve_tags(4);
     }
 
     #[test]

@@ -113,6 +113,15 @@ pub trait MpcSession {
     /// it counts the actual relayed frames.
     fn stats(&self) -> NetStats;
 
+    /// Transport health per member link
+    /// ([`MemberLinkState`](crate::net::MemberLinkState)), for fleet
+    /// monitoring. Backends without real links (the Sim engine) report an
+    /// empty vector; [`crate::net::tcp_session::TcpSession`] reports one
+    /// state per member.
+    fn link_states(&self) -> Vec<crate::net::MemberLinkState> {
+        Vec::new()
+    }
+
     // --- sanitizer hooks (default no-ops; bookkeeping only) --------------
     // CheckedSession overrides these three to enforce the protocol
     // contracts; raw backends inherit the no-ops, so calling them costs

@@ -62,27 +62,52 @@ pub struct Query {
     pub marg: Vec<bool>,
 }
 
-/// One shard's slice of the 64-bit divpub-tag space.
+/// One shard *generation*'s slice of the 64-bit divpub-tag space.
 ///
 /// A serve fleet (DESIGN.md §Fleet) runs S independent sessions for one
-/// model; shard `s` draws every tag from `[s·W, (s+1)·W)` with
-/// `W = u64::MAX / S`, so the stripes are pairwise disjoint by
-/// construction and the tag-freshness invariant holds *per session*
-/// without any cross-shard coordination. `TagStripe::new(0, 1)` is the
-/// whole tag space — a fleet of one is tag-for-tag the single-session
-/// server.
+/// model; shard `s` owns the band `[s·W, (s+1)·W)` with
+/// `W = u64::MAX / S`. Within its band each shard subdivides further into
+/// [`TagStripe::GENERATIONS`] generation sub-stripes of width
+/// `Wg = W / GENERATIONS`: generation 0 is the original session, and every
+/// respawned replacement (DESIGN.md §Fleet, shard lifecycle) takes the
+/// next generation — so tags burned by a dead incarnation are never
+/// reissued to its successor, and the §3.4 freshness invariant holds
+/// *per fleet lifetime* without any cross-shard or cross-generation
+/// coordination. All (shard, generation) stripes are pairwise disjoint by
+/// construction. `TagStripe::new(0, 1)` — shard 0, generation 0 of a
+/// one-shard fleet — starts at tag 0, so a fleet of one is tag-for-tag
+/// the single-session server.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TagStripe {
     shard: usize,
     shards: usize,
+    gen: u64,
 }
 
 impl TagStripe {
-    /// Stripe `shard` of a `shards`-way partition (`shard < shards`).
+    /// Generation sub-stripes per shard band: enough respawns for any
+    /// realistic serve lifetime, while keeping each generation's width
+    /// (`u64::MAX / shards / 64`) astronomically larger than any tag
+    /// demand a session could meet.
+    pub const GENERATIONS: u64 = 64;
+
+    /// Generation 0 of stripe `shard` in a `shards`-way partition
+    /// (`shard < shards`).
     pub fn new(shard: usize, shards: usize) -> TagStripe {
+        Self::generation(shard, shards, 0)
+    }
+
+    /// Generation `gen` of stripe `shard` (`gen < GENERATIONS`): the
+    /// sub-stripe handed to the `gen`-th incarnation of the shard.
+    pub fn generation(shard: usize, shards: usize, gen: u64) -> TagStripe {
         assert!(shards >= 1, "a fleet has at least one shard");
         assert!(shard < shards, "stripe {shard} of a {shards}-shard fleet");
-        TagStripe { shard, shards }
+        assert!(
+            gen < Self::GENERATIONS,
+            "generation {gen} exhausts the {} sub-stripes of shard {shard}",
+            Self::GENERATIONS
+        );
+        TagStripe { shard, shards, gen }
     }
 
     /// This stripe's shard index.
@@ -95,19 +120,29 @@ impl TagStripe {
         self.shards
     }
 
-    /// Stripe width `W = u64::MAX / shards`.
+    /// This stripe's generation within its shard band.
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// Full shard-band width `W = u64::MAX / shards` (all generations).
     pub fn width(shards: usize) -> u64 {
         u64::MAX / shards as u64
     }
 
+    /// Width of one generation sub-stripe, `W / GENERATIONS`.
+    pub fn gen_width(shards: usize) -> u64 {
+        Self::width(shards) / Self::GENERATIONS
+    }
+
     /// First tag of the stripe.
     pub fn base(&self) -> u64 {
-        self.shard as u64 * Self::width(self.shards)
+        self.shard as u64 * Self::width(self.shards) + self.gen * Self::gen_width(self.shards)
     }
 
     /// One past the last tag of the stripe.
     pub fn limit(&self) -> u64 {
-        self.base() + Self::width(self.shards)
+        self.base() + Self::gen_width(self.shards)
     }
 
     /// Does the half-open tag range `[start, end)` fall inside the stripe?
@@ -1086,21 +1121,55 @@ mod tests {
     #[test]
     fn tag_stripes_partition_the_space() {
         for shards in [1usize, 2, 3, 4, 7] {
-            let stripes: Vec<TagStripe> =
+            let gen0: Vec<TagStripe> =
                 (0..shards).map(|s| TagStripe::new(s, shards)).collect();
-            assert_eq!(stripes[0].base(), 0, "stripe 0 starts at tag 0");
-            for w in stripes.windows(2) {
-                assert_eq!(w[0].limit(), w[1].base(), "stripes tile without gaps");
+            assert_eq!(gen0[0].base(), 0, "stripe 0 gen 0 starts at tag 0");
+            for (s, st) in gen0.iter().enumerate() {
+                assert_eq!(
+                    st.base(),
+                    s as u64 * TagStripe::width(shards),
+                    "gen 0 starts at its shard band"
+                );
+                assert!(st.contains(st.base(), st.base() + 1000));
+                assert!(!st.contains(st.limit(), st.limit() + 1));
+                assert_eq!(st.limit() - st.base(), TagStripe::gen_width(shards));
             }
-            for s in &stripes {
-                assert!(s.contains(s.base(), s.base() + 1000));
-                assert!(!s.contains(s.limit(), s.limit() + 1));
-                assert_eq!(s.limit() - s.base(), TagStripe::width(shards));
+            // generations tile each shard band gap-free and stay inside it
+            for s in 0..shards {
+                let band_lo = s as u64 * TagStripe::width(shards);
+                let band_hi = band_lo + TagStripe::width(shards);
+                let gens: Vec<TagStripe> = (0..TagStripe::GENERATIONS)
+                    .map(|g| TagStripe::generation(s, shards, g))
+                    .collect();
+                assert_eq!(gens[0].base(), band_lo);
+                for w in gens.windows(2) {
+                    assert_eq!(w[0].limit(), w[1].base(), "generations tile without gaps");
+                }
+                assert!(gens.last().expect("GENERATIONS >= 1").limit() <= band_hi);
+            }
+            // all (shard, generation) stripes are pairwise disjoint
+            let all: Vec<TagStripe> = (0..shards)
+                .flat_map(|s| {
+                    (0..TagStripe::GENERATIONS).map(move |g| TagStripe::generation(s, shards, g))
+                })
+                .collect();
+            for (i, a) in all.iter().enumerate() {
+                for b in &all[i + 1..] {
+                    assert!(
+                        a.limit() <= b.base() || b.limit() <= a.base(),
+                        "{a:?} and {b:?} overlap"
+                    );
+                }
             }
         }
-        // a fleet of one owns (almost) the whole space — the unsharded server
+        // generation 0 of a fleet of one starts at tag 0 — the unsharded
+        // server's stripe — and a later generation never reaches back
         let whole = TagStripe::new(0, 1);
-        assert!(whole.contains(0, u64::MAX));
+        assert_eq!(whole.base(), 0);
+        assert!(whole.contains(0, TagStripe::gen_width(1)));
+        let respawned = TagStripe::generation(0, 1, 1);
+        assert_eq!(respawned.base(), whole.limit(), "gen 1 starts where gen 0 ends");
+        assert!(!respawned.contains(whole.base(), whole.base() + 1));
     }
 
     #[test]

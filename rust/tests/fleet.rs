@@ -16,21 +16,32 @@
 //!   variant severs real member sockets via the kill-shard command.
 //! * **Dispatch** — unpinned pipelined load spreads over multiple live
 //!   shards (least-loaded routing), with exact report totals.
+//! * **Self-healing** — a seeded fault plan kills every shard of a
+//!   respawning fleet once under 8-client load: every query is still
+//!   answered, every answer is byte-identical to its (shard, generation)
+//!   oracle in served (`snum`) order, every shard revives (`0 dead`), and
+//!   the divpub-tag blocks consumed across all generations are pairwise
+//!   disjoint — burned tags are never reissued. Health probes quarantine
+//!   a severed TCP shard before any client query reaches it.
 //!
 //! Everything runs on `Structure::mini_demo()` — artifact-free, CI-safe.
 
+use std::collections::HashMap;
 use std::net::TcpListener;
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
 use spn_mpc::coordinator::infer::private_eval_batch;
-use spn_mpc::coordinator::serve::train_and_serve_fleet;
+use spn_mpc::coordinator::serve::{train_and_serve_fleet, RespawnBuilder};
 use spn_mpc::coordinator::train::{train, TrainConfig};
 use spn_mpc::datasets;
 use spn_mpc::field::Field;
+use spn_mpc::net::fault::{FaultEvent, FaultKind, FaultPlan};
 use spn_mpc::net::fleet::{FleetReport, ShardSever};
-use spn_mpc::net::serve::{render_query_json, ServeClient, ServeConfig};
+use spn_mpc::net::serve::{render_query_json, Response, ServeClient, ServeConfig};
 use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
+use spn_mpc::net::MemberLinkState;
 use spn_mpc::protocols::engine::{Engine, EngineConfig};
 use spn_mpc::spn::learn;
 use spn_mpc::spn::plan::{EvalPlan, Evaluator, Query, TagStripe};
@@ -92,11 +103,24 @@ fn arrival_queries(st: &Structure, total: usize) -> Vec<Query> {
         .collect()
 }
 
-/// Shard s's single-session oracle: a fresh identically-seeded Sim
-/// session, identical training replay, stripe s of `shards` installed,
-/// one direct eval_batch over the queries that shard served, in served
-/// order. (TCP ≡ Sim byte-identically under one seed, so this is the
-/// oracle for both backends.)
+/// A stripe's single-session oracle: a fresh identically-seeded Sim
+/// session, identical training replay, the given [`TagStripe`] (any
+/// shard, any generation) installed, one direct eval_batch over the
+/// queries that generation served, in served order. (TCP ≡ Sim
+/// byte-identically under one seed, so this is the oracle for both
+/// backends.)
+fn generation_oracle(st: &Structure, n: usize, stripe: TagStripe, queries: &[Query]) -> Vec<i128> {
+    let (counts, rows) = mini_counts(st, n);
+    let theta = learn::default_leaf_theta(st);
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let (model, _) = train(&mut eng, st, &counts, rows, &TrainConfig::default());
+    let plan = EvalPlan::compile(st, &theta, model.d);
+    let mut ev = Evaluator::new(plan).clone_into_session(&mut eng, stripe);
+    let (roots, _) = ev.eval_batch(&mut eng, queries, &model.sum_w, model.leaf_theta.as_deref());
+    roots
+}
+
+/// Shard s's generation-0 oracle (the original fleet byte-identity pin).
 fn shard_oracle(
     st: &Structure,
     n: usize,
@@ -104,14 +128,17 @@ fn shard_oracle(
     shards: usize,
     queries: &[Query],
 ) -> Vec<i128> {
-    let (counts, rows) = mini_counts(st, n);
+    generation_oracle(st, n, TagStripe::new(s, shards), queries)
+}
+
+/// Divpub tags per query of the mini-demo plan — the stride that turns a
+/// response's `(gen, snum)` into the exact tag block it consumed.
+fn divpubs_per_query(st: &Structure) -> u64 {
+    let (counts, rows) = mini_counts(st, MEMBERS);
     let theta = learn::default_leaf_theta(st);
-    let mut eng = Engine::new(Field::paper(), EngineConfig::new(n).batched());
+    let mut eng = Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched());
     let (model, _) = train(&mut eng, st, &counts, rows, &TrainConfig::default());
-    let plan = EvalPlan::compile(st, &theta, model.d);
-    let mut ev = Evaluator::new(plan).clone_into_session(&mut eng, TagStripe::new(s, shards));
-    let (roots, _) = ev.eval_batch(&mut eng, queries, &model.sum_w, model.leaf_theta.as_deref());
-    roots
+    EvalPlan::compile(st, &theta, model.d).divpubs_per_query
 }
 
 /// The unsharded oracle of serve.rs, for the shard-0 ≡ single-session pin.
@@ -126,13 +153,20 @@ fn plain_oracle(st: &Structure, n: usize, queries: &[Query]) -> Vec<i128> {
 
 /// Bind an ephemeral listener, then train + serve a fleet of `shards`
 /// sessions on a background thread. TCP fleets get real sever handles so
-/// `kill-shard` cuts member sockets; dead TCP shards are torn down
-/// lossily after the drain (a leak would hang the test).
-fn spawn_fleet(
+/// `kill-shard` cuts member sockets; dead or respawned TCP shards are
+/// torn down lossily after the drain (a leak would hang the test).
+///
+/// `respawn` arms self-healing (deterministic retrain replay onto the
+/// next generation sub-stripe), `probe_ms > 0` arms idle health probes,
+/// `fault` injects a seeded chaos schedule.
+fn spawn_healing_fleet(
     backend: &'static str,
     st: Structure,
     shards: usize,
     cfg: ServeConfig,
+    respawn: bool,
+    probe_ms: u64,
+    fault: Option<FaultPlan>,
 ) -> (std::net::SocketAddr, thread::JoinHandle<FleetReport>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -140,6 +174,7 @@ fn spawn_fleet(
         let (counts, rows) = mini_counts(&st, MEMBERS);
         let theta = learn::default_leaf_theta(&st);
         let tcfg = TrainConfig::default();
+        let probe = (probe_ms > 0).then(|| Duration::from_millis(probe_ms));
         match backend {
             "tcp" => {
                 let mut sessions = Vec::with_capacity(shards);
@@ -153,13 +188,33 @@ fn spawn_fleet(
                     severs.push(Some(Box::new(move || sever.sever())));
                     sessions.push(wrap(sess));
                 }
+                let rb = respawn.then(|| RespawnBuilder {
+                    build: Box::new(|_s| {
+                        let sess = TcpSession::spawn_local(
+                            Field::paper(),
+                            TcpSessionConfig::new(MEMBERS),
+                        )?;
+                        let sever = sess.sever_handle()?;
+                        let sever: ShardSever = Box::new(move || sever.sever());
+                        Ok((wrap(sess), Some(sever)))
+                    }),
+                    reap: Arc::new(|sess, dead: bool| {
+                        let raw = unwrap_session(sess);
+                        if dead {
+                            raw.shutdown_lossy();
+                        } else {
+                            let _ = raw.shutdown();
+                        }
+                    }),
+                });
                 let (report, _) = train_and_serve_fleet(
                     &mut sessions, &st, &counts, rows, &tcfg, &theta, listener, &cfg, severs,
+                    rb, probe, fault,
                 )
                 .unwrap();
                 for (s, sess) in sessions.into_iter().enumerate() {
                     let sess = unwrap_session(sess);
-                    if report.per_shard[s].dead {
+                    if report.per_shard[s].dead || report.per_shard[s].respawns > 0 {
                         sess.shutdown_lossy();
                     } else {
                         sess.shutdown().unwrap();
@@ -173,8 +228,21 @@ fn spawn_fleet(
                         wrap_engine(Engine::new(Field::paper(), EngineConfig::new(MEMBERS).batched()))
                     })
                     .collect();
+                let rb = respawn.then(|| RespawnBuilder {
+                    build: Box::new(|_s| {
+                        Ok((
+                            wrap_engine(Engine::new(
+                                Field::paper(),
+                                EngineConfig::new(MEMBERS).batched(),
+                            )),
+                            None,
+                        ))
+                    }),
+                    reap: Arc::new(|_sess, _dead: bool| {}),
+                });
                 let (report, _) = train_and_serve_fleet(
-                    &mut sessions, &st, &counts, rows, &tcfg, &theta, listener, &cfg, Vec::new(),
+                    &mut sessions, &st, &counts, rows, &tcfg, &theta, listener, &cfg,
+                    Vec::new(), rb, probe, fault,
                 )
                 .unwrap();
                 report
@@ -182,6 +250,37 @@ fn spawn_fleet(
         }
     });
     (addr, h)
+}
+
+/// The pre-healing entry point: no respawn, no probes, no faults.
+fn spawn_fleet(
+    backend: &'static str,
+    st: Structure,
+    shards: usize,
+    cfg: ServeConfig,
+) -> (std::net::SocketAddr, thread::JoinHandle<FleetReport>) {
+    spawn_healing_fleet(backend, st, shards, cfg, false, 0, None)
+}
+
+/// Drive one query to an answer through transient fleet errors (the shard
+/// holding it died, or a respawn window briefly left no live shard) — the
+/// test mirror of the CLI client's retry loop. Transport-level failures
+/// abort the test: the fleet front-end must outlive its shards.
+fn query_until_served(c: &mut ServeClient, q: &Query) -> Response {
+    for _ in 0..400 {
+        match c.query(q) {
+            Ok(r) => return r,
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("server error"),
+                    "fleet front-end must outlive its shards: {msg}"
+                );
+                thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    panic!("query not served after 400 attempts");
 }
 
 /// A query frame carrying the `"shard"` routing pin.
@@ -446,4 +545,172 @@ fn unpinned_pipelined_load_spreads_over_live_shards() {
     assert!(used[0] > 0 && used[1] > 0, "both shards must serve ({used:?})");
     assert_eq!(report.per_shard[0].queries, used[0]);
     assert_eq!(report.per_shard[1].queries, used[1]);
+}
+
+#[test]
+fn seeded_chaos_kills_every_shard_and_the_fleet_self_heals_byte_identically() {
+    // The acceptance chaos run: a seeded fault plan kills each shard once
+    // (a scheduled Sever degrades to a panic kill on Sim shards) while 8
+    // clients stream queries through retry loops. Every query must be
+    // answered, every answer must be byte-identical to its (shard,
+    // generation) oracle replayed in served (`snum`) order, every shard
+    // must respawn (`0 dead`), and the divpub-tag blocks consumed across
+    // all generations must be pairwise disjoint — no burned tag reused.
+    let st = Structure::mini_demo();
+    let shards = 2usize;
+    let clients = 8usize;
+    let per = 4usize;
+    let cfg =
+        ServeConfig { max_batch: 4, max_wait: Duration::from_millis(2), max_queries: None };
+    let fault = FaultPlan::seeded(7, shards, 4);
+    let (addr, h) = spawn_healing_fleet("sim", st.clone(), shards, cfg, true, 5, Some(fault));
+    let queries = arrival_queries(&st, clients * per);
+    let mut workers = Vec::new();
+    for t in 0..clients {
+        let a = addr.to_string();
+        let mine: Vec<Query> = queries[t * per..(t + 1) * per].to_vec();
+        workers.push(thread::spawn(move || {
+            let mut c = ServeClient::connect(&a).unwrap();
+            let mut out = Vec::new();
+            for q in &mine {
+                let r = query_until_served(&mut c, q);
+                out.push((q.clone(), r));
+            }
+            out
+        }));
+    }
+    let answered: Vec<(Query, Response)> =
+        workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+    assert_eq!(answered.len(), clients * per, "every query eventually answered");
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown_server().unwrap();
+    let report = h.join().unwrap();
+    // every shard died once and was revived — nobody stayed dead
+    assert_eq!(report.dead_shards, 0, "respawn must revive every kill: {report:?}");
+    assert_eq!(report.respawns, shards as u64);
+    for (s, ps) in report.per_shard.iter().enumerate() {
+        assert_eq!(ps.respawns, 1, "shard {s}: the seeded plan kills each shard once");
+        assert!(!ps.dead, "shard {s} ends the run alive");
+        assert!(ps.panic_msg.is_some(), "shard {s}: the death cause is preserved");
+    }
+    // byte-identity: replay each (shard, generation) group on its striped
+    // oracle, in served order
+    let m = divpubs_per_query(&st);
+    let mut groups: HashMap<(usize, u64), Vec<(u64, Query, i128)>> = HashMap::new();
+    for (q, r) in &answered {
+        let s = r.shard.expect("fleet responses name their shard");
+        let gen = r.gen.expect("fleet responses name their generation");
+        let snum = r.snum.expect("fleet responses carry their serve index");
+        groups.entry((s, gen)).or_default().push((snum, q.clone(), r.root));
+    }
+    let mut blocks: Vec<(u64, u64)> = Vec::new();
+    for ((s, gen), mut grp) in groups {
+        grp.sort_by_key(|e| e.0);
+        for (k, e) in grp.iter().enumerate() {
+            // served snums are gap-free within a generation: an
+            // interrupted tick never reports, and its burned tags sit
+            // after every served block
+            assert_eq!(e.0, k as u64, "shard {s} gen {gen}: snums must be contiguous");
+        }
+        let stripe = TagStripe::generation(s, shards, gen);
+        let qs: Vec<Query> = grp.iter().map(|e| e.1.clone()).collect();
+        let want = generation_oracle(&st, MEMBERS, stripe, &qs);
+        let got: Vec<i128> = grp.iter().map(|e| e.2).collect();
+        assert_eq!(got, want, "shard {s} gen {gen}: byte-identity to its oracle");
+        for e in &grp {
+            let b = stripe.base() + e.0 * m;
+            assert!(b + m <= stripe.limit(), "block escapes the generation sub-stripe");
+            blocks.push((b, b + m));
+        }
+    }
+    // freshness, observably: no tag block is ever consumed twice
+    blocks.sort_unstable();
+    for w in blocks.windows(2) {
+        assert!(w[0].1 <= w[1].0, "tag blocks {w:?} overlap — freshness broken");
+    }
+}
+
+#[test]
+fn respawned_generation_never_reuses_burned_tags() {
+    // Kill a 1-shard healing fleet mid-stream, then keep querying: the
+    // revived generation's divpub-tag blocks must lie strictly inside its
+    // own sub-stripe. Generation g+1 starts exactly at generation g's
+    // limit, so even the killed tick's burned, never-revealed tags can
+    // never be reissued — which this makes observable by reconstructing
+    // every consumed block from the responses' (gen, snum).
+    let st = Structure::mini_demo();
+    let cfg =
+        ServeConfig { max_batch: 4, max_wait: Duration::from_millis(2), max_queries: None };
+    let m = divpubs_per_query(&st);
+    let q = Query { x: vec![1, 0], marg: vec![false, true] };
+    for backend in ["sim", "tcp"] {
+        let (addr, h) = spawn_healing_fleet(backend, st.clone(), 1, cfg, true, 0, None);
+        let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+        let mut blocks: Vec<(u64, u64)> = Vec::new();
+        let mut note = |r: &Response| -> u64 {
+            let gen = r.gen.unwrap();
+            let stripe = TagStripe::generation(0, 1, gen);
+            let b = stripe.base() + r.snum.unwrap() * m;
+            assert!(b + m <= stripe.limit(), "{backend}: block escapes its sub-stripe");
+            blocks.push((b, b + m));
+            gen
+        };
+        for _ in 0..3 {
+            let r = c.query(&q).unwrap();
+            assert_eq!(note(&r), 0, "{backend}: generation 0 serves before the kill");
+        }
+        ServeClient::connect(&addr.to_string()).unwrap().kill_shard(0).unwrap();
+        // queries during the respawn window bounce with a retryable
+        // "no live shards" error until the supervisor re-admits shard 0
+        let mut revived_gen = 0;
+        for _ in 0..6 {
+            let r = query_until_served(&mut c, &q);
+            revived_gen = note(&r);
+        }
+        assert!(revived_gen >= 1, "{backend}: revival serves from a fresh generation");
+        drop(c);
+        ServeClient::connect(&addr.to_string()).unwrap().shutdown_server().unwrap();
+        let report = h.join().unwrap();
+        assert_eq!(report.dead_shards, 0, "{backend}: the fleet healed");
+        assert!(report.respawns >= 1, "{backend}: the kill triggered a respawn");
+        assert_eq!(report.queries, 9, "{backend}: all nine queries served");
+        blocks.sort_unstable();
+        for w in blocks.windows(2) {
+            assert!(w[0].1 <= w[1].0, "{backend}: tag blocks {w:?} overlap");
+        }
+    }
+}
+
+#[test]
+fn probes_quarantine_a_severed_shard_before_queries_reach_it() {
+    // Acceptance: with probes armed, a shard whose member sockets are
+    // severed while the fleet is IDLE is detected and quarantined by the
+    // probe round itself — no client query is ever dispatched to the
+    // corpse, so nothing needs rescuing.
+    let st = Structure::mini_demo();
+    let cfg =
+        ServeConfig { max_batch: 4, max_wait: Duration::from_millis(2), max_queries: None };
+    let fault = FaultPlan::new(vec![FaultEvent { shard: 0, wake: 0, kind: FaultKind::Sever }]);
+    let (addr, h) = spawn_healing_fleet("tcp", st.clone(), 2, cfg, false, 5, Some(fault));
+    // idle fleet ⇒ the only wakes are probes; the wake-0 sever cuts shard
+    // 0's member sockets and its first probe dies on them
+    thread::sleep(Duration::from_millis(400));
+    let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+    let q = Query { x: vec![1, 0], marg: vec![false, true] };
+    for _ in 0..4 {
+        let r = c.query(&q).unwrap();
+        assert_eq!(r.shard, Some(1), "only the healthy shard may serve");
+    }
+    drop(c);
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown_server().unwrap();
+    let report = h.join().unwrap();
+    assert!(report.per_shard[0].dead, "the severed shard was quarantined");
+    assert_eq!(report.per_shard[0].queries, 0, "no query ever reached the corpse");
+    assert_eq!(report.redispatched, 0, "quarantine beat dispatch — nothing to rescue");
+    assert!(report.per_shard[1].probes > 0, "the healthy shard kept probing");
+    assert!(
+        report.per_shard[0].links.iter().any(|l| *l == MemberLinkState::Down),
+        "the death snapshot records the downed member link: {:?}",
+        report.per_shard[0].links
+    );
+    assert!(report.per_shard[0].panic_msg.is_some(), "the probe death is attributed");
 }

@@ -1,0 +1,6 @@
+// L008 carve-out fixture: net/backoff.rs is the one sanctioned home for a
+// raw sleep (it IS the pause primitive), so nothing here may fire.
+
+pub fn pause(d: std::time::Duration) {
+    std::thread::sleep(d);
+}

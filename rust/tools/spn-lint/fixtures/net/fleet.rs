@@ -1,0 +1,12 @@
+// L008 fixture: bare thread::sleep in the net layer. The path also ends
+// in net/fleet.rs, an L004 path, so everything here is unwrap/expect-free.
+// A comment mentioning thread::sleep must not fire.
+
+pub fn wait_for_peer() {
+    std::thread::sleep(std::time::Duration::from_millis(50));
+}
+
+pub fn sanctioned_wait() {
+    // lint:allow(L008) — decoy: the line-above suppression must hold
+    std::thread::sleep(std::time::Duration::from_millis(50));
+}

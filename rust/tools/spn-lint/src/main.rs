@@ -40,6 +40,11 @@
 //!   re-derives scheduling from raw plan internals elsewhere will silently
 //!   disagree with the wave order the round scheduler and the tag ledger
 //!   rely on (DESIGN.md §Round scheduler).
+//! * **L008** — bare `thread::sleep` in `net/` outside `net/backoff.rs`:
+//!   fixed naked sleeps in the transport/serve layer are unbounded stalls
+//!   with no jitter and no cap — every wait goes through
+//!   `backoff::pause` or a `Backoff` schedule so retry storms stay
+//!   deterministic and bounded (DESIGN.md §Fleet).
 //!
 //! Suppression: `lint:allow(L00X)` on the flagged line or the line
 //! immediately above. Lines after a file's literal `#[cfg(test)]` marker
@@ -187,6 +192,7 @@ fn scan_file(
         || disp.ends_with("sharing/shamir.rs")
         || disp.contains("net/tcp");
     let l004_applies = disp.ends_with("net/serve.rs") || disp.ends_with("net/fleet.rs");
+    let l008_applies = disp.contains("net/") && !disp.ends_with("net/backoff.rs");
     let l007_allowed = disp.ends_with("spn/plan.rs");
     let l005_file = disp.ends_with("net/tcp.rs")
         || disp.ends_with("net/tcp_session.rs")
@@ -315,6 +321,18 @@ fn scan_file(
                       thread poisons shared state for every client; use the \
                       poison-recovering lock helpers or lint:allow(L004) with an \
                       invariant justification"
+                    .to_string(),
+            });
+        }
+        if l008_applies && line.contains("thread::sleep") && !allowed("L008") {
+            findings.push(Finding {
+                file: disp.to_string(),
+                line: lineno,
+                lint: "L008",
+                msg: "bare thread::sleep in the net layer — waits go through \
+                      backoff::pause or a Backoff schedule (capped, jittered, \
+                      deterministic; DESIGN.md §Fleet) so a retry loop can never \
+                      stall unbounded or stampede"
                     .to_string(),
             });
         }
@@ -455,6 +473,7 @@ fn self_check(root: &Path) -> ExitCode {
         ("L005", "net/tcp_session.rs"),
         ("L006", "l006.rs"),
         ("L007", "l007.rs"),
+        ("L008", "net/fleet.rs"),
     ];
     for (lint, file) in expect {
         if !findings.iter().any(|f| f.lint == *lint && f.file.ends_with(file)) {
@@ -480,6 +499,14 @@ fn self_check(root: &Path) -> ExitCode {
     let l007 = findings.iter().filter(|f| f.lint == "L007").count();
     if l007 != 1 {
         eprintln!("self-check FAIL: expected exactly 1 L007 finding, got {l007}");
+        failed = true;
+    }
+    // fixtures/net/fleet.rs carries one firing sleep plus a suppressed
+    // decoy, and fixtures/net/backoff.rs is the allowed path: exactly one
+    // L008 total pins both the suppression and the path carve-out.
+    let l008 = findings.iter().filter(|f| f.lint == "L008").count();
+    if l008 != 1 {
+        eprintln!("self-check FAIL: expected exactly 1 L008 finding, got {l008}");
         failed = true;
     }
     if failed {
@@ -514,7 +541,7 @@ fn main() -> ExitCode {
             "--help" | "-h" => {
                 println!(
                     "spn-lint [--root DIR] [--self-check]\n\
-                     lints DIR/rust/src (L001–L007) against DIR/DESIGN.md;\n\
+                     lints DIR/rust/src (L001–L008) against DIR/DESIGN.md;\n\
                      --self-check runs the linter over its committed fixtures instead"
                 );
                 return ExitCode::SUCCESS;
