@@ -15,7 +15,7 @@
 #                     be committed when refreshed (so neither gitignored
 #                     nor removed by `make clean`)
 #   make doc        — cargo doc --no-deps (zero warnings is the contract)
-#   make lint       — spn-lint protocol-contract source pass (L001–L008)
+#   make lint       — spn-lint protocol-contract source pass (L001–L009)
 #                     over rust/src, then its --self-check against the
 #                     committed fixtures. Blocking in CI; zero findings is
 #                     the contract (see DESIGN.md §Static analysis)

@@ -50,6 +50,55 @@ fn main() {
     rows.push(vec!["field inverse (Fermat)".into(), String::new(), s.per_iter_str()]);
     json.push("microbench_field", "inverse_ns", s.mean_s * 1e9);
 
+    // Montgomery kernel rows (§Perf iteration 7): the REDC multiply with
+    // one canonical operand (the hot dealing/recombination shape), the
+    // domain round-trip, and the deferred-reduction dot against the naive
+    // mul/add fold it replaced.
+    let ys_mont: Vec<u128> = ys.iter().map(|&y| f.to_mont(y)).collect();
+    let s = time_it(3, 20, || {
+        let mut acc = 0u128;
+        for (&a, &bm) in xs.iter().zip(&ys_mont) {
+            acc = f.mont_mul_add(acc, a, bm);
+        }
+        acc
+    });
+    rows.push(vec![
+        "field mont_mul_add (REDC)".into(),
+        format!("{:.1} M ops/s", throughput(&s, 4096) / 1e6),
+        s.per_iter_str(),
+    ]);
+    json.push("microbench_field", "mont_mul_ns", s.mean_s * 1e9 / 4096.0);
+
+    let s = time_it(3, 20, || {
+        let mut acc = 0u128;
+        for &a in &xs {
+            acc ^= f.from_mont(f.to_mont(a));
+        }
+        acc
+    });
+    rows.push(vec![
+        "field to_mont∘from_mont".into(),
+        format!("{:.1} M ops/s", throughput(&s, 4096) / 1e6),
+        s.per_iter_str(),
+    ]);
+    json.push("microbench_field", "to_from_mont_ns", s.mean_s * 1e9 / 4096.0);
+
+    let s_def = time_it(3, 20, || f.dot(&xs, &ys));
+    let s_naive = time_it(3, 20, || {
+        let mut acc = 0u128;
+        for (&a, &b) in xs.iter().zip(&ys) {
+            acc = f.add(acc, f.mul(a, b));
+        }
+        acc
+    });
+    let speedup = s_naive.mean_s / s_def.mean_s;
+    rows.push(vec![
+        "field dot (deferred vs naive)".into(),
+        format!("{speedup:.2}× vs naive fold"),
+        s_def.per_iter_str(),
+    ]);
+    json.push("microbench_field", "dot_deferred_vs_naive", speedup);
+
     for n in [5usize, 13] {
         let ctx = ShamirCtx::new(f, n);
         let mut rng = Prng::seed_from_u64(2);

@@ -18,11 +18,26 @@
 //! BENCH_mpc_throughput.json — the data-plane perf trajectory baseline.
 //! `--smoke` shrinks to k ∈ {1, 8}, n = 3 with 3 iterations: CI runs this
 //! mode so the bench binary and its JSON schema cannot rot.
+//!
+//! Threads dimension (§Perf iteration 7): every session/dealing shape runs
+//! at threads ∈ {1, 4}. `thr1` keeps the legacy metric names; pooled rows
+//! append `_thr4` *before* the unit suffix, keeping the backend token at
+//! split index 2 for the CI schema check. Before anything is timed, a
+//! byte-identity anchor asserts the pooled paths reproduce the serial
+//! bytes exactly.
+//!
+//! `--gate <baseline.json>` compares the `mul_vec_sim_*` and
+//! `share_batch_local_*` elems/s rows just measured against a committed
+//! baseline and exits nonzero on a >3× regression — the CI perf-smoke
+//! tripwire (thresholded loosely: CI runners are noisy, 3× is rot, not
+//! jitter).
 
 use spn_mpc::bench::{throughput, time_it, JsonSink};
 use spn_mpc::field::Field;
+use spn_mpc::json::Json;
 use spn_mpc::metrics::render_table;
 use spn_mpc::net::tcp_session::{TcpSession, TcpSessionConfig};
+use spn_mpc::parallel::Pool;
 use spn_mpc::protocols::engine::{DataId, Engine, EngineConfig};
 use spn_mpc::protocols::flight::FlightOp;
 use spn_mpc::protocols::session::MpcSession;
@@ -54,14 +69,21 @@ fn fmt_eps(eps: f64) -> String {
 }
 
 /// Time `mul_vec` and `divpub_vec` at width k on one session backend.
+/// `suffix` is the threads-dimension tag (`""` for the serial legacy rows,
+/// `"_thr4"` for the pooled ones); it sits before the unit suffix so the
+/// backend token stays at metric-name split index 2. Gate-relevant
+/// measurements are mirrored into `measured` (the JsonSink drops rows
+/// when `--json` is absent, the gate must not).
 fn bench_session<S: MpcSession>(
     backend: &str,
+    suffix: &str,
     sess: &mut S,
     n: usize,
     k: usize,
     smoke: bool,
     json: &mut JsonSink,
     rows: &mut Vec<Vec<String>>,
+    measured: &mut Vec<(String, f64)>,
 ) {
     let avals: Vec<u128> = (0..k as u128).map(|i| i * 7 + 3).collect();
     let bvals: Vec<u128> = (0..k as u128).map(|i| i * 11 + 1).collect();
@@ -73,10 +95,12 @@ fn bench_session<S: MpcSession>(
 
     let s = time_it(wu, it, || sess.mul_vec(&pairs));
     let eps = throughput(&s, k as u64);
-    json.push("mpc_throughput", &format!("mul_vec_{backend}_n{n}_k{k}_elems_per_s"), eps);
+    let metric = format!("mul_vec_{backend}_n{n}_k{k}{suffix}_elems_per_s");
+    json.push("mpc_throughput", &metric, eps);
+    measured.push((metric, eps));
     rows.push(vec![
         format!("mul_vec (n={n})"),
-        backend.to_string(),
+        format!("{backend}{suffix}"),
         k.to_string(),
         fmt_eps(eps),
         s.per_iter_str(),
@@ -84,10 +108,10 @@ fn bench_session<S: MpcSession>(
 
     let s = time_it(wu, it, || sess.divpub_vec(&a, 256));
     let eps = throughput(&s, k as u64);
-    json.push("mpc_throughput", &format!("divpub_vec_{backend}_n{n}_k{k}_elems_per_s"), eps);
+    json.push("mpc_throughput", &format!("divpub_vec_{backend}_n{n}_k{k}{suffix}_elems_per_s"), eps);
     rows.push(vec![
         format!("divpub_vec (n={n})"),
-        backend.to_string(),
+        format!("{backend}{suffix}"),
         k.to_string(),
         fmt_eps(eps),
         s.per_iter_str(),
@@ -109,12 +133,12 @@ fn bench_session<S: MpcSession>(
     let eps = throughput(&s, k as u64);
     json.push(
         "mpc_throughput",
-        &format!("pipelined_mul_div_{backend}_n{n}_k{k}_elems_per_s"),
+        &format!("pipelined_mul_div_{backend}_n{n}_k{k}{suffix}_elems_per_s"),
         eps,
     );
     rows.push(vec![
         format!("pipelined mul+div (n={n})"),
-        backend.to_string(),
+        format!("{backend}{suffix}"),
         k.to_string(),
         fmt_eps(eps),
         s.per_iter_str(),
@@ -139,6 +163,18 @@ fn bench_session<S: MpcSession>(
     assert!((got - want).abs() <= 1, "{backend} n={n} k={k}: flight divpub {got} vs {want}");
 }
 
+/// The threads-dimension sweep: serial first (legacy metric names), then
+/// the 4-wide pool with a `_thr4` metric tag.
+const THREADS: [usize; 2] = [1, 4];
+
+fn thr_suffix(thr: usize) -> String {
+    if thr == 1 {
+        String::new()
+    } else {
+        format!("_thr{thr}")
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -147,50 +183,95 @@ fn main() {
     let ns: Vec<usize> = if smoke { vec![3] } else { vec![3, 5, 13] };
     let f = Field::paper();
     let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut measured: Vec<(String, f64)> = Vec::new();
+
+    // Correctness anchor for the threads dimension: before timing anything,
+    // the pooled engine must reproduce the serial engine's bytes exactly
+    // (input → mul_vec → reveal over a pool-sized batch).
+    {
+        let run = |threads: usize| -> Vec<u128> {
+            let mut e = Engine::new(f, EngineConfig::new(3).batched().with_threads(threads));
+            let avals: Vec<u128> = (0..1500u128).map(|i| i * 3 + 1).collect();
+            let bvals: Vec<u128> = (0..1500u128).map(|i| i * 5 + 2).collect();
+            let a = e.input_vec(1, &avals);
+            let b = e.input_vec(2, &bvals);
+            let pairs: Vec<(DataId, DataId)> =
+                a.iter().copied().zip(b.iter().copied()).collect();
+            let prods = e.mul_vec(&pairs);
+            e.reveal_vec(&prods)
+        };
+        assert_eq!(run(1), run(4), "threads=4 engine must be byte-identical to serial");
+    }
 
     // --- raw flat-buffer dealing, no session ------------------------------
     for &n in &ns {
         let ctx = ShamirCtx::new(f, n);
         for &k in &ks {
-            let mut rng = Prng::seed_from_u64(7);
             let secrets: Vec<u128> = (0..k as u128).map(|i| i * 97 + 5).collect();
-            let mut out = vec![0u128; n * k];
             let (wu, it) = iters_for(k, smoke);
-            let s = time_it(wu, it, || {
-                ctx.share_batch_into(&secrets, ctx.t, &mut rng, &mut out);
-                out[0]
-            });
-            let eps = throughput(&s, k as u64);
-            json.push(
-                "mpc_throughput",
-                &format!("share_batch_local_n{n}_k{k}_elems_per_s"),
-                eps,
-            );
-            json.push(
-                "mpc_throughput",
-                &format!("share_batch_local_n{n}_k{k}_ns_per_dealt_share"),
-                s.mean_s * 1e9 / (n * k) as f64,
-            );
-            rows.push(vec![
-                format!("share_batch (n={n})"),
-                "local".to_string(),
-                k.to_string(),
-                fmt_eps(eps),
-                s.per_iter_str(),
-            ]);
+            for &thr in &THREADS {
+                let suffix = thr_suffix(thr);
+                let pool = Pool::new(thr);
+                let mut rng = Prng::seed_from_u64(7);
+                let mut out = vec![0u128; n * k];
+                let mut coeffs: Vec<u128> = Vec::new();
+                if thr > 1 {
+                    // Byte-identity anchor for the pooled dealer: same
+                    // seed, same flat buffer as a serial deal.
+                    let mut r_ref = Prng::seed_from_u64(7);
+                    let mut want = vec![0u128; n * k];
+                    ctx.share_batch_into(&secrets, ctx.t, &mut r_ref, &mut want);
+                    ctx.share_batch_into_pooled(
+                        &secrets, ctx.t, &mut rng, &mut out, &mut coeffs, pool,
+                    );
+                    assert_eq!(out, want, "pooled dealing must match serial bytes (n={n} k={k})");
+                    rng = Prng::seed_from_u64(7);
+                }
+                let s = time_it(wu, it, || {
+                    ctx.share_batch_into_pooled(
+                        &secrets, ctx.t, &mut rng, &mut out, &mut coeffs, pool,
+                    );
+                    out[0]
+                });
+                let eps = throughput(&s, k as u64);
+                let metric = format!("share_batch_local_n{n}_k{k}{suffix}_elems_per_s");
+                json.push("mpc_throughput", &metric, eps);
+                measured.push((metric, eps));
+                json.push(
+                    "mpc_throughput",
+                    &format!("share_batch_local_n{n}_k{k}{suffix}_ns_per_dealt_share"),
+                    s.mean_s * 1e9 / (n * k) as f64,
+                );
+                rows.push(vec![
+                    format!("share_batch (n={n})"),
+                    format!("local{suffix}"),
+                    k.to_string(),
+                    fmt_eps(eps),
+                    s.per_iter_str(),
+                ]);
+            }
         }
     }
 
     // --- full secure primitives, both backends ----------------------------
     for &n in &ns {
         for &k in &ks {
-            let mut eng = Engine::new(f, EngineConfig::new(n).batched());
-            bench_session("sim", &mut eng, n, k, smoke, &mut json, &mut rows);
+            for &thr in &THREADS {
+                let suffix = thr_suffix(thr);
+                let mut eng =
+                    Engine::new(f, EngineConfig::new(n).batched().with_threads(thr));
+                bench_session(
+                    "sim", &suffix, &mut eng, n, k, smoke, &mut json, &mut rows, &mut measured,
+                );
 
-            let mut tcp =
-                TcpSession::spawn_local(f, TcpSessionConfig::new(n)).expect("spawn tcp session");
-            bench_session("tcp", &mut tcp, n, k, smoke, &mut json, &mut rows);
-            tcp.shutdown().expect("tcp shutdown");
+                let mut tcp =
+                    TcpSession::spawn_local(f, TcpSessionConfig::new(n).with_threads(thr))
+                        .expect("spawn tcp session");
+                bench_session(
+                    "tcp", &suffix, &mut tcp, n, k, smoke, &mut json, &mut rows, &mut measured,
+                );
+                tcp.shutdown().expect("tcp shutdown");
+            }
         }
     }
 
@@ -203,5 +284,46 @@ fn main() {
         )
     );
     json.finish().expect("write --json output");
+
+    // --- perf gate (CI tripwire) ------------------------------------------
+    // `--gate <baseline.json>`: for every `mul_vec_sim_*` / `share_batch_local_*`
+    // elems/s metric present in BOTH the baseline and this run, fail on a
+    // >3× regression. Metrics only one side has (different k sweep, new
+    // thr rows) and the provenance marker row are skipped.
+    if let Some(gi) = args.iter().position(|a| a == "--gate") {
+        let path = args.get(gi + 1).expect("--gate needs a baseline path");
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("--gate {path}: {e}"));
+        let base = Json::parse(&text).unwrap_or_else(|e| panic!("--gate {path}: {e:?}"));
+        let mut checked = 0usize;
+        let mut failures: Vec<String> = Vec::new();
+        for row in base.as_arr() {
+            let metric = row.get("metric").as_str().to_string();
+            let gated = (metric.starts_with("mul_vec_sim_")
+                || metric.starts_with("share_batch_local_"))
+                && metric.ends_with("_elems_per_s");
+            if !gated {
+                continue;
+            }
+            let Some((_, got)) = measured.iter().find(|(m, _)| *m == metric) else {
+                continue;
+            };
+            let want = row.get("value").as_f64();
+            checked += 1;
+            if *got < want / 3.0 {
+                failures.push(format!(
+                    "{metric}: measured {got:.1} elems/s < baseline {want:.1} / 3"
+                ));
+            }
+        }
+        if !failures.is_empty() {
+            for f in &failures {
+                eprintln!("[gate] REGRESSION {f}");
+            }
+            eprintln!("[gate] {} of {checked} gated metrics regressed >3×", failures.len());
+            std::process::exit(1);
+        }
+        println!("[gate] {checked} gated metrics within 3× of {path}");
+    }
     println!("mpc_throughput OK");
 }

@@ -14,6 +14,18 @@
 //! the short-quotient hardware division on this CPU) and was reverted; the
 //! single-reduction fold landed at ~12 ns. `barrett()` is kept as the
 //! documented experiment with a cross-check test.
+//!
+//! §Perf iteration 7 adds a **Montgomery domain** on top (DESIGN.md §Field
+//! kernel): fixed protocol constants — Vandermonde rows, Lagrange λ,
+//! memoized d⁻¹ — are stored once as `x·R mod p` with `R = 2^128`, and
+//! [`Field::mont_mul`] folds one *canonical* and one *Montgomery* operand
+//! through a two-round 64-bit-word REDC. The R·R⁻¹ factors cancel, so the
+//! result is the canonical product with **no `u128` division at all**; dot
+//! chains ([`Field::mont_mul_add`]) finish each term with two predictable
+//! conditional subtracts instead of a per-chunk `%`. Shares, wire bytes,
+//! openings and revealed values never enter the Montgomery domain, so the
+//! routed kernels stay bit-identical to the canonical path (property-pinned
+//! below — the `barrett()` lesson is to measure and pin, not assume).
 
 use crate::rng::Rng;
 
@@ -37,6 +49,11 @@ pub struct Field {
     /// 2^96 mod p and 2^64 mod p, for the single-reduction fold in `mul`.
     r96: u128,
     r64: u128,
+    /// R² = 2^256 mod p (R = 2^128), the Montgomery entry constant:
+    /// `to_mont(a) = mont_mul(a, r2) = a·R mod p`.
+    r2: u128,
+    /// `-p⁻¹ mod 2^64`, the word-by-word REDC multiplier (p is odd).
+    np0: u64,
     /// Barrett constant ⌊2^(k+64)/p⌋ with k = bit length of p, or 0 when
     /// Barrett is unsafe for this width (see `barrett`).
     mu: u128,
@@ -62,6 +79,24 @@ impl Field {
                 r128 -= p;
             }
         }
+        // R² = 2^256 mod p: continue the doubling chain from r128.
+        let mut r2 = r128;
+        for _ in 0..128 {
+            r2 += r2;
+            if r2 >= p {
+                r2 -= p;
+            }
+        }
+        // -p⁻¹ mod 2^64 by Newton iteration: x ← x·(2 − p·x) doubles the
+        // number of valid low bits per step; the seed x = p is correct to
+        // 3 bits (p² ≡ 1 mod 8 for odd p), so 6 steps reach ≥ 64.
+        let p_lo = p as u64;
+        let mut pinv = p_lo;
+        for _ in 0..6 {
+            pinv = pinv.wrapping_mul(2u64.wrapping_sub(p_lo.wrapping_mul(pinv)));
+        }
+        debug_assert_eq!(p_lo.wrapping_mul(pinv), 1);
+        let np0 = pinv.wrapping_neg();
         // residues of 2^64 and 2^96 for the single-reduction fold
         let r64 = ((u64::MAX as u128) + 1) % p;
         let mut r96 = r64;
@@ -94,7 +129,7 @@ impl Field {
         } else {
             0
         };
-        Field { p, r128, r96, r64, mu, k }
+        Field { p, r128, r96, r64, r2, np0, mu, k }
     }
 
     /// The paper's field.
@@ -197,6 +232,104 @@ impl Field {
         r
     }
 
+    /// Montgomery product **without the final conditional subtract**:
+    /// returns a value `< 2p` congruent to `a·b·R⁻¹ (mod p)`, `R = 2^128`.
+    ///
+    /// REDC width argument for `p < 2^74` (DESIGN.md §Field kernel): with
+    /// operands `< 2p < 2^75` the 150-bit product `T` is carried as three
+    /// 64-bit words `(t2, t1, t0)` with `t2 < 2^23`. Each of the two REDC
+    /// rounds adds `m·p` (`m < 2^64`, split as `m·p0 + m·p1·2^64` so no
+    /// term exceeds `u128`; the one possible carry out of `t + m·p0` is
+    /// recovered via `overflowing_add`) and shifts 64 bits out; after two
+    /// rounds the result is `T·2⁻¹²⁸ + (m₀ + m₁·2^64)·p·2⁻¹²⁸ < T/2^128 +
+    /// p ≤ 4p²/2^128 + p < 2p` (since `4p < 2^128`). So `< 2p` operands
+    /// are *closed* under this op — unreduced Montgomery values may chain.
+    #[inline]
+    pub fn mont_mul_unreduced(&self, a: u128, b: u128) -> u128 {
+        debug_assert!(a < 2 * self.p && b < 2 * self.p);
+        const M64: u128 = 0xFFFF_FFFF_FFFF_FFFF;
+        let (a0, a1) = (a & M64, a >> 64);
+        let (b0, b1) = (b & M64, b >> 64);
+        let ll = a0 * b0;
+        let mid = a0 * b1 + a1 * b0; // < 2^77 (high limbs < 2^11)
+        let hh = a1 * b1; // < 2^22
+        // T = hh·2^128 + mid·2^64 + ll as 64-bit words t2:t1:t0.
+        let t0 = ll & M64;
+        let t1full = mid + (ll >> 64); // < 2^78
+        let t1 = t1full & M64;
+        let t2 = hh + (t1full >> 64); // < 2^23
+        let (p0, p1) = (self.p & M64, self.p >> 64);
+        // REDC round 1: zero t0, shift 64 bits out.
+        let m0 = (t0 as u64).wrapping_mul(self.np0) as u128;
+        let (s0, ov0) = (m0 * p0).overflowing_add(t0);
+        debug_assert_eq!(s0 & M64, 0);
+        let c0 = (s0 >> 64) + ((ov0 as u128) << 64);
+        let u = (t2 << 64) + t1 + m0 * p1 + c0; // < 2^88
+        // REDC round 2 on u = u1:u0.
+        let (u0, u1) = (u & M64, u >> 64);
+        let m1 = (u0 as u64).wrapping_mul(self.np0) as u128;
+        let (s1, ov1) = (m1 * p0).overflowing_add(u0);
+        debug_assert_eq!(s1 & M64, 0);
+        let c1 = (s1 >> 64) + ((ov1 as u128) << 64);
+        u1 + m1 * p1 + c1
+    }
+
+    /// Montgomery product, canonical result: `a·b·R⁻¹ mod p` in `[0, p)`.
+    ///
+    /// The hot-path usage is the **one-operand trick**: with `a` canonical
+    /// and `b` a Montgomery-domain constant (`b = to_mont(x)`), the R
+    /// factors cancel and `mont_mul(a, b) = a·x mod p` — the canonical
+    /// product with no `u128` division anywhere.
+    #[inline]
+    pub fn mont_mul(&self, a: u128, b: u128) -> u128 {
+        let r = self.mont_mul_unreduced(a, b);
+        if r >= self.p {
+            r - self.p
+        } else {
+            r
+        }
+    }
+
+    /// Lift a canonical value into the Montgomery domain: `a·R mod p`.
+    #[inline]
+    pub fn to_mont(&self, a: u128) -> u128 {
+        self.mont_mul(a, self.r2)
+    }
+
+    /// Drop a Montgomery-domain value back to canonical: `a·R⁻¹ mod p`.
+    #[inline]
+    pub fn from_mont(&self, a: u128) -> u128 {
+        self.mont_mul(a, 1)
+    }
+
+    /// One deferred-reduction dot-product step: `acc + a·b_mont·R⁻¹ mod p`
+    /// with `acc` and the result canonical. The unreduced term is `< 2p`,
+    /// so `acc + term < 3p` and two *branch-free* conditional subtracts
+    /// restore canonical form — the λ-recombination and Vandermonde dealing
+    /// kernels chain this instead of paying a `u128 %` per chunk.
+    #[inline]
+    pub fn mont_mul_add(&self, acc: u128, a: u128, b_mont: u128) -> u128 {
+        debug_assert!(acc < self.p);
+        let mut s = acc + self.mont_mul_unreduced(a, b_mont);
+        s -= self.p * ((s >= self.p) as u128);
+        s -= self.p * ((s >= self.p) as u128);
+        s
+    }
+
+    /// Inner product of a canonical slice against a Montgomery-domain
+    /// constant table: `Σ aᵢ·xᵢ mod p` where `b_mont[i] = to_mont(xᵢ)`.
+    /// Division-free; bit-identical to [`Field::dot`] on the canonical
+    /// table (canonical form is unique).
+    #[inline]
+    pub fn dot_mont(&self, a: &[u128], b_mont: &[u128]) -> u128 {
+        debug_assert_eq!(a.len(), b_mont.len());
+        let mut acc = 0u128;
+        for (&x, &y) in a.iter().zip(b_mont) {
+            acc = self.mont_mul_add(acc, x, y);
+        }
+        acc
+    }
+
     // A `mul_small` fast path (direct `a·b % p` when both operands fit
     // 64 bits) used to sit here behind #[allow(dead_code)]. Removed: no
     // caller ever materialized — shares in the EXAMPLE_P walkthrough still
@@ -259,17 +392,36 @@ impl Field {
         }
     }
 
-    /// Σ over a slice, mod p.
+    /// Σ over a slice of canonical elements, mod p. Deferred reduction:
+    /// raw `u128` adds in chunks of 2^16 (each partial `< 2^16·2^74 =
+    /// 2^90`), one `%` per chunk — bit-identical to the per-term
+    /// `add` fold (pinned by `prop_sum_dot_match_naive_fold`).
     pub fn sum(&self, xs: &[u128]) -> u128 {
-        xs.iter().fold(0, |acc, &x| self.add(acc, x))
+        let mut acc = 0u128;
+        for chunk in xs.chunks(1 << 16) {
+            let part = chunk.iter().fold(0u128, |s, &x| s + x);
+            acc += part % self.p;
+            acc -= self.p * ((acc >= self.p) as u128);
+        }
+        acc
     }
 
-    /// Inner product Σ aᵢ·bᵢ mod p.
+    /// Inner product Σ aᵢ·bᵢ mod p over canonical slices. Routed through
+    /// the deferred-reduction kernel: chunks of 8 raw [`Field::mul_unreduced`]
+    /// folds (`< 2^122` per partial) pay one `%` per chunk instead of one
+    /// per term — the same kernel the Vandermonde dealing dot uses.
     pub fn dot(&self, a: &[u128], b: &[u128]) -> u128 {
         debug_assert_eq!(a.len(), b.len());
-        a.iter()
-            .zip(b)
-            .fold(0, |acc, (&x, &y)| self.add(acc, self.mul(x, y)))
+        let mut acc = 0u128;
+        for (ca, cb) in a.chunks(8).zip(b.chunks(8)) {
+            let mut part = 0u128;
+            for (&x, &y) in ca.iter().zip(cb) {
+                part += self.mul_unreduced(x, y);
+            }
+            acc += part % self.p;
+            acc -= self.p * ((acc >= self.p) as u128);
+        }
+        acc
     }
 }
 
@@ -425,5 +577,116 @@ mod tests {
             }
             assert_eq!(d, acc);
         });
+    }
+
+    #[test]
+    fn mont_roundtrip_on_both_builtin_primes() {
+        for p in [PAPER_P, EXAMPLE_P] {
+            let f = Field::new(p);
+            for a in [0u128, 1, 2, p - 1, p / 2, 65537 % p] {
+                let m = f.to_mont(a);
+                assert!(m < p, "to_mont must be canonical-range, p={p} a={a}");
+                assert_eq!(f.from_mont(m), a, "round trip, p={p} a={a}");
+            }
+            crate::rng::property(128, |rng| {
+                let a = f.rand(rng);
+                assert_eq!(f.from_mont(f.to_mont(a)), a, "p={p}");
+            });
+        }
+    }
+
+    #[test]
+    fn prop_mont_mul_matches_canonical_mul() {
+        // Cross-domain parity on both primes: full mont×mont round trip
+        // AND the one-operand trick the hot kernels rely on.
+        for p in [PAPER_P, EXAMPLE_P] {
+            let f = Field::new(p);
+            crate::rng::property(256, |rng| {
+                let a = f.rand(rng);
+                let b = f.rand(rng);
+                let want = f.mul(a, b);
+                assert_eq!(f.from_mont(f.mont_mul(f.to_mont(a), f.to_mont(b))), want, "p={p}");
+                assert_eq!(f.mont_mul(a, f.to_mont(b)), want, "one-operand trick, p={p}");
+            });
+        }
+    }
+
+    #[test]
+    fn prop_mont_unreduced_is_congruent_bounded_and_closed() {
+        // < 2p operands stay < 2p through the two-round REDC (the closure
+        // that lets unreduced Montgomery values chain), and every result
+        // is congruent to a·b·R⁻¹.
+        for p in [PAPER_P, EXAMPLE_P] {
+            let f = Field::new(p);
+            crate::rng::property(256, |rng| {
+                // draw in [0, 2p) to exercise the relaxed domain
+                let a = f.rand(rng) + p * rng.gen_range_u64(2) as u128;
+                let b = f.rand(rng) + p * rng.gen_range_u64(2) as u128;
+                let raw = f.mont_mul_unreduced(a, b);
+                assert!(raw < 2 * p, "closure, p={p}");
+                let want = f.mul(f.mul(a % p, b % p), f.inv(f.to_mont(1)));
+                assert_eq!(raw % p, want, "congruence, p={p}");
+            });
+        }
+    }
+
+    #[test]
+    fn prop_mont_pow_matches_canonical_pow() {
+        // Square-and-multiply entirely inside the Montgomery domain equals
+        // the canonical pow (mont parity for the `pow` composition).
+        for p in [PAPER_P, EXAMPLE_P] {
+            let f = Field::new(p);
+            crate::rng::property(64, |rng| {
+                let base = f.rand(rng);
+                let exp = rng.gen_bits(20);
+                let mut acc = f.to_mont(1);
+                let mut cur = f.to_mont(base);
+                let mut e = exp;
+                while e > 0 {
+                    if e & 1 == 1 {
+                        acc = f.mont_mul(acc, cur);
+                    }
+                    cur = f.mont_mul(cur, cur);
+                    e >>= 1;
+                }
+                assert_eq!(f.from_mont(acc), f.pow(base, exp), "p={p}");
+            });
+        }
+    }
+
+    #[test]
+    fn prop_mont_dot_matches_dot() {
+        for p in [PAPER_P, EXAMPLE_P] {
+            let f = Field::new(p);
+            crate::rng::property(64, |rng| {
+                let n = rng.gen_range_u64(16) as usize;
+                let xs: Vec<u128> = (0..n).map(|_| f.rand(rng)).collect();
+                let ys: Vec<u128> = (0..n).map(|_| f.rand(rng)).collect();
+                let ys_mont: Vec<u128> = ys.iter().map(|&y| f.to_mont(y)).collect();
+                assert_eq!(f.dot_mont(&xs, &ys_mont), f.dot(&xs, &ys), "p={p}");
+            });
+        }
+    }
+
+    #[test]
+    fn prop_sum_dot_match_naive_fold() {
+        // The deferred-reduction chunk kernels behind Field::sum/dot must be
+        // bit-identical to the per-term add(mul(..)) folds they replaced —
+        // lengths straddle the chunk width (8) to cover partial tails.
+        for p in [PAPER_P, EXAMPLE_P] {
+            let f = Field::new(p);
+            crate::rng::property(64, |rng| {
+                let n = rng.gen_range_u64(40) as usize;
+                let xs: Vec<u128> = (0..n).map(|_| f.rand(rng)).collect();
+                let ys: Vec<u128> = (0..n).map(|_| f.rand(rng)).collect();
+                let naive_sum = xs.iter().fold(0, |acc, &x| f.add(acc, x));
+                let naive_dot = xs
+                    .iter()
+                    .zip(&ys)
+                    .fold(0, |acc, (&x, &y)| f.add(acc, f.mul(x, y)));
+                assert_eq!(f.sum(&xs), naive_sum, "p={p} n={n}");
+                assert_eq!(f.dot(&xs, &ys), naive_dot, "p={p} n={n}");
+            });
+        }
     }
 }

@@ -66,6 +66,7 @@ pub mod json;
 pub mod kmeans;
 pub mod metrics;
 pub mod net;
+pub mod parallel;
 pub mod protocols;
 pub mod rng;
 pub mod runtime;

@@ -115,6 +115,9 @@ fn engine_config(args: &Args, n: usize) -> EngineConfig {
     if let Some(t) = args.get("threshold") {
         cfg.threshold = Some(t.parse().expect("bad threshold"));
     }
+    // Member-side worker-pool width; results are byte-identical for any
+    // value (DESIGN.md §Field kernel).
+    cfg.threads = args.usize_or("threads", 1);
     cfg
 }
 
@@ -123,6 +126,7 @@ fn tcp_config(args: &Args, n: usize) -> TcpSessionConfig {
     if let Some(t) = args.get("threshold") {
         cfg.threshold = Some(t.parse().expect("bad threshold"));
     }
+    cfg.threads = args.usize_or("threads", 1);
     // Simulation-only flags have no meaning on real sockets; say so rather
     // than silently ignoring them.
     if args.get("latency").is_some() {
@@ -1074,6 +1078,8 @@ fn main() -> Result<()> {
                  usage: spn-mpc <train|infer|serve|client|kmeans|tables|info> [flags]\n\
                  common flags: --dataset <mini|toy|nltcs|jester|baudio|bnetflix> --members N\n\
                  \t--latency MS --batched --learn-leaves --native-counts --rows N\n\
+                 \t--threads T (worker-pool width per party for the k-loops;\n\
+                 \t    byte-identical results for any T, default 1)\n\
                  \t--backend sim|tcp (train/infer/serve/kmeans; default sim = accounted\n\
                  \t    simulation, tcp = real member threads over loopback sockets\n\
                  \t    running the same protocol byte-identically)\n\

@@ -25,8 +25,11 @@
 //! is one syscall instead of one per element); the member loop keeps a
 //! dense `ShareStore` slab plus reusable frame/scratch buffers
 //! ([`read_frame_into`]) and deals through
-//! [`ShamirCtx::share_batch_into`], so steady-state exercises perform no
-//! per-element heap allocation. Dealer→manager frames for `input`/`mul`/
+//! [`ShamirCtx::share_batch_into_pooled`] (Montgomery-domain Vandermonde
+//! dot, coefficients pre-drawn serially, evaluation fanned over
+//! [`TcpSessionConfig::threads`] scoped workers), so steady-state
+//! exercises perform no per-element heap allocation and wire bytes are
+//! identical for every pool width. Dealer→manager frames for `input`/`mul`/
 //! `sq2pq` are **party-major** (`dealt[(j−1)·k + e]` = member j's
 //! sub-share of element e) to match the flat batch-dealing layout;
 //! divpub's Alice/Bob frames stay element-major because §3.4 interleaves
@@ -88,6 +91,7 @@ use super::wire::{
 };
 use super::{MemberLinkState, NetStats};
 use crate::field::Field;
+use crate::parallel::{Pool, MIN_CHUNK};
 use crate::protocols::divpub::{sample_r, tagged_r_many};
 use crate::protocols::engine::{reset_scratch, DataId, ShareStore};
 use crate::protocols::flight::FlightOp;
@@ -153,6 +157,12 @@ pub struct TcpSessionConfig {
     /// Deterministic member-side fault for chaos tests; `None` in
     /// production.
     pub fault: Option<MemberFault>,
+    /// Worker-pool width inside each member thread (DESIGN.md §Field
+    /// kernel): the k-loops of products, dealing evaluations and
+    /// λ-recombination chunk over up to this many scoped threads. `1`
+    /// (default) is strictly serial; wire bytes are identical for any
+    /// value (RNG draws are pre-drawn serially before fan-out).
+    pub threads: usize,
 }
 
 impl TcpSessionConfig {
@@ -167,7 +177,14 @@ impl TcpSessionConfig {
             seed: 0xC0FFEE,
             io_deadline_ms: 10_000,
             fault: None,
+            threads: 1,
         }
+    }
+
+    /// Set the member-side worker-pool width.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
     }
 
     /// The configured deadline as the `Option<Duration>` the socket API
@@ -240,6 +257,16 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
     let mut runs: Vec<(usize, usize)> = Vec::new(); // flight run bounds
     let mut tag_buf: Vec<u64> = Vec::new(); // Alice: a divpub's tag slice
     let mut mask_buf: Vec<u128> = Vec::new(); // Alice: its batched PRF masks
+    let mut coeffs: Vec<u128> = Vec::new(); // pooled dealing: pre-drawn coefficients
+
+    // Member-side worker pool (DESIGN.md §Field kernel). `pool_for` keeps
+    // small batches strictly serial so thread spawn never dominates; with
+    // `threads == 1` every path below degenerates to the seed's serial
+    // loops. RNG draws never happen inside a pooled closure — dealing
+    // pre-draws coefficients serially — so wire bytes are identical for
+    // any width.
+    let pool = Pool::new(cfg.threads);
+    let pool_for = move |work: usize| if work >= MIN_CHUNK { pool } else { Pool::serial() };
 
     let get = |store: &ShareStore, a: u128| -> Result<u128> {
         store.get(a as u64).ok_or_else(|| anyhow!("member {id} missing id {a}"))
@@ -297,7 +324,14 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                 if owner == id {
                     read_frame_into(&mut r, &mut body)?;
                     reset_scratch(&mut dealt, k * n);
-                    shamir.share_batch_into(&body.elems, deg, &mut rng, &mut dealt);
+                    shamir.share_batch_into_pooled(
+                        &body.elems,
+                        deg,
+                        &mut rng,
+                        &mut dealt,
+                        &mut coeffs,
+                        pool_for(k * n),
+                    );
                     write_frame_parts(&mut w, ex.exercise_id, id as u32, &dealt)?;
                     w.flush()?;
                 }
@@ -308,7 +342,7 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
             }
             OP_CONST => {
                 // [op, out, c] — constant polynomial share. Local.
-                store.put(e[1] as u64, e[2] % f.p);
+                store.put(e[1] as u64, f.reduce(e[2]));
             }
             OP_LIN => {
                 // [op, k, (out, c0, t, (c, a)×t)×k] — coefficients arrive
@@ -336,24 +370,65 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                 let outs = &e[2..2 + k];
                 let avs = &e[2 + k..2 + 2 * k];
                 let bvs = &e[2 + 2 * k..2 + 3 * k];
-                vals.clear();
-                for ei in 0..k {
-                    vals.push(f.mul(get(&store, avs[ei])?, get(&store, bvs[ei])?));
+                // Local products, chunked over the member pool. Missing
+                // ids surface as a `u128::MAX` sentinel (never a valid
+                // product: p < 2⁷⁴) checked after the fan-in, keeping the
+                // pooled closure infallible and the error path intact.
+                reset_scratch(&mut vals, k);
+                {
+                    let store = &store;
+                    pool_for(k).run_chunks(&mut vals, MIN_CHUNK, |start, chunk| {
+                        for (off, slot) in chunk.iter_mut().enumerate() {
+                            let ei = start + off;
+                            *slot = match (
+                                store.get(avs[ei] as u64),
+                                store.get(bvs[ei] as u64),
+                            ) {
+                                (Some(a), Some(b)) => f.mul(a, b),
+                                _ => u128::MAX,
+                            };
+                        }
+                    });
+                }
+                if let Some(ei) = vals.iter().position(|&v| v == u128::MAX) {
+                    bail!(
+                        "member {id} missing id {} or {} (mul element {ei})",
+                        avs[ei],
+                        bvs[ei]
+                    );
                 }
                 reset_scratch(&mut dealt, k * n);
-                shamir.share_batch_into(&vals, deg, &mut rng, &mut dealt);
+                shamir.share_batch_into_pooled(
+                    &vals,
+                    deg,
+                    &mut rng,
+                    &mut dealt,
+                    &mut coeffs,
+                    pool_for(k * n),
+                );
                 write_frame_parts(&mut w, ex.exercise_id, id as u32, &dealt)?;
                 w.flush()?;
                 // relay returns, per element, the n sub-shares destined to me
                 read_frame_into(&mut r, &mut body)?;
                 let sub = &body.elems;
-                let lambda = shamir.lambda();
-                for (ei, &o) in outs.iter().enumerate() {
-                    let mut acc = 0u128;
-                    for (i, &l) in lambda.iter().enumerate() {
-                        acc = f.add(acc, f.mul(l, sub[element_major(ei, n, i)]));
+                // λ-recombination in the Montgomery kernel: λ lives in the
+                // mont domain once (precomputed), each sub-share stays
+                // canonical, `mont_mul_add` yields the canonical λ·share
+                // product — division-free (DESIGN.md §Field kernel).
+                let lambda_mont = shamir.lambda_mont();
+                reset_scratch(&mut vals, k);
+                pool_for(k).run_chunks(&mut vals, MIN_CHUNK, |start, chunk| {
+                    for (off, slot) in chunk.iter_mut().enumerate() {
+                        let ei = start + off;
+                        let mut acc = 0u128;
+                        for (i, &lm) in lambda_mont.iter().enumerate() {
+                            acc = f.mont_mul_add(acc, sub[element_major(ei, n, i)], lm);
+                        }
+                        *slot = acc;
                     }
-                    store.put(o as u64, acc);
+                });
+                for (ei, &o) in outs.iter().enumerate() {
+                    store.put(o as u64, vals[ei]);
                 }
             }
             OP_DIVPUB | OP_DIVPUB_TAGGED => {
@@ -426,12 +501,17 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                 read_frame_into(&mut r, &mut body2)?; // my k [w] shares
                 // Phase 4 (local, corrected sign — DESIGN.md §4, the sign erratum):
                 // [v] = ([u] + [q] − [w]) · d⁻¹, with d⁻¹ memoized per
-                // divisor (Fermat inversion is ~74 squarings).
-                let dinv = *dinv_cache.entry(d).or_insert_with(|| f.inv(d % f.p));
+                // divisor (Fermat inversion is ~74 squarings) and held in
+                // the Montgomery domain so the per-element multiply is a
+                // division-free `mont_mul` with a canonical result.
+                let dinv_mont =
+                    *dinv_cache.entry(d).or_insert_with(|| f.to_mont(f.inv(f.reduce(d))));
                 for (ei, &o) in outs.iter().enumerate() {
                     let u_sh = get(&store, us[ei])?;
-                    let v =
-                        f.mul(f.sub(f.add(u_sh, body.elems[2 * ei + 1]), body2.elems[ei]), dinv);
+                    let v = f.mont_mul(
+                        f.sub(f.add(u_sh, body.elems[2 * ei + 1]), body2.elems[ei]),
+                        dinv_mont,
+                    );
                     store.put(o as u64, v);
                 }
             }
@@ -453,17 +533,26 @@ fn member_loop(addr: String, id: usize, field: Field, cfg: TcpSessionConfig) -> 
                 let outs = &e[2..2 + k];
                 read_frame_into(&mut r, &mut body)?;
                 reset_scratch(&mut dealt, k * n);
-                shamir.share_batch_into(&body.elems, deg, &mut rng, &mut dealt);
+                shamir.share_batch_into_pooled(
+                    &body.elems,
+                    deg,
+                    &mut rng,
+                    &mut dealt,
+                    &mut coeffs,
+                    pool_for(k * n),
+                );
                 write_frame_parts(&mut w, ex.exercise_id, id as u32, &dealt)?;
                 w.flush()?;
                 read_frame_into(&mut r, &mut body)?;
                 let sub = &body.elems;
                 for (ei, &o) in outs.iter().enumerate() {
+                    // Deferred reduction: n raw adds stay below u128 range
+                    // (n·p ≪ 2¹²⁸), one reduce at the end.
                     let mut acc = 0u128;
                     for i in 0..n {
-                        acc = f.add(acc, sub[element_major(ei, n, i)]);
+                        acc += sub[element_major(ei, n, i)];
                     }
-                    store.put(o as u64, acc);
+                    store.put(o as u64, f.reduce(acc));
                 }
             }
             op => bail!("member {id}: unknown opcode {op}"),
@@ -748,7 +837,7 @@ impl TcpSession {
     fn op_constant(&mut self, c: u128) -> Result<DataId> {
         let t0 = Instant::now();
         let id = self.alloc_vec(1)[0];
-        self.broadcast(&[OP_CONST, id.0 as u128, c % self.field.p])?;
+        self.broadcast(&[OP_CONST, id.0 as u128, self.field.reduce(c)])?;
         self.stats.virtual_time_s += t0.elapsed().as_secs_f64();
         Ok(id)
     }
@@ -1185,6 +1274,44 @@ mod tests {
         let got = wide(&mut tcp, &avals, &bvals);
         tcp.shutdown().unwrap();
         assert_eq!(got, want, "wide mul/divpub must be byte-identical across backends");
+        for i in 0..k {
+            assert_eq!(want[i], avals[i] * bvals[i]);
+        }
+    }
+
+    #[test]
+    fn threaded_tcp_members_match_serial_sim_byte_for_byte() {
+        // k large enough to clear the pool's MIN_CHUNK work floor, so the
+        // member-side fan-outs (products, dealing, λ-recombination)
+        // actually run parallel — and must still produce the exact bytes
+        // of the serial single-threaded sim engine.
+        let k = 1500usize;
+        let avals: Vec<u128> = (0..k as u128).map(|i| i * 3 + 1).collect();
+        let bvals: Vec<u128> = (0..k as u128).map(|i| i * 5 + 2).collect();
+
+        fn wide<S: MpcSession>(sess: &mut S, avals: &[u128], bvals: &[u128]) -> Vec<u128> {
+            let a = sess.input_vec(1, avals);
+            let b = sess.input_vec(2, bvals);
+            let pairs: Vec<_> = a.iter().copied().zip(b.iter().copied()).collect();
+            let prods = sess.mul_vec(&pairs);
+            let qs = sess.divpub_vec(&prods[..8], 256);
+            let locals: Vec<Vec<u128>> =
+                (0..sess.n()).map(|i| vec![(i + 1) as u128; 4]).collect();
+            let sq = sess.sq2pq_vec(&locals);
+            let mut ids = prods;
+            ids.extend(qs);
+            ids.extend(sq);
+            sess.reveal_vec(&ids)
+        }
+
+        let field = Field::paper();
+        let mut sim = Engine::new(field, EngineConfig::new(3));
+        let want = wide(&mut sim, &avals, &bvals);
+        let mut tcp =
+            TcpSession::spawn_local(field, TcpSessionConfig::new(3).with_threads(4)).unwrap();
+        let got = wide(&mut tcp, &avals, &bvals);
+        tcp.shutdown().unwrap();
+        assert_eq!(got, want, "threads=4 TCP members must match the serial sim bytes");
         for i in 0..k {
             assert_eq!(want[i], avals[i] * bvals[i]);
         }

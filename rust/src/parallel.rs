@@ -1,0 +1,173 @@
+//! Dependency-free scoped worker pool for the member compute plane
+//! (DESIGN.md §Field kernel).
+//!
+//! `std::thread::scope` only — no crates.io, no `unsafe`, no persistent
+//! threads. A [`Pool`] is a plain degree-of-parallelism knob (`Copy`, a
+//! `usize`): callers hand it a mutable slice and a chunk closure, and the
+//! pool splits the slice into disjoint `&mut` chunks with
+//! `split_at_mut`, one scoped thread per chunk. Below the work floor the
+//! call degrades to a plain serial loop, so `threads = 1` (the default
+//! everywhere) compiles to exactly the pre-pool code path.
+//!
+//! **Determinism contract:** the pool parallelizes *pure element-indexed
+//! compute* only. Anything order-sensitive — RNG draws above all — is
+//! pre-drawn serially in the pinned scalar order *before* fan-out (see
+//! `ShamirCtx::share_batch_into_pooled`), so draw-order byte-identity
+//! holds by construction, not by scheduling luck. Every writer owns a
+//! disjoint chunk of the output slab; there is no shared mutable state,
+//! no locks, and joins happen before the scope returns, so results are
+//! in place (and identical for any thread count) when the call returns.
+
+/// Minimum elements per spawned chunk. Spawning a scoped thread costs
+/// tens of microseconds; at ~10 ns/element a chunk must be ≥ ~1k elements
+/// before fan-out can win, so smaller jobs stay serial.
+pub const MIN_CHUNK: usize = 1024;
+
+/// A degree-of-parallelism handle. Cheap to copy; `threads == 1` means
+/// strictly serial (no scope, no spawn).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool running up to `threads` chunks concurrently (clamped ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// The serial pool: every `run_*` call is a plain loop.
+    pub fn serial() -> Self {
+        Pool { threads: 1 }
+    }
+
+    /// Configured degree of parallelism.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Split `out` into at most `self.threads` contiguous chunks of at
+    /// least `min_chunk` elements and run `f(start_index, chunk)` on each,
+    /// concurrently when more than one chunk results. `f` sees the chunk's
+    /// offset into the original slice so it can index side tables.
+    ///
+    /// Serial fallback (1 chunk) when the pool is serial, the slice is
+    /// shorter than `2·min_chunk`, or `min_chunk == 0` would not split.
+    pub fn run_chunks<T, F>(&self, out: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let len = out.len();
+        if len == 0 {
+            return;
+        }
+        let floor = min_chunk.max(1);
+        let want = (len / floor).min(self.threads);
+        if want <= 1 {
+            f(0, out);
+            return;
+        }
+        let chunk = len.div_ceil(want);
+        std::thread::scope(|s| {
+            let fr = &f;
+            let mut rem = out;
+            let mut start = 0;
+            while !rem.is_empty() {
+                let take = chunk.min(rem.len());
+                let (head, tail) = std::mem::take(&mut rem).split_at_mut(take);
+                s.spawn(move || fr(start, head));
+                start += take;
+                rem = tail;
+            }
+        });
+    }
+
+    /// Run `f(index, item)` over every item, one scoped thread per item
+    /// when the pool is parallel — the member-major fan-out (`n` members,
+    /// each owning its store and RNG, so items are naturally disjoint).
+    /// Serial pools run a plain loop in index order.
+    pub fn run_each<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        if self.threads <= 1 || items.len() <= 1 {
+            for (i, it) in items.iter_mut().enumerate() {
+                f(i, it);
+            }
+            return;
+        }
+        std::thread::scope(|s| {
+            let fr = &f;
+            for (i, it) in items.iter_mut().enumerate() {
+                s.spawn(move || fr(i, it));
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_and_parallel_chunks_agree() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = Pool::new(threads);
+            let mut out = vec![0u128; 10_000];
+            pool.run_chunks(&mut out, 16, |start, chunk| {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = (start + off) as u128 * 3 + 1;
+                }
+            });
+            let want: Vec<u128> = (0..10_000u128).map(|i| i * 3 + 1).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn small_slices_stay_serial_and_complete() {
+        let pool = Pool::new(8);
+        let mut out = vec![0u32; 100];
+        pool.run_chunks(&mut out, MIN_CHUNK, |start, chunk| {
+            assert_eq!(start, 0, "below the floor there must be one chunk");
+            assert_eq!(chunk.len(), 100);
+            for (i, s) in chunk.iter_mut().enumerate() {
+                *s = i as u32;
+            }
+        });
+        assert_eq!(out[99], 99);
+    }
+
+    #[test]
+    fn run_each_touches_every_item_once() {
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            let mut items = vec![0u64; 13];
+            pool.run_each(&mut items, |i, it| *it += i as u64 + 1);
+            let want: Vec<u64> = (0..13).map(|i| i + 1).collect();
+            assert_eq!(items, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_serial() {
+        let p = Pool::new(0);
+        assert!(p.is_serial());
+        assert_eq!(p.threads(), 1);
+        let mut out = vec![1u8; 4];
+        p.run_chunks(&mut out, 0, |_, c| c.iter_mut().for_each(|x| *x *= 2));
+        assert_eq!(out, vec![2u8; 4]);
+    }
+
+    #[test]
+    fn empty_slice_is_a_no_op() {
+        let mut out: Vec<u128> = Vec::new();
+        Pool::new(4).run_chunks(&mut out, 8, |_, _| panic!("no chunk expected"));
+    }
+}

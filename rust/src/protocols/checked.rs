@@ -43,7 +43,10 @@
 //! The wrapper is pure bookkeeping: it never touches shares, never adds
 //! traffic, and calls the inner backend exactly once per operation — so a
 //! checked run is *bit-identical* to an unchecked one (asserted by the
-//! cross-backend suites compiled with `--features checked-session`).
+//! cross-backend suites compiled with `--features checked-session`). That
+//! also makes it oblivious to the backends' internal Montgomery-domain
+//! kernels and worker pools (DESIGN.md §Field kernel): only canonical
+//! values cross the trait surface, for any `threads` setting.
 //! Violations panic with a message starting `CheckedSession violation:` —
 //! the negative tests in `tests/checked.rs` pin one panic per class.
 

@@ -22,6 +22,13 @@
 //! `z' ∉ [d, 2^ρ)`, which happens with probability ≤ `d/2^ρ` (ρ = 64 by
 //! default). There must also be no wraparound mod p: `u + 2^ρ < p` — with
 //! `u ≤ 2^62`, `ρ = 64` and `p ≈ 2^73.7` this always holds.
+//!
+//! **Domain boundaries** (DESIGN.md §Field kernel): both session backends
+//! run step 4's `· d⁻¹` as a Montgomery multiply against a memoized
+//! mont-domain `d⁻¹·R mod p`, which yields the *canonical* quotient share
+//! directly — every value this module's helpers see or produce (masks,
+//! `z'` openings, quotients) is canonical; nothing Montgomery-encoded ever
+//! reaches a wire frame or a reveal.
 
 use crate::rng::{Prng, Rng};
 

@@ -19,6 +19,7 @@ use std::collections::HashMap; // lint:allow(L003) — d⁻¹ memo, not a share 
 
 use crate::field::Field;
 use crate::net::{NetConfig, SimNet};
+use crate::parallel::Pool;
 use crate::rng::Prng;
 use crate::sharing::shamir::ShamirCtx;
 
@@ -69,6 +70,12 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Latency/bandwidth/framing model for the accounted network.
     pub net: NetConfig,
+    /// Worker-pool width for the member compute plane (DESIGN.md §Field
+    /// kernel): products, dealing evaluations and λ-recombination fan out
+    /// over up to this many scoped threads. `1` (the default) is strictly
+    /// serial; any value is byte-identical by construction (RNG draws are
+    /// pre-drawn in scalar order before fan-out).
+    pub threads: usize,
 }
 
 impl EngineConfig {
@@ -82,12 +89,19 @@ impl EngineConfig {
             rho_bits: 64,
             seed: 0xC0FFEE,
             net: NetConfig::default(),
+            threads: 1,
         }
     }
 
     /// Switch to the vectorized [`Schedule::Batched`] mode.
     pub fn batched(mut self) -> Self {
         self.schedule = Schedule::Batched;
+        self
+    }
+
+    /// Set the member compute plane's worker-pool width.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 }
@@ -199,10 +213,17 @@ pub struct Engine {
     /// Reusable buffer for Alice's batched tag-mask derivation
     /// ([`super::divpub::tagged_r_many`]) in tagged divpub.
     scratch_masks: Vec<u128>,
-    /// Memoized `d⁻¹ mod p` per public divisor: `Field::inv` is a full
-    /// Fermat pow (~74 squarings), and training/inference divide by the
-    /// same scale `d` thousands of times per session.
+    /// Memoized **Montgomery-domain** `d⁻¹·R mod p` per public divisor:
+    /// `Field::inv` is a full Fermat pow (~74 squarings), and training/
+    /// inference divide by the same scale `d` thousands of times per
+    /// session. Storing the mont image makes divpub's phase-4 multiply a
+    /// division-free `mont_mul` (DESIGN.md §Field kernel).
     dinv_cache: HashMap<u128, u128>, // lint:allow(L003)
+    /// Pre-drawn coefficient table scratch for the pooled dealing path
+    /// ([`ShamirCtx::share_batch_into_pooled`]).
+    scratch_coeffs: Vec<u128>,
+    /// The member compute plane's worker pool (`cfg.threads`).
+    pool: Pool,
     /// Open flight of the pipelined round engine (`None` = no flight in
     /// progress). See [`Engine::flight_submit`].
     flight: Option<FlightAcc>,
@@ -246,7 +267,19 @@ impl Engine {
             scratch_vals: Vec::new(),
             scratch_masks: Vec::new(),
             dinv_cache: HashMap::new(), // lint:allow(L003)
+            scratch_coeffs: Vec::new(),
+            pool: Pool::new(cfg.threads),
             flight: None,
+        }
+    }
+
+    /// The pool to use for a k-element fan-out: below the work floor the
+    /// serial pool avoids paying thread-spawn latency on small ops.
+    fn pool_for(&self, k: usize) -> Pool {
+        if k >= crate::parallel::MIN_CHUNK {
+            self.pool
+        } else {
+            Pool::serial()
         }
     }
 
@@ -365,13 +398,14 @@ impl Engine {
         let ids = self.alloc_vec(k);
         self.begin_exercise(k);
         let n = self.cfg.n;
+        let pool = self.pool_for(n * k);
         let mut dealt = std::mem::take(&mut self.scratch_dealt);
         reset_scratch(&mut dealt, n * k);
         {
-            let Engine { shamir, members, .. } = self;
+            let Engine { shamir, members, scratch_coeffs, .. } = self;
             let deg = shamir.t;
             let m = &mut members[owner - 1];
-            shamir.share_batch_into(values, deg, &mut m.rng, &mut dealt);
+            shamir.share_batch_into_pooled(values, deg, &mut m.rng, &mut dealt, scratch_coeffs, pool);
         }
         for (j, m) in self.members.iter_mut().enumerate() {
             for (e, &id) in ids.iter().enumerate() {
@@ -387,7 +421,7 @@ impl Engine {
     /// A public constant as a (constant-polynomial) shared value. Local.
     pub fn constant(&mut self, c: u128) -> DataId {
         let id = self.alloc();
-        let c = c % self.field.p;
+        let c = self.field.reduce(c);
         for m in &mut self.members {
             m.put(id, c);
         }
@@ -447,38 +481,64 @@ impl Engine {
         let f = self.field;
         // dealt[i·n·k + j·k + e]: sub-share of element e from dealer i to
         // member j (party-major slab per dealer).
+        let pool = self.pool_for(k);
         let mut dealt = std::mem::take(&mut self.scratch_dealt);
         let mut vals = std::mem::take(&mut self.scratch_vals);
         reset_scratch(&mut dealt, n * n * k);
         {
-            let Engine { shamir, members, .. } = self;
+            let Engine { shamir, members, scratch_coeffs, .. } = self;
             let deg = shamir.t;
             for (i, m) in members.iter_mut().enumerate() {
-                vals.clear();
-                for &(a, b) in pairs {
-                    vals.push(f.mul(m.get(a), m.get(b)));
+                // Local products fan out over the pool: the k-loop is pure
+                // indexed reads of this member's store into disjoint chunks
+                // of the vals scratch. RNG is untouched here.
+                let Member { id: mid, store, rng } = m;
+                let mid = *mid;
+                reset_scratch(&mut vals, k);
+                {
+                    let store = &*store;
+                    pool.run_chunks(&mut vals, crate::parallel::MIN_CHUNK, |start, chunk| {
+                        for (off, slot) in chunk.iter_mut().enumerate() {
+                            let (a, b) = pairs[start + off];
+                            let get = |x: DataId| {
+                                store
+                                    .get(x.0)
+                                    .unwrap_or_else(|| panic!("member {mid} missing {x:?}"))
+                            };
+                            *slot = f.mul(get(a), get(b));
+                        }
+                    });
                 }
-                shamir.share_batch_into(
+                // Dealing pre-draws all coefficients serially (scalar draw
+                // order), then fans the Vandermonde evaluations out.
+                shamir.share_batch_into_pooled(
                     &vals,
                     deg,
-                    &mut m.rng,
+                    rng,
                     &mut dealt[i * n * k..(i + 1) * n * k],
+                    scratch_coeffs,
+                    pool,
                 );
             }
         }
         self.mesh_exchange(k);
         {
             let Engine { shamir, members, .. } = self;
-            let lambda = shamir.lambda();
-            for (j, m) in members.iter_mut().enumerate() {
+            // λ-recombination in the Montgomery kernel: canonical sub-shares
+            // against the mont λ table — division-free, canonical (hence
+            // bit-identical) outputs. Member-major fan-out: each member owns
+            // its store, so the writes are disjoint by construction.
+            let lambda_mont = shamir.lambda_mont();
+            let dealt = &dealt[..];
+            pool.run_each(members, |j, m| {
                 for (e, &id) in ids.iter().enumerate() {
                     let mut acc = 0u128;
-                    for (i, &l) in lambda.iter().enumerate() {
-                        acc = f.add(acc, f.mul(l, dealt[i * n * k + j * k + e]));
+                    for (i, &lm) in lambda_mont.iter().enumerate() {
+                        acc = f.mont_mul_add(acc, dealt[i * n * k + j * k + e], lm);
                     }
                     m.put(id, acc);
                 }
-            }
+            });
         }
         self.scratch_dealt = dealt;
         self.scratch_vals = vals;
@@ -542,7 +602,10 @@ impl Engine {
         let bob = if n > 1 { 1 } else { 0 };
         let rho = self.cfg.rho_bits;
         let seed = self.cfg.seed;
-        let dinv = *self.dinv_cache.entry(d).or_insert_with(|| f.inv(d % f.p));
+        // Montgomery-domain d⁻¹ (see dinv_cache docs): phase 4's per-element
+        // multiply becomes a division-free mont_mul with canonical output.
+        let dinv_mont = *self.dinv_cache.entry(d).or_insert_with(|| f.to_mont(f.inv(f.reduce(d))));
+        let pool = self.pool_for(us.len());
 
         // Flat reusable scratch, element-major (e·n + j) segments for the
         // three dealt streams. Element-major keeps Alice's per-element draw
@@ -627,15 +690,19 @@ impl Engine {
         // Phase 4 (local): [v] = ([u] + [q] - [w]) · d^{-1} mod p.
         // NOTE the paper prints [u] - [q] + [w]; that has residue 2(u mod d)
         // mod d — the sign must be flipped for z ≡ 0 (mod d). See DESIGN.md
-        // §4 "erratum" and divpub::tests::paper_identity.
-        for (j, m) in self.members.iter_mut().enumerate() {
-            for (e, &u_id) in us.iter().enumerate() {
-                let v = f.mul(
-                    f.sub(f.add(m.get(u_id), q_sh[e * n + j]), w_sh[e * n + j]),
-                    dinv,
-                );
-                m.put(ids[e], v);
-            }
+        // §4 "erratum" and divpub::tests::paper_identity. Pure per-member
+        // compute (no RNG), so it fans out member-major over the pool.
+        {
+            let (q_sh, w_sh) = (&q_sh[..], &w_sh[..]);
+            pool.run_each(&mut self.members, |j, m| {
+                for (e, &u_id) in us.iter().enumerate() {
+                    let v = f.mont_mul(
+                        f.sub(f.add(m.get(u_id), q_sh[e * n + j]), w_sh[e * n + j]),
+                        dinv_mont,
+                    );
+                    m.put(ids[e], v);
+                }
+            });
         }
         self.scratch_dealt = scratch;
         self.scratch_vals = z_shares;
@@ -656,29 +723,38 @@ impl Engine {
         self.begin_exercise(k);
         let f = self.field;
         // Same flat party-major-per-dealer slab as mul_vec.
+        let pool = self.pool_for(k);
         let mut dealt = std::mem::take(&mut self.scratch_dealt);
         reset_scratch(&mut dealt, n * n * k);
         {
-            let Engine { shamir, members, .. } = self;
+            let Engine { shamir, members, scratch_coeffs, .. } = self;
             let deg = shamir.t;
             for (i, m) in members.iter_mut().enumerate() {
-                shamir.share_batch_into(
+                shamir.share_batch_into_pooled(
                     &local_values[i],
                     deg,
                     &mut m.rng,
                     &mut dealt[i * n * k..(i + 1) * n * k],
+                    scratch_coeffs,
+                    pool,
                 );
             }
         }
         self.mesh_exchange(k);
-        for (j, m) in self.members.iter_mut().enumerate() {
-            for (e, &id) in ids.iter().enumerate() {
-                let mut acc = 0u128;
-                for i in 0..n {
-                    acc = f.add(acc, dealt[i * n * k + j * k + e]);
+        {
+            // Deferred-reduction recombination: n ≤ 13 canonical terms
+            // (< 2^74 each) sum raw far below u128 overflow; one reduce
+            // restores the canonical (bit-identical) value.
+            let dealt = &dealt[..];
+            pool.run_each(&mut self.members, |j, m| {
+                for (e, &id) in ids.iter().enumerate() {
+                    let mut acc = 0u128;
+                    for i in 0..n {
+                        acc += dealt[i * n * k + j * k + e];
+                    }
+                    m.put(id, f.reduce(acc));
                 }
-                m.put(id, acc);
-            }
+            });
         }
         self.scratch_dealt = dealt;
         self.finish_exercise(k);
@@ -974,6 +1050,39 @@ mod tests {
         assert_eq!(d_fl.rounds, sim_flight_rounds(true, true));
         assert!(d_fl.rounds < d_seq.rounds, "{} !< {}", d_fl.rounds, d_seq.rounds);
         assert!(d_fl.virtual_time_s < d_seq.virtual_time_s);
+    }
+
+    #[test]
+    fn threads4_engine_is_bit_identical_to_serial() {
+        // The worker pool is an execution detail: a threads=4 engine must
+        // produce the same revealed values AND the same Tables 2–3
+        // accounting as the serial engine on the same seed, across every
+        // primitive — including k large enough to cross the fan-out floor.
+        let k = 1500;
+        let run = |threads: usize| {
+            let mut e =
+                Engine::new(Field::paper(), EngineConfig::new(3).batched().with_threads(threads));
+            let avals: Vec<u128> = (0..k as u128).map(|i| i * 3 + 1).collect();
+            let bvals: Vec<u128> = (0..k as u128).map(|i| i + 7).collect();
+            let a = e.input(1, &avals);
+            let b = e.input(2, &bvals);
+            let pairs: Vec<(DataId, DataId)> = a.iter().copied().zip(b).collect();
+            let prods = e.mul_vec(&pairs);
+            let divs = e.divpub_vec(&prods[..8], 256);
+            let locals: Vec<Vec<u128>> = (0..3).map(|i| vec![(i + 1) as u128; k]).collect();
+            let sq = e.sq2pq_inputs(&locals);
+            let mut out = e.reveal_vec(&prods);
+            out.extend(e.reveal_vec(&divs));
+            out.extend(e.reveal_vec(&sq[..4]));
+            (out, e.net.stats)
+        };
+        let (v1, s1) = run(1);
+        let (v4, s4) = run(4);
+        assert_eq!(v1, v4, "worker pool must not change any revealed value");
+        assert_eq!(s1.messages, s4.messages);
+        assert_eq!(s1.bytes, s4.bytes);
+        assert_eq!(s1.rounds, s4.rounds);
+        assert_eq!(s1.exercises, s4.exercises);
     }
 
     #[test]

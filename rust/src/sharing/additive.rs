@@ -20,7 +20,7 @@ pub fn additive_share<R: Rng + ?Sized>(f: &Field, x: u128, n: usize, rng: &mut R
         acc = f.add(acc, s);
         shares.push(s);
     }
-    shares.push(f.sub(x % f.p, acc));
+    shares.push(f.sub(f.reduce(x), acc));
     shares
 }
 

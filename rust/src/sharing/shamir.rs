@@ -11,6 +11,7 @@
 use crate::rng::Rng;
 
 use crate::field::Field;
+use crate::parallel::Pool;
 
 /// Shamir context for a fixed party set `1..=n` and degree `t`.
 #[derive(Clone, Debug)]
@@ -31,6 +32,15 @@ pub struct ShamirCtx {
     /// chain — the flat-buffer data plane's kernel (DESIGN.md §Data plane).
     /// Covers every legal polynomial degree (`deg ≤ 2t < n`).
     vander: Vec<u128>,
+    /// Montgomery-domain images of the two constant tables (`x·2^128 mod
+    /// p`), built once at context construction (DESIGN.md §Field kernel).
+    /// The dealing and reconstruction dot products pair *canonical*
+    /// coefficients/shares against these via `Field::mont_mul_add`, whose
+    /// R factors cancel — division-free kernels with canonical, hence
+    /// bit-identical, outputs. Shares themselves never live in the
+    /// Montgomery domain.
+    vander_mont: Vec<u128>,
+    lagrange0_mont: Vec<u128>,
 }
 
 impl ShamirCtx {
@@ -53,7 +63,9 @@ impl ShamirCtx {
                 pw = f.mul(pw, x);
             }
         }
-        ShamirCtx { f, n, t, lagrange0, vander }
+        let vander_mont: Vec<u128> = vander.iter().map(|&x| f.to_mont(x)).collect();
+        let lagrange0_mont: Vec<u128> = lagrange0.iter().map(|&x| f.to_mont(x)).collect();
+        ShamirCtx { f, n, t, lagrange0, vander, vander_mont, lagrange0_mont }
     }
 
     /// λ_j such that g(0) = Σ λ_j·g(x_j) for any g with deg g < |xs|.
@@ -105,7 +117,8 @@ impl ShamirCtx {
     /// so dealing performs **zero heap allocation per element** (one
     /// reusable coefficient buffer per call) — the §Perf iteration-3 hot
     /// path (EXPERIMENTS.md). The per-party dot product itself is the
-    /// deferred-reduction kernel of §Perf iteration 6 ([`Self::eval_row`]).
+    /// division-free Montgomery kernel of §Perf iteration 7
+    /// ([`Self::eval_row`]).
     pub fn share_batch_into<R: Rng + ?Sized>(
         &self,
         secrets: &[u128],
@@ -121,46 +134,82 @@ impl ShamirCtx {
         let mut coeffs: Vec<u128> = Vec::with_capacity(deg + 1);
         for (e, &secret) in secrets.iter().enumerate() {
             coeffs.clear();
-            coeffs.push(secret % f.p);
+            coeffs.push(f.reduce(secret));
             for _ in 0..deg {
                 coeffs.push(f.rand(rng));
             }
             for i in 0..n {
-                out[i * k + e] = Self::eval_row(f, &coeffs, &self.vander[i * n..i * n + deg + 1]);
+                out[i * k + e] =
+                    Self::eval_row(f, &coeffs, &self.vander_mont[i * n..i * n + deg + 1]);
             }
         }
     }
 
-    /// Coefficient/power dot product with **deferred modular reduction**
-    /// (§Perf iteration 6). `Field::dot` reduces every term (a `u128 %`
-    /// plus a compare-and-branch per coefficient); this kernel instead
-    /// walks *fixed-width* chunks of raw [`Field::mul_unreduced`] folds —
-    /// each fold is `< 2^119`, so a chunk of `CHUNK = 8` sums below
-    /// `2^122` with no possibility of `u128` overflow — and reduces once
-    /// per chunk, merging the partial into the running total with a
-    /// branch-free conditional subtract (`acc < 2p` after the add, and
-    /// `(acc >= p) as u128` is 0 or 1). The constant trip count of the
-    /// inner loop is what lets the compiler unroll/vectorize it.
+    /// [`ShamirCtx::share_batch_into`] with the polynomial evaluations
+    /// fanned out over a worker [`Pool`] — the parallel member compute
+    /// plane's dealing kernel (DESIGN.md §Field kernel).
     ///
-    /// Only *when* reduction happens changes, never the value mod p, and
-    /// the result is kept canonical (`< p`) at every chunk boundary — so
-    /// outputs are bit-identical to `f.dot` and the draw-order contract
-    /// above is untouched (`tests::batch_share_matches_scalar_draw_for_draw`
-    /// still pins the whole path against the legacy Horner reference).
-    #[inline]
-    fn eval_row(f: &Field, coeffs: &[u128], powers: &[u128]) -> u128 {
-        debug_assert_eq!(coeffs.len(), powers.len());
-        const CHUNK: usize = 8; // 8 · 2^119 < 2^122: headroom of 2^6 chunks
-        let mut acc = 0u128;
-        for (cs, ps) in coeffs.chunks(CHUNK).zip(powers.chunks(CHUNK)) {
-            let mut part = 0u128;
-            for (&c, &pw) in cs.iter().zip(ps) {
-                part += f.mul_unreduced(c, pw);
+    /// Draw-order byte-identity holds **by construction**: *all* `k·deg`
+    /// random coefficients are pre-drawn serially into `coeffs_scratch`
+    /// (one `deg+1` row per secret, in exactly the scalar order) *before*
+    /// any fan-out, and the parallel phase is pure indexed evaluation into
+    /// disjoint chunks of `out`. Serial pools take the same pre-draw path,
+    /// so `pool.threads() == 1` output, parallel output, and
+    /// [`ShamirCtx::share_batch_into`] output are all bit-identical
+    /// (pinned by `tests::pooled_batch_share_is_bit_identical`).
+    pub fn share_batch_into_pooled<R: Rng + ?Sized>(
+        &self,
+        secrets: &[u128],
+        deg: usize,
+        rng: &mut R,
+        out: &mut [u128],
+        coeffs_scratch: &mut Vec<u128>,
+        pool: Pool,
+    ) {
+        let f = self.f;
+        let n = self.n;
+        let k = secrets.len();
+        assert_eq!(out.len(), n * k, "out must hold n·k = {}·{} shares", n, k);
+        assert!(deg < n, "power table covers degrees < n (got deg={deg}, n={n})");
+        let w = deg + 1;
+        coeffs_scratch.clear();
+        coeffs_scratch.reserve(k * w);
+        for &secret in secrets {
+            coeffs_scratch.push(f.reduce(secret));
+            for _ in 0..deg {
+                coeffs_scratch.push(f.rand(rng));
             }
-            acc += part % f.p;
-            acc -= f.p * ((acc >= f.p) as u128);
         }
-        acc
+        let coeffs = &coeffs_scratch[..];
+        let vander_mont = &self.vander_mont[..];
+        pool.run_chunks(out, crate::parallel::MIN_CHUNK, |start, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let (i, e) = ((start + off) / k, (start + off) % k);
+                *slot =
+                    Self::eval_row(&f, &coeffs[e * w..(e + 1) * w], &vander_mont[i * n..i * n + w]);
+            }
+        });
+    }
+
+    /// Coefficient/power dot product in the **Montgomery kernel** (§Perf
+    /// iteration 7, DESIGN.md §Field kernel). Canonical coefficients are
+    /// paired against the Montgomery-domain power table, so each term is
+    /// one division-free two-round REDC and the running total is restored
+    /// to canonical form with two branch-free conditional subtracts —
+    /// no `u128 %` anywhere on the dealing hot path. (Iteration 6's
+    /// deferred-reduction chunk kernel, which this replaces, still paid
+    /// one `u128` division per 8-term chunk; for the common `deg+1 ∈ 2..8`
+    /// row widths that was one division per dealt share.)
+    ///
+    /// Only the *representation of the constants* changes, never the value
+    /// mod p: the result is canonical at every step, so outputs are
+    /// bit-identical to `f.dot` on the canonical table and the draw-order
+    /// contract above is untouched
+    /// (`tests::batch_share_matches_scalar_draw_for_draw` still pins the
+    /// whole path against the legacy Horner reference).
+    #[inline]
+    fn eval_row(f: &Field, coeffs: &[u128], powers_mont: &[u128]) -> u128 {
+        f.dot_mont(coeffs, powers_mont)
     }
 
     /// Deal one secret into `out` (`out[i-1]` = party i's share): the k = 1
@@ -178,9 +227,11 @@ impl ShamirCtx {
     }
 
     /// Reconstruct from all `n` shares (degree up to n-1, so also 2t).
+    /// Canonical shares against the Montgomery λ table: division-free and
+    /// bit-identical to the canonical dot (DESIGN.md §Field kernel).
     pub fn reconstruct(&self, shares: &[u128]) -> u128 {
         assert_eq!(shares.len(), self.n);
-        self.f.dot(&self.lagrange0, shares)
+        self.f.dot_mont(shares, &self.lagrange0_mont)
     }
 
     /// Reconstruct from a subset of `(party_id, share)` pairs; needs at
@@ -199,9 +250,16 @@ impl ShamirCtx {
         &self.lagrange0
     }
 
+    /// Montgomery-domain image of [`ShamirCtx::lambda`], for the engines'
+    /// division-free λ-recombination loops (`Field::mont_mul_add` against
+    /// canonical sub-shares).
+    pub fn lambda_mont(&self) -> &[u128] {
+        &self.lagrange0_mont
+    }
+
     /// A "public constant" share: the constant polynomial, share = c for all.
     pub fn const_share(&self, c: u128) -> u128 {
-        c % self.f.p
+        self.f.reduce(c)
     }
 }
 
@@ -353,16 +411,58 @@ mod tests {
 
     #[test]
     fn eval_row_matches_field_dot_exactly() {
-        // The deferred-reduction kernel is an optimization seam only: for
-        // every length (sub-chunk, exact chunk, multi-chunk) and random
-        // operands it must reproduce Field::dot bit-for-bit.
-        let f = Field::paper();
-        crate::rng::property(128, |rng| {
-            let len = 1 + rng.gen_range_u64(20) as usize;
-            let cs: Vec<u128> = (0..len).map(|_| f.rand(rng)).collect();
-            let ps: Vec<u128> = (0..len).map(|_| f.rand(rng)).collect();
-            assert_eq!(ShamirCtx::eval_row(&f, &cs, &ps), f.dot(&cs, &ps), "len={len}");
-        });
+        // The Montgomery kernel is an optimization seam only: for every
+        // length and random operands, canonical coefficients against the
+        // mont-lifted power table must reproduce the canonical Field::dot
+        // bit-for-bit (on both built-in primes).
+        for f in [Field::paper(), Field::new(EXAMPLE_P)] {
+            crate::rng::property(128, |rng| {
+                let len = 1 + rng.gen_range_u64(20) as usize;
+                let cs: Vec<u128> = (0..len).map(|_| f.rand(rng)).collect();
+                let ps: Vec<u128> = (0..len).map(|_| f.rand(rng)).collect();
+                let ps_mont: Vec<u128> = ps.iter().map(|&x| f.to_mont(x)).collect();
+                assert_eq!(ShamirCtx::eval_row(&f, &cs, &ps_mont), f.dot(&cs, &ps), "len={len}");
+            });
+        }
+    }
+
+    #[test]
+    fn pooled_batch_share_is_bit_identical() {
+        // share_batch_into_pooled ≡ share_batch_into for any thread count:
+        // same flat buffer AND same post-call RNG position (the pre-draw
+        // phase consumes exactly the scalar draw stream). Large k crosses
+        // the pool's fan-out floor so the parallel path really runs.
+        use crate::parallel::Pool;
+        for threads in [1usize, 4] {
+            crate::rng::property(12, |rng| {
+                let n = 2 + rng.gen_range_u64(6) as usize;
+                let c = ctx(n);
+                let k = 1500 + rng.gen_range_u64(600) as usize;
+                let deg = if rng.gen_bool(0.5) { c.t } else { 2 * c.t };
+                let secrets: Vec<u128> = (0..k).map(|_| c.f.rand(rng)).collect();
+
+                let mut r_serial = Prng::seed_from_u64(0x9001ED + n as u64);
+                let mut r_pooled = r_serial.clone();
+                let mut want = vec![0u128; n * k];
+                c.share_batch_into(&secrets, deg, &mut r_serial, &mut want);
+                let mut got = vec![0u128; n * k];
+                let mut scratch = Vec::new();
+                c.share_batch_into_pooled(
+                    &secrets,
+                    deg,
+                    &mut r_pooled,
+                    &mut got,
+                    &mut scratch,
+                    Pool::new(threads),
+                );
+                assert_eq!(got, want, "threads={threads} n={n} k={k} deg={deg}");
+                assert_eq!(
+                    r_serial.next_u64(),
+                    r_pooled.next_u64(),
+                    "pooled dealing must consume the same draw stream"
+                );
+            });
+        }
     }
 
     #[test]

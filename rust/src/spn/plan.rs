@@ -739,10 +739,21 @@ impl Evaluator {
             })
             .collect();
 
+        // Per-wave scratch: the offset tables are pure staging state, so
+        // they hoist across waves (clear, don't reallocate). The staged op
+        // vectors (`pairs`/`ops`/`us`/`tags`) are consumed by value by
+        // `FlightOp`, so those are instead pre-sized from the previous
+        // waves' high-water marks — after the first wave, staging performs
+        // no growth reallocation.
+        let mut mul_offs: Vec<usize> = Vec::new();
+        let mut lin_offs: Vec<usize> = Vec::new();
+        let mut div_offs: Vec<usize> = Vec::new();
+        let (mut pairs_hint, mut ops_hint, mut us_hint) = (0usize, 0usize, 0usize);
         for wave in &p.waves {
             // Pass 1 — stage every unit's multiplications, wave-unit order.
-            let mut mul_offs = Vec::with_capacity(wave.len());
-            let mut pairs: Vec<(DataId, DataId)> = Vec::new();
+            mul_offs.clear();
+            mul_offs.reserve(wave.len());
+            let mut pairs: Vec<(DataId, DataId)> = Vec::with_capacity(pairs_hint);
             for u in wave {
                 mul_offs.push(pairs.len());
                 match &p.steps[u.step] {
@@ -781,11 +792,13 @@ impl Evaluator {
             }
             // Every wave multiplies: product rounds by definition, sum
             // units on their (≥ 1 by validate()) weight×child edges.
+            pairs_hint = pairs_hint.max(pairs.len());
             let prods = sess.submit(FlightOp::Mul(pairs));
 
             // Pass 2 — stage the per-node lin sums of the wave's sum units.
-            let mut lin_offs = Vec::with_capacity(wave.len());
-            let mut ops: Vec<(i128, Vec<(i128, DataId)>)> = Vec::new();
+            lin_offs.clear();
+            lin_offs.reserve(wave.len());
+            let mut ops: Vec<(i128, Vec<(i128, DataId)>)> = Vec::with_capacity(ops_hint);
             for (ui, u) in wave.iter().enumerate() {
                 lin_offs.push(ops.len());
                 if let PlanStep::Sum { node_edges, .. } = &p.steps[u.step] {
@@ -801,13 +814,15 @@ impl Evaluator {
                     }
                 }
             }
+            ops_hint = ops_hint.max(ops.len());
             let sums = if ops.is_empty() { Vec::new() } else { sess.submit(FlightOp::Lin(ops)) };
 
             // Pass 3 — stage every unit's tagged truncation with the exact
             // sequential tag (`tag0 + b·m + qoff + element`).
-            let mut div_offs = Vec::with_capacity(wave.len());
-            let mut us: Vec<DataId> = Vec::new();
-            let mut tags: Vec<u64> = Vec::new();
+            div_offs.clear();
+            div_offs.reserve(wave.len());
+            let mut us: Vec<DataId> = Vec::with_capacity(us_hint);
+            let mut tags: Vec<u64> = Vec::with_capacity(us_hint);
             for (ui, u) in wave.iter().enumerate() {
                 div_offs.push(us.len());
                 match &p.steps[u.step] {
@@ -829,6 +844,7 @@ impl Evaluator {
                     }
                 }
             }
+            us_hint = us_hint.max(us.len());
             let outs = sess.submit(FlightOp::DivpubTagged { us, d: p.d, tags });
             sess.complete();
 

@@ -286,6 +286,61 @@ fn cross_backend_batched_inference_byte_identical() {
 }
 
 #[test]
+fn cross_backend_threads4_byte_identical() {
+    // The threads dimension (DESIGN.md §Field kernel): the same full
+    // train-then-infer pipeline at worker-pool width 4 — on the sim
+    // engine AND over TCP members — must reveal the exact bytes of the
+    // serial width-1 sim run. Wide inputs first so the pooled fan-outs
+    // actually clear their work floor at least once.
+    let st = mini_structure();
+    let n = 3;
+    let (counts, rows) = mini_shard_counts(&st, n);
+    let theta = learn::default_leaf_theta(&st);
+    let queries: Vec<Query> = vec![
+        Query { x: vec![0, 0], marg: vec![true, true] },
+        Query { x: vec![1, 1], marg: vec![false, false] },
+    ];
+    let wide: Vec<u128> = (0..3000u128).map(|i| i * 7 + 3).collect();
+
+    let mut all = Vec::new();
+    let mut run_sim = |threads: usize| {
+        let mut eng = wrap_engine(Engine::new(
+            Field::paper(),
+            EngineConfig::new(n).batched().with_threads(threads),
+        ));
+        let wides = eng.input_vec(1, &wide);
+        let pairs: Vec<_> = wides.iter().copied().zip(wides.iter().copied()).collect();
+        let sq = eng.mul_vec(&pairs);
+        eng.mark_outputs(&sq[..16]);
+        let mut revealed = eng.reveal_vec(&sq[..16]);
+        let (model, _) = train(&mut eng, &st, &counts, rows, &TrainConfig::default());
+        let (roots, _) = private_eval_batch(&mut eng, &st, &model, &queries, &theta);
+        revealed.extend(roots.iter().map(|&r| r as u128));
+        revealed
+    };
+    all.push(run_sim(1));
+    all.push(run_sim(4));
+
+    let mut sess = wrap(
+        TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n).with_threads(4))
+            .unwrap(),
+    );
+    let wides = sess.input_vec(1, &wide);
+    let pairs: Vec<_> = wides.iter().copied().zip(wides.iter().copied()).collect();
+    let sq = sess.mul_vec(&pairs);
+    sess.mark_outputs(&sq[..16]);
+    let mut revealed = sess.reveal_vec(&sq[..16]);
+    let (model, _) = train(&mut sess, &st, &counts, rows, &TrainConfig::default());
+    let (roots, _) = private_eval_batch(&mut sess, &st, &model, &queries, &theta);
+    revealed.extend(roots.iter().map(|&r| r as u128));
+    unwrap_session(sess).shutdown().unwrap();
+    all.push(revealed);
+
+    assert_eq!(all[0], all[1], "threads=4 sim must match serial sim byte-for-byte");
+    assert_eq!(all[0], all[2], "threads=4 TCP must match serial sim byte-for-byte");
+}
+
+#[test]
 fn cross_backend_conditional_byte_identical() {
     // Only batched marginals were cross-backend pinned until now; the
     // conditional Pr(x | e) — two evaluations coalesced into one batch

@@ -296,3 +296,46 @@ fn pipelined_tcp_byte_identical_to_sim_and_fewer_round_trips() {
         );
     }
 }
+
+#[test]
+fn pipelined_eval_is_thread_count_invariant() {
+    // The worker-pool dimension (DESIGN.md §Field kernel) composes with
+    // the flight scheduler: the same pipelined batch evaluation at
+    // worker-pool width 4 — sim engine and TCP members — reveals the
+    // exact bytes of the serial width-1 sim run, with identical
+    // accounting.
+    for st in both_structures() {
+        let plan = plan_for(&st);
+        let qs = queries_for(st.num_vars);
+        let w = weights_for(&st);
+        let n = 3;
+
+        let mut outs = Vec::new();
+        for threads in [1usize, 4] {
+            let mut sim = wrap_engine(Engine::new(
+                Field::paper(),
+                EngineConfig::new(n).batched().with_threads(threads),
+            ));
+            let wsim = sim.input_vec(1, &w);
+            outs.push(Evaluator::new(plan.clone()).eval_batch(&mut sim, &qs, &wsim, None));
+        }
+        let mut tp = wrap(
+            TcpSession::spawn_local(Field::paper(), TcpSessionConfig::new(n).with_threads(4))
+                .unwrap(),
+        );
+        let wtp = tp.input_vec(1, &w);
+        let (tcp_roots, _) = Evaluator::new(plan.clone()).eval_batch(&mut tp, &qs, &wtp, None);
+        unwrap_session(tp).shutdown().unwrap();
+
+        let (r1, s1) = &outs[0];
+        let (r4, s4) = &outs[1];
+        assert_eq!(r4, r1, "{}: threads=4 sim roots must match serial", st.name);
+        assert_eq!(
+            (s4.messages, s4.bytes, s4.rounds, s4.exercises),
+            (s1.messages, s1.bytes, s1.rounds, s1.exercises),
+            "{}: pool width must not change accounting",
+            st.name
+        );
+        assert_eq!(&tcp_roots, r1, "{}: threads=4 TCP roots must match serial sim", st.name);
+    }
+}

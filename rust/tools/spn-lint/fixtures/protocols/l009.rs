@@ -1,0 +1,29 @@
+// L009 fixture: raw `% p` reduction in a protocols/ file. A comment
+// mentioning x % f.p must not fire (comment-line skip), and neither must
+// divisor math.
+
+pub fn leaky_reduce(x: u128, f: &Field) -> u128 {
+    x % f.p
+}
+
+pub fn sanctioned_reduce(x: u128, f: &Field) -> u128 {
+    // lint:allow(L009) — decoy: the line-above suppression must hold
+    x % f.p
+}
+
+pub fn divisor_math_is_exempt(z: u128, d: u128) -> u128 {
+    z % d
+}
+
+pub fn other_moduli_are_exempt(i: usize, n: usize, k: usize) -> usize {
+    (i % n) + (i % k.min(7))
+}
+
+#[cfg(test)]
+mod tests {
+    // Test modules exercise forbidden shapes on purpose: a raw reduction
+    // below must not fire.
+    pub fn reference(x: u128, f: &Field) -> u128 {
+        x % f.p
+    }
+}

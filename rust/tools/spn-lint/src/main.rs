@@ -45,6 +45,13 @@
 //!   with no jitter and no cap — every wait goes through
 //!   `backoff::pause` or a `Backoff` schedule so retry storms stay
 //!   deterministic and bounded (DESIGN.md §Fleet).
+//! * **L009** — raw `% p` modular reduction (`% p`, `% f.p`, `% self.p`,
+//!   …) in `protocols/` or `sharing/` outside `field.rs`: every reduction
+//!   routes through the `Field` kernel (`reduce`/`mul`/`dot`/the
+//!   Montgomery entry points) so the deferred-reduction and
+//!   Montgomery-domain invariants live in exactly one file (DESIGN.md
+//!   §Field kernel). Divisor math like `% d` is untouched — the lint only
+//!   matches a modulus token that *is* `p` or ends in `.p`.
 //!
 //! Suppression: `lint:allow(L00X)` on the flagged line or the line
 //! immediately above. Lines after a file's literal `#[cfg(test)]` marker
@@ -170,6 +177,27 @@ fn parse_digits_at(s: &str) -> Option<u64> {
     digits.parse().ok()
 }
 
+/// L009 matcher: a binary ` % ` whose right operand token is the field
+/// modulus — exactly `p`, or a path ending in `.p` (`f.p`, `self.p`,
+/// `c.f.p`). Divisors (`% d`), counters (`% n`, `% k.min(..)`) and every
+/// other modulus shape pass. The codebase is rustfmt'd, so binary `%`
+/// always appears space-padded; `%` in strings/format args never is
+/// followed by ` `.
+fn raw_mod_p(line: &str) -> bool {
+    let mut rest = line;
+    while let Some(idx) = rest.find(" % ") {
+        rest = &rest[idx + 3..];
+        let tok: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_' || *c == '.')
+            .collect();
+        if tok == "p" || tok.ends_with(".p") {
+            return true;
+        }
+    }
+    false
+}
+
 /// Scan one file: emit per-line findings and collect the cross-file
 /// L005/L006 raw material.
 fn scan_file(
@@ -193,6 +221,8 @@ fn scan_file(
         || disp.contains("net/tcp");
     let l004_applies = disp.ends_with("net/serve.rs") || disp.ends_with("net/fleet.rs");
     let l008_applies = disp.contains("net/") && !disp.ends_with("net/backoff.rs");
+    let l009_applies = (disp.contains("protocols/") || disp.contains("sharing/"))
+        && !disp.ends_with("field.rs");
     let l007_allowed = disp.ends_with("spn/plan.rs");
     let l005_file = disp.ends_with("net/tcp.rs")
         || disp.ends_with("net/tcp_session.rs")
@@ -336,6 +366,18 @@ fn scan_file(
                     .to_string(),
             });
         }
+        if l009_applies && raw_mod_p(line) && !allowed("L009") {
+            findings.push(Finding {
+                file: disp.to_string(),
+                line: lineno,
+                lint: "L009",
+                msg: "raw `% p` reduction outside the field kernel — route through \
+                      Field (reduce / mul / dot / the Montgomery entry points, \
+                      DESIGN.md §Field kernel) so reduction invariants live in one \
+                      file; divisor math (`% d`) is exempt"
+                    .to_string(),
+            });
+        }
     }
 }
 
@@ -474,6 +516,7 @@ fn self_check(root: &Path) -> ExitCode {
         ("L006", "l006.rs"),
         ("L007", "l007.rs"),
         ("L008", "net/fleet.rs"),
+        ("L009", "protocols/l009.rs"),
     ];
     for (lint, file) in expect {
         if !findings.iter().any(|f| f.lint == *lint && f.file.ends_with(file)) {
@@ -509,6 +552,15 @@ fn self_check(root: &Path) -> ExitCode {
         eprintln!("self-check FAIL: expected exactly 1 L008 finding, got {l008}");
         failed = true;
     }
+    // fixtures/protocols/l009.rs carries one firing `% f.p` plus a
+    // suppressed decoy, a comment decoy, a `% d` divisor decoy and a
+    // test-module line; exactly one L009 total pins the token matcher,
+    // the suppression and the field.rs/test-module carve-outs.
+    let l009 = findings.iter().filter(|f| f.lint == "L009").count();
+    if l009 != 1 {
+        eprintln!("self-check FAIL: expected exactly 1 L009 finding, got {l009}");
+        failed = true;
+    }
     if failed {
         print_findings(&findings);
         eprintln!("spn-lint --self-check: FAILED ({nfiles} fixture files)");
@@ -541,7 +593,7 @@ fn main() -> ExitCode {
             "--help" | "-h" => {
                 println!(
                     "spn-lint [--root DIR] [--self-check]\n\
-                     lints DIR/rust/src (L001–L008) against DIR/DESIGN.md;\n\
+                     lints DIR/rust/src (L001–L009) against DIR/DESIGN.md;\n\
                      --self-check runs the linter over its committed fixtures instead"
                 );
                 return ExitCode::SUCCESS;
